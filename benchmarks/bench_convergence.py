@@ -1,0 +1,23 @@
+"""Fig. 9: OPC timeline (fixed-size resample, order preserved) showing the
+agent converging toward higher OPC across its episodes."""
+import numpy as np
+
+from benchmarks.common import apps, cached_episode, emit
+from repro.nmp.stats import opc_timeline
+
+
+def run():
+    for app in apps():
+        r = cached_episode(app, "bnmp", "aimm")
+        # concatenate episode timelines (continual learning across episodes)
+        tl = np.concatenate([opc_timeline(res, samples=16)
+                             for res in r["all"]])
+        first, last = tl[:16].mean(), tl[-16:].mean()
+        emit(f"fig9/{app}/opc_start", r["us"], round(float(first), 4))
+        emit(f"fig9/{app}/opc_end", r["us"], round(float(last), 4))
+        emit(f"fig9/{app}/convergence_gain", r["us"],
+             round(float(last / max(first, 1e-9)), 4))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Fig. 14: dynamic energy — AIMM hardware vs network vs memory breakdown;
+the paper's claim: AIMM-module energy is insignificant vs network energy."""
+from benchmarks.common import apps, cached_episode, emit
+from repro.nmp.stats import summarize
+
+
+def run():
+    for app in apps():
+        base = summarize(cached_episode(app, "bnmp", "none")["res"])
+        r = cached_episode(app, "bnmp", "aimm")
+        s = summarize(r["res"])
+        bd = s["energy_breakdown"]
+        total = sum(bd.values())
+        emit(f"fig14/{app}/aimm_hw_frac", r["us"],
+             round(bd["aimm_hw"] / total, 4))
+        emit(f"fig14/{app}/network_frac", r["us"],
+             round(bd["network"] / total, 4))
+        emit(f"fig14/{app}/memory_frac", r["us"],
+             round(bd["memory"] / total, 4))
+        emit(f"fig14/{app}/energy_vs_baseline", r["us"],
+             round(s["energy_nj"] / max(base["energy_nj"], 1e-9), 4))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Fig. 6: execution time per app, techniques {BNMP, LDB, PEI} x mappers
+{B(aseline), TOM, AIMM}, normalized to each technique's baseline."""
+from benchmarks.common import apps, cached_episode, emit
+from repro.nmp.stats import summarize
+
+
+def run():
+    for app in apps():
+        for tech in ("bnmp", "ldb", "pei"):
+            base = cached_episode(app, tech, "none")
+            bcyc = summarize(base["res"])["cycles"]
+            emit(f"fig6/{app}/{tech}/B", base["us"], 1.0)
+            for mapper in ("tom", "aimm"):
+                r = cached_episode(app, tech, mapper)
+                cyc = summarize(r["res"])["cycles"]
+                emit(f"fig6/{app}/{tech}/{mapper.upper()}", r["us"],
+                     round(cyc / bcyc, 4))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,18 @@
+"""Fig. 7: average hop count and computation utilization, TOM vs AIMM."""
+from benchmarks.common import apps, cached_episode, emit
+from repro.nmp.stats import summarize
+
+
+def run():
+    for app in apps():
+        for mapper in ("none", "tom", "aimm"):
+            r = cached_episode(app, "bnmp", mapper)
+            s = summarize(r["res"])
+            tag = {"none": "B", "tom": "TOM", "aimm": "AIMM"}[mapper]
+            emit(f"fig7/{app}/{tag}/hops", r["us"], round(s["mean_hops"], 3))
+            emit(f"fig7/{app}/{tag}/util", r["us"],
+                 round(s["compute_util"], 4))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Fig. 11: 8x8 memory-cube mesh — AIMM adapts to the larger network without
+retraining hyperparameters (execution time normalized to 8x8 BNMP)."""
+from benchmarks.common import apps, cached_episode, emit
+from repro.nmp import NMPConfig
+from repro.nmp.stats import summarize
+
+CFG8 = NMPConfig(mesh_x=8, mesh_y=8)
+
+
+def run():
+    for app in apps():
+        base = cached_episode(app, "bnmp", "none", cfg=CFG8)
+        bcyc = summarize(base["res"])["cycles"]
+        r = cached_episode(app, "bnmp", "aimm", cfg=CFG8)
+        cyc = summarize(r["res"])["cycles"]
+        emit(f"fig11/{app}/8x8/AIMM_norm_time", r["us"],
+             round(cyc / bcyc, 4))
+
+
+if __name__ == "__main__":
+    run()

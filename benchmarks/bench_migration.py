@@ -1,0 +1,18 @@
+"""Fig. 10: migration stats — fraction of pages migrated and fraction of
+accesses landing on migrated pages (AIMM)."""
+from benchmarks.common import apps, cached_episode, emit
+from repro.nmp.stats import summarize
+
+
+def run():
+    for app in apps():
+        r = cached_episode(app, "bnmp", "aimm")
+        s = summarize(r["res"])
+        emit(f"fig10/{app}/frac_pages_migrated", r["us"],
+             round(s["frac_pages_migrated"], 4))
+        emit(f"fig10/{app}/frac_access_on_migrated", r["us"],
+             round(s["frac_access_migrated"], 4))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,18 @@
+"""Fig. 8: normalized memory operations-per-cycle (OPC) per app/technique."""
+from benchmarks.common import apps, cached_episode, emit
+from repro.nmp.stats import summarize
+
+
+def run():
+    for app in apps():
+        for tech in ("bnmp", "ldb", "pei"):
+            base = summarize(cached_episode(app, tech, "none")["res"])["opc"]
+            for mapper in ("tom", "aimm"):
+                r = cached_episode(app, tech, mapper)
+                opc = summarize(r["res"])["opc"]
+                emit(f"fig8/{app}/{tech}/{mapper.upper()}", r["us"],
+                     round(opc / max(base, 1e-9), 4))
+
+
+if __name__ == "__main__":
+    run()

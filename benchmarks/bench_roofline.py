@@ -1,0 +1,35 @@
+"""§Roofline summary from the dry-run artifact (results/dryrun.json).
+
+Reports, per compiled (arch x shape x mesh) cell: the three roofline terms,
+the dominant bottleneck, and the roofline fraction. Requires the dry-run to
+have been produced (python -m repro.launch.dryrun --all)."""
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def run():
+    if not os.path.exists(DRYRUN):
+        emit("roofline/missing", 0.0, f"run repro.launch.dryrun first")
+        return
+    with open(DRYRUN) as f:
+        data = json.load(f)
+    for key, v in sorted(data.items()):
+        if v.get("status") != "ok":
+            continue
+        r = v["roofline"]
+        name = key.replace("|", "/")
+        us = v.get("compile_s", 0.0) * 1e6
+        emit(f"roofline/{name}/dominant", us, r["dominant"])
+        emit(f"roofline/{name}/step_ms", us,
+             round(max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3,
+                   3))
+        emit(f"roofline/{name}/fraction", us,
+             round(r["roofline_fraction"], 4))
+
+
+if __name__ == "__main__":
+    run()

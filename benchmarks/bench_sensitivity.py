@@ -1,0 +1,30 @@
+"""Fig. 13: sensitivity to page-info-cache entries and NMP-op table size
+(representative apps PR, SPMV per the paper)."""
+import dataclasses
+
+from benchmarks.common import Timer, cached_episode, emit, EPISODES, N_OPS
+from repro.nmp import NMPConfig, make_trace, run_program
+from repro.nmp.stats import summarize
+
+
+def run():
+    for app in ("PR", "SPMV"):
+        tr = make_trace(app, n_ops=N_OPS)
+        for entries in (32, 64, 128, 256):
+            cfg = NMPConfig(page_cache_entries=entries)
+            with Timer() as t:
+                results = run_program(tr, cfg, "bnmp", "aimm",
+                                      episodes=EPISODES, seed=0)
+            emit(f"fig13/{app}/page_cache_E{entries}", t.us,
+                 round(summarize(results[-1])["cycles"], 1))
+        for table in (32, 64, 128, 512):
+            cfg = NMPConfig(nmp_table_size=table)
+            with Timer() as t:
+                results = run_program(tr, cfg, "bnmp", "aimm",
+                                      episodes=EPISODES, seed=0)
+            emit(f"fig13/{app}/nmp_table_E{table}", t.us,
+                 round(summarize(results[-1])["cycles"], 1))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,18 @@
+"""Fig. 5: workload analysis — page-access classes, active pages, affinity."""
+from benchmarks.common import N_OPS, Timer, emit
+from repro.nmp.traces import APPS, analyze, make_trace
+
+
+def run():
+    for app in APPS:
+        with Timer() as t:
+            tr = make_trace(app, n_ops=N_OPS)
+            a = analyze(tr)
+        emit(f"fig5/{app}/heavy_frac", t.us, round(a["classes"]["heavy"], 4))
+        emit(f"fig5/{app}/active_pages", t.us,
+             round(a["active_pages_mean"], 1))
+        emit(f"fig5/{app}/radix_mean", t.us, round(a["radix_mean"], 2))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Shared benchmark infrastructure.
+
+Every benchmark prints `name,us_per_call,derived` CSV rows (one per paper
+table/figure datapoint). `us_per_call` is the wall time of the underlying
+simulator/compile call; `derived` is the paper-comparable quantity.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+# paper protocol: 5 episodes, DNN persisted; FULL widens the app set
+N_OPS = 16384
+EPISODES = 5
+APPS_FAST = ("BP", "KM", "PR", "RBM", "SPMV") if not FULL else None
+
+
+def apps():
+    from repro.nmp.traces import APPS
+    return APPS if FULL else APPS_FAST
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.time() - self.t0) * 1e6
+
+
+_EPISODE_CACHE: dict = {}
+
+
+def cached_episode(app: str, technique: str, mapper: str, **kw):
+    """Memoized (app, technique, mapper) runs shared across benchmarks."""
+    from repro.nmp import NMPConfig, make_trace, run_episode, run_program
+    key = (app, technique, mapper, N_OPS, tuple(sorted(kw.items())))
+    if key in _EPISODE_CACHE:
+        return _EPISODE_CACHE[key]
+    cfg = kw.pop("cfg", NMPConfig())
+    tr = make_trace(app, n_ops=N_OPS)
+    with Timer() as t:
+        if mapper == "aimm":
+            results = run_program(tr, cfg, technique=technique, mapper="aimm",
+                                  episodes=EPISODES, seed=0, **kw)
+            # converged behaviour: greedy evaluation episode with the trained
+            # DNN (paper's steady-state claim; exploration off)
+            res = run_episode(tr, cfg, technique=technique, mapper="aimm",
+                              agent=results[-1].agent, explore=False, **kw)
+            res_all = results + [res]
+        else:
+            res = run_episode(tr, cfg, technique=technique, mapper=mapper,
+                              **kw)
+            res_all = [res]
+    out = {"res": res, "all": res_all, "us": t.us, "trace": tr}
+    _EPISODE_CACHE[key] = out
+    return out

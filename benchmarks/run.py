@@ -1,0 +1,44 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Env:
+  BENCH_FULL=1   paper-scale traces/episodes (slower)
+  BENCH_ONLY=fig6,fig9  run a subset
+"""
+import os
+import sys
+import traceback
+
+MODULES = [
+    ("fig5_workloads", "benchmarks.bench_workloads"),
+    ("fig6_execution_time", "benchmarks.bench_execution_time"),
+    ("fig7_hops_util", "benchmarks.bench_hopcount_util"),
+    ("fig8_opc", "benchmarks.bench_opc"),
+    ("fig9_convergence", "benchmarks.bench_convergence"),
+    ("fig10_migration", "benchmarks.bench_migration"),
+    ("fig11_mesh_scaling", "benchmarks.bench_mesh_scaling"),
+    ("fig12_multiprogram", "benchmarks.bench_multiprogram"),
+    ("fig13_sensitivity", "benchmarks.bench_sensitivity"),
+    ("fig14_energy", "benchmarks.bench_energy"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    only = os.environ.get("BENCH_ONLY")
+    wanted = only.split(",") if only else None
+    print("name,us_per_call,derived")
+    for tag, mod_name in MODULES:
+        if wanted and not any(w in tag for w in wanted):
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            mod.run()
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{tag}/ERROR,0,{type(e).__name__}", flush=True)
+
+
+if __name__ == '__main__':
+    main()

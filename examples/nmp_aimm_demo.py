@@ -1,0 +1,44 @@
+"""Paper reproduction demo: Fig. 6-style table for one or all apps —
+techniques {BNMP, LDB, PEI} x mappers {Baseline, TOM, AIMM}.
+
+    PYTHONPATH=src python examples/nmp_aimm_demo.py [--app SPMV | --all]
+"""
+import argparse
+
+from repro.nmp import NMPConfig, make_trace, run_episode, run_program
+from repro.nmp.stats import summarize
+from repro.nmp.traces import APPS
+
+
+def row(app, cfg, n_ops, episodes):
+    tr = make_trace(app, n_ops=n_ops)
+    out = {}
+    for tech in ("bnmp", "ldb", "pei"):
+        base = summarize(run_episode(tr, cfg, tech, "none"))["cycles"]
+        tom = summarize(run_episode(tr, cfg, tech, "tom"))["cycles"]
+        aimm = summarize(run_program(tr, cfg, tech, "aimm",
+                                     episodes=episodes)[-1])["cycles"]
+        out[tech] = (1.0, tom / base, aimm / base)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="PR")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--n-ops", type=int, default=16384)
+    ap.add_argument("--episodes", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = NMPConfig()
+    apps = APPS if args.all else [args.app]
+    print(f"{'app':6s} {'tech':5s} {'B':>6s} {'TOM':>6s} {'AIMM':>6s}   "
+          "(execution time normalized to each technique's baseline)")
+    for app in apps:
+        r = row(app, cfg, args.n_ops, args.episodes)
+        for tech, (b, t, a) in r.items():
+            print(f"{app:6s} {tech:5s} {b:6.2f} {t:6.2f} {a:6.2f}")
+
+
+if __name__ == "__main__":
+    main()

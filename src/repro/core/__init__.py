@@ -1,0 +1,10 @@
+"""AIMM core: the paper's primary contribution.
+
+A continual-learning (dueling double-DQN) agent that remaps data pages and
+NMP computation in a memory-cube network (repro.nmp is the environment), plus
+the beyond-paper retargeting of the same agent at TPU-mesh sharding decisions
+(repro.core.sharding_mapper).
+"""
+from repro.core import actions, dqn, replay, reward, state  # noqa: F401
+from repro.core.agent import AgentConfig, AgentState, init_agent  # noqa: F401
+from repro.core.dqn import DQNConfig  # noqa: F401

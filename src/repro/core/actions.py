@@ -1,0 +1,72 @@
+"""AIMM action space (paper §4.2).
+
+Eight actions: six data/computation remaps plus two agent-invocation-interval
+adjustments. Remap targets are expressed relative to the hot page's *compute*
+cube in the 2D cube array (paper wording), with "near" = random neighbour and
+"far" = diagonally opposite cube.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Action ids (paper order).
+DEFAULT = 0            # (i)   no mapping change
+NEAR_DATA = 1          # (ii)  migrate page to a random neighbour of the compute cube
+FAR_DATA = 2           # (iii) migrate page to the diagonally opposite cube
+NEAR_COMPUTE = 3       # (iv)  remap compute to a random neighbour cube
+FAR_COMPUTE = 4        # (v)   remap compute to the diagonally opposite cube
+SOURCE_COMPUTE = 5     # (vi)  remap compute to the host cube of the first source page
+INC_INTERVAL = 6       # (vii) increase agent invocation interval
+DEC_INTERVAL = 7       # (viii)decrease agent invocation interval
+
+N_ACTIONS = 8
+
+# Discrete invocation intervals, in cycles (paper §4.2). The engine translates
+# these into per-epoch op-window sizes.
+INTERVALS = (100, 125, 167, 250)
+N_INTERVALS = len(INTERVALS)
+
+ACTION_NAMES = (
+    "default", "near_data", "far_data", "near_compute", "far_compute",
+    "source_compute", "inc_interval", "dec_interval",
+)
+
+
+def cube_xy(cube: jnp.ndarray, mesh_x: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return cube % mesh_x, cube // mesh_x
+
+
+def xy_cube(x: jnp.ndarray, y: jnp.ndarray, mesh_x: int) -> jnp.ndarray:
+    return y * mesh_x + x
+
+
+def random_neighbor(rng: jax.Array, cube: jnp.ndarray, mesh_x: int, mesh_y: int) -> jnp.ndarray:
+    """Uniformly pick one of the (up to 4) mesh neighbours of `cube`.
+
+    Off-mesh candidates are replaced by the cube itself before sampling, then
+    invalid picks fall back to a valid direction, so the result is always a
+    legal cube id.
+    """
+    x, y = cube_xy(cube, mesh_x)
+    cand_x = jnp.stack([x - 1, x + 1, x, x])
+    cand_y = jnp.stack([y, y, y - 1, y + 1])
+    valid = (cand_x >= 0) & (cand_x < mesh_x) & (cand_y >= 0) & (cand_y < mesh_y)
+    # Sample a direction proportional to validity.
+    p = valid.astype(jnp.float32)
+    p = p / jnp.maximum(p.sum(), 1.0)
+    d = jax.random.choice(rng, 4, p=p)
+    nx = jnp.clip(cand_x[d], 0, mesh_x - 1)
+    ny = jnp.clip(cand_y[d], 0, mesh_y - 1)
+    return xy_cube(nx, ny, mesh_x)
+
+
+def diagonal_opposite(cube: jnp.ndarray, mesh_x: int, mesh_y: int) -> jnp.ndarray:
+    x, y = cube_xy(cube, mesh_x)
+    return xy_cube(mesh_x - 1 - x, mesh_y - 1 - y, mesh_x)
+
+
+def adjust_interval(level: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:
+    """Apply INC/DEC interval actions to the discrete interval level."""
+    delta = jnp.where(action == INC_INTERVAL, 1, jnp.where(action == DEC_INTERVAL, -1, 0))
+    return jnp.clip(level + delta, 0, N_INTERVALS - 1)

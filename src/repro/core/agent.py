@@ -1,0 +1,130 @@
+"""Continual ε-greedy Q-learning agent (paper §4.3, §5.2).
+
+The agent is a NamedTuple of arrays (scan-compatible). Per invocation:
+
+  act      : ε-greedy action from the online dueling network
+  observe  : append (s, a, r, s') to the replay ring buffer
+  train    : one minibatch TD step (Adam), with periodic target-network sync
+
+"Continual learning" per the paper: the DNN persists across episode resets —
+only the environment state is cleared between runs (see nmp.engine.run_program).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dqn
+from repro.core.dqn import DQNConfig
+from repro.core.replay import ReplayBuffer, init_replay, push, sample
+from repro.train.optimizer import adamw
+
+PyTree = Any
+
+
+class AgentState(NamedTuple):
+    params: PyTree
+    target_params: PyTree
+    opt_state: PyTree
+    replay: ReplayBuffer
+    step: jnp.ndarray          # env interactions
+    train_steps: jnp.ndarray   # gradient updates taken
+    rng: jax.Array
+    loss_ema: jnp.ndarray
+
+
+class AgentConfig(NamedTuple):
+    dqn: DQNConfig
+    replay_capacity: int = 4096
+    eps_start: float = 0.3
+    eps_end: float = 0.02
+    eps_decay: int = 120       # interactions to decay over
+    train_every: int = 1       # train each invocation (continual)
+    min_replay: int = 32
+
+
+def init_agent(rng: jax.Array, cfg: AgentConfig) -> AgentState:
+    k1, k2 = jax.random.split(rng)
+    params = dqn.init_params(k1, cfg.dqn)
+    opt = adamw(cfg.dqn.lr, grad_clip=cfg.dqn.grad_clip)
+    return AgentState(
+        params=params,
+        target_params=jax.tree.map(jnp.copy, params),
+        opt_state=opt.init(params),
+        replay=init_replay(cfg.replay_capacity, cfg.dqn.state_dim),
+        step=jnp.zeros((), jnp.int32),
+        train_steps=jnp.zeros((), jnp.int32),
+        rng=k2,
+        loss_ema=jnp.zeros(()),
+    )
+
+
+def epsilon(cfg: AgentConfig, step: jnp.ndarray) -> jnp.ndarray:
+    frac = jnp.exp(-step.astype(jnp.float32) / cfg.eps_decay)
+    return cfg.eps_end + (cfg.eps_start - cfg.eps_end) * frac
+
+
+def act(agent: AgentState, cfg: AgentConfig, state_vec: jnp.ndarray,
+        explore: bool = True) -> tuple[jnp.ndarray, AgentState]:
+    """ε-greedy action selection; returns (action, new agent state)."""
+    rng, k_eps, k_act = jax.random.split(agent.rng, 3)
+    q = dqn.q_values(agent.params, state_vec, cfg.dqn)
+    greedy = jnp.argmax(q).astype(jnp.int32)
+    if explore:
+        eps = epsilon(cfg, agent.step)
+        rand_a = jax.random.randint(k_act, (), 0, cfg.dqn.n_actions)
+        action = jnp.where(jax.random.uniform(k_eps) < eps, rand_a, greedy)
+    else:
+        action = greedy
+    return action, agent._replace(rng=rng, step=agent.step + 1)
+
+
+def observe(agent: AgentState, s, a, r, s2, done=0.0) -> AgentState:
+    return agent._replace(replay=push(agent.replay, s, a, r, s2, done))
+
+
+def train(agent: AgentState, cfg: AgentConfig) -> AgentState:
+    """One TD minibatch step; no-op (via masking) until replay has min_replay."""
+    opt = adamw(cfg.dqn.lr, grad_clip=cfg.dqn.grad_clip)
+    rng, k = jax.random.split(agent.rng)
+    batch = sample(agent.replay, k, cfg.dqn.batch_size)
+    ready = (agent.replay.size >= cfg.min_replay).astype(jnp.float32)
+    batch = dict(batch, w=batch["w"] * ready)
+
+    loss, grads = jax.value_and_grad(dqn.td_loss)(
+        agent.params, agent.target_params, batch, cfg.dqn)
+    # Zero the update entirely when not ready (grads of masked loss are 0 anyway,
+    # but Adam moments should not accumulate noise).
+    grads = jax.tree.map(lambda g: g * ready, grads)
+    new_params, new_opt = opt.update(grads, agent.opt_state, agent.params,
+                                     agent.train_steps)
+    train_steps = agent.train_steps + jnp.asarray(ready, jnp.int32)
+
+    # Periodic hard target sync.
+    sync = (train_steps % cfg.dqn.target_sync == 0) & (train_steps > 0)
+    new_target = jax.tree.map(
+        lambda t, p: jnp.where(sync, p, t), agent.target_params, new_params)
+
+    return agent._replace(
+        params=new_params,
+        target_params=new_target,
+        opt_state=new_opt,
+        train_steps=train_steps,
+        rng=rng,
+        loss_ema=0.99 * agent.loss_ema + 0.01 * loss,
+    )
+
+
+def step_agent(agent: AgentState, cfg: AgentConfig, prev_s, prev_a, reward,
+               new_s) -> tuple[jnp.ndarray, AgentState]:
+    """Full continual-learning invocation: observe -> train -> act.
+
+    This is the hardware flow of Fig. 4-2: the incoming (state, reward) pair
+    plus the buffered (prev state, prev action) form a replay sample; the agent
+    then infers the next action for the new state.
+    """
+    agent = observe(agent, prev_s, prev_a, reward, new_s)
+    agent = train(agent, cfg)
+    return act(agent, cfg, new_s)

@@ -1,0 +1,94 @@
+"""Dueling (double) deep Q-network in pure JAX (paper §4.3, Fig. 4-3).
+
+The agent's function approximator is a small stack of fully connected layers
+with a dueling head:  Q(s, a) = V(s) + A(s, a) - mean_a A(s, a).
+
+Everything here is a pure function over explicit parameter pytrees so the
+whole continual-learning loop (simulate -> act -> observe -> train) can live
+inside a single `jax.lax.scan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    state_dim: int
+    n_actions: int = 8
+    hidden: tuple[int, ...] = (128, 128)
+    dueling: bool = True
+    double: bool = True           # double-DQN target (beyond-paper robustness)
+    gamma: float = 0.95
+    lr: float = 1e-3
+    grad_clip: float = 1.0
+    target_sync: int = 64         # train steps between target-network syncs
+    batch_size: int = 64
+
+
+def init_params(rng: jax.Array, cfg: DQNConfig) -> PyTree:
+    dims = (cfg.state_dim,) + cfg.hidden
+    keys = jax.random.split(rng, len(dims) + 2)
+    params = {}
+    for i in range(len(dims) - 1):
+        scale = jnp.sqrt(2.0 / dims[i])
+        params[f"w{i}"] = jax.random.normal(keys[i], (dims[i], dims[i + 1]), jnp.float32) * scale
+        params[f"b{i}"] = jnp.zeros((dims[i + 1],), jnp.float32)
+    h = dims[-1]
+    if cfg.dueling:
+        params["w_v"] = jax.random.normal(keys[-2], (h, 1), jnp.float32) * jnp.sqrt(1.0 / h)
+        params["b_v"] = jnp.zeros((1,), jnp.float32)
+        params["w_a"] = jax.random.normal(keys[-1], (h, cfg.n_actions), jnp.float32) * jnp.sqrt(1.0 / h)
+        params["b_a"] = jnp.zeros((cfg.n_actions,), jnp.float32)
+    else:
+        params["w_q"] = jax.random.normal(keys[-1], (h, cfg.n_actions), jnp.float32) * jnp.sqrt(1.0 / h)
+        params["b_q"] = jnp.zeros((cfg.n_actions,), jnp.float32)
+    return params
+
+
+def q_values(params: PyTree, state: jnp.ndarray, cfg: DQNConfig) -> jnp.ndarray:
+    """Q(s, .) for a single state (state_dim,) or batch (B, state_dim)."""
+    squeeze = state.ndim == 1
+    x = jnp.atleast_2d(state.astype(jnp.float32))
+    i = 0
+    while f"w{i}" in params:
+        x = jnp.maximum(x @ params[f"w{i}"] + params[f"b{i}"], 0.0)
+        i += 1
+    if cfg.dueling:
+        v = x @ params["w_v"] + params["b_v"]                     # (B, 1)
+        a = x @ params["w_a"] + params["b_a"]                     # (B, A)
+        q = v + a - jnp.mean(a, axis=-1, keepdims=True)
+    else:
+        q = x @ params["w_q"] + params["b_q"]
+    return q[0] if squeeze else q
+
+
+def td_loss(params: PyTree, target_params: PyTree, batch: dict, cfg: DQNConfig) -> jnp.ndarray:
+    """Squared TD error (paper eq. 3), double-DQN target if cfg.double."""
+    q = q_values(params, batch["s"], cfg)                          # (B, A)
+    q_sa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
+    q_next_t = q_values(target_params, batch["s2"], cfg)           # (B, A)
+    if cfg.double:
+        q_next_o = q_values(params, batch["s2"], cfg)
+        a_star = jnp.argmax(q_next_o, axis=-1)
+        q_next = jnp.take_along_axis(q_next_t, a_star[:, None], axis=1)[:, 0]
+    else:
+        q_next = jnp.max(q_next_t, axis=-1)
+    y = batch["r"] + cfg.gamma * (1.0 - batch["done"]) * jax.lax.stop_gradient(q_next)
+    err = (y - q_sa) * batch["w"]          # `w` masks invalid (not-yet-filled) samples
+    return jnp.sum(jnp.square(err)) / jnp.maximum(jnp.sum(batch["w"]), 1.0)
+
+
+def num_params(cfg: DQNConfig) -> int:
+    n, prev = 0, cfg.state_dim
+    for h in cfg.hidden:
+        n += prev * h + h
+        prev = h
+    n += prev * 1 + 1 + prev * cfg.n_actions + cfg.n_actions
+    return n

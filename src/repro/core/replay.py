@@ -1,0 +1,66 @@
+"""Experience replay buffer (paper §4.3 / §5.2 "replay buffer").
+
+A fixed-capacity ring buffer of (s, a, r, s2, done) transitions held in plain
+jnp arrays, so it can be carried through `jax.lax.scan` and updated with pure
+functional ops. Sampling is uniform with a validity mask for the not-yet-full
+case (the TD loss masks invalid rows).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayBuffer(NamedTuple):
+    s: jnp.ndarray        # (cap, state_dim) f32
+    a: jnp.ndarray        # (cap,) i32
+    r: jnp.ndarray        # (cap,) f32
+    s2: jnp.ndarray       # (cap, state_dim) f32
+    done: jnp.ndarray     # (cap,) f32
+    ptr: jnp.ndarray      # () i32
+    size: jnp.ndarray     # () i32
+
+
+def init_replay(capacity: int, state_dim: int) -> ReplayBuffer:
+    return ReplayBuffer(
+        s=jnp.zeros((capacity, state_dim), jnp.float32),
+        a=jnp.zeros((capacity,), jnp.int32),
+        r=jnp.zeros((capacity,), jnp.float32),
+        s2=jnp.zeros((capacity, state_dim), jnp.float32),
+        done=jnp.zeros((capacity,), jnp.float32),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def push(buf: ReplayBuffer, s, a, r, s2, done) -> ReplayBuffer:
+    cap = buf.s.shape[0]
+    i = buf.ptr
+    s, a, r = (jnp.asarray(x) for x in (s, a, r))
+    return ReplayBuffer(
+        s=buf.s.at[i].set(s.astype(jnp.float32)),
+        a=buf.a.at[i].set(a.astype(jnp.int32)),
+        r=buf.r.at[i].set(r.astype(jnp.float32)),
+        s2=buf.s2.at[i].set(s2.astype(jnp.float32)),
+        done=buf.done.at[i].set(jnp.asarray(done, jnp.float32)),
+        ptr=(i + 1) % cap,
+        size=jnp.minimum(buf.size + 1, cap),
+    )
+
+
+def sample(buf: ReplayBuffer, rng: jax.Array, batch_size: int) -> dict:
+    """Uniform sample with validity weights; safe when buffer is near-empty."""
+    hi = jnp.maximum(buf.size, 1)
+    idx = jax.random.randint(rng, (batch_size,), 0, hi)
+    w = (jnp.arange(batch_size) < buf.size).astype(jnp.float32)  # all-valid once size>=B
+    w = jnp.where(buf.size > 0, jnp.ones_like(w), jnp.zeros_like(w))
+    return {
+        "s": buf.s[idx],
+        "a": buf.a[idx],
+        "r": buf.r[idx],
+        "s2": buf.s2[idx],
+        "done": buf.done[idx],
+        "w": w,
+    }

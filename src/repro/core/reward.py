@@ -1,0 +1,19 @@
+"""AIMM reward function (paper §4.2).
+
+The paper explored hop count as the metric but found it converges to a local
+minimum; operations-per-cycle (OPC) as a direct performance proxy gives a
+robust learning signal. Reward is +1 / -1 / 0 for improvement / degradation /
+no-change, with a small relative deadband so measurement noise does not
+produce spurious +-1 rewards.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DEADBAND = 1e-3  # relative OPC change treated as "no change"
+
+
+def compute_reward(opc_now: jnp.ndarray, opc_prev: jnp.ndarray,
+                   deadband: float = DEADBAND) -> jnp.ndarray:
+    rel = (opc_now - opc_prev) / jnp.maximum(opc_prev, 1e-9)
+    return jnp.where(rel > deadband, 1.0, jnp.where(rel < -deadband, -1.0, 0.0))

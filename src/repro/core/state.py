@@ -1,0 +1,91 @@
+"""AIMM state representation (paper §4.2, Fig. 3).
+
+State = [ system information | page information ]:
+
+  system: per-cube NMP-table occupancy, per-cube avg row-buffer hit rate,
+          per-MC queue occupancy, global action history, interval level.
+  page:   (for the selected highly-accessed page) page access rate,
+          migrations-per-access, hop-count history, round-trip latency history,
+          migration latency history, per-page action history, current host
+          cube and current compute cube (one-hot).
+
+All features are normalized to O(1) ranges so a single MLP scale works across
+mesh sizes (4x4 and 8x8) and workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.actions import N_ACTIONS, N_INTERVALS
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpec:
+    n_cubes: int
+    n_mcs: int
+    hop_hist: int = 8
+    lat_hist: int = 8
+    mig_hist: int = 4
+    act_hist: int = 4       # per-page action history length
+    global_act_hist: int = 8
+
+    @property
+    def dim(self) -> int:
+        return (
+            self.n_cubes            # NMP table occupancy per cube
+            + self.n_cubes          # row-buffer hit rate per cube
+            + self.n_mcs            # MC queue occupancy
+            + self.global_act_hist  # global action history (normalized ids)
+            + N_INTERVALS           # interval level one-hot
+            + 2                     # page access rate, migrations per access
+            + self.hop_hist
+            + self.lat_hist
+            + self.mig_hist
+            + self.act_hist
+            + self.n_cubes          # page host cube one-hot
+            + self.n_cubes          # page compute cube one-hot
+        )
+
+
+def build_state(
+    spec: StateSpec,
+    nmp_occ: jnp.ndarray,        # (n_cubes,) in [0, inf) ops
+    rb_hit: jnp.ndarray,         # (n_cubes,) in [0, 1]
+    mc_queue: jnp.ndarray,       # (n_mcs,) ops
+    global_actions: jnp.ndarray, # (global_act_hist,) int action ids
+    interval_level: jnp.ndarray, # () int
+    page_access_rate: jnp.ndarray,
+    page_mig_per_access: jnp.ndarray,
+    page_hop_hist: jnp.ndarray,  # (hop_hist,) hops
+    page_lat_hist: jnp.ndarray,  # (lat_hist,) cycles
+    page_mig_hist: jnp.ndarray,  # (mig_hist,) cycles
+    page_act_hist: jnp.ndarray,  # (act_hist,) int action ids
+    page_cube: jnp.ndarray,      # () int host cube
+    compute_cube: jnp.ndarray,   # () int compute cube
+    *,
+    occ_norm: float = 512.0,     # NMP table capacity
+    queue_norm: float = 64.0,
+    hop_norm: float = 8.0,
+    lat_norm: float = 500.0,
+) -> jnp.ndarray:
+    one_hot = lambda i, n: (jnp.arange(n) == i).astype(jnp.float32)
+    parts = [
+        jnp.clip(nmp_occ / occ_norm, 0, 2),
+        rb_hit,
+        jnp.clip(mc_queue / queue_norm, 0, 2),
+        global_actions.astype(jnp.float32) / N_ACTIONS,
+        one_hot(interval_level, N_INTERVALS),
+        jnp.stack([jnp.clip(page_access_rate, 0, 1),
+                   jnp.clip(page_mig_per_access, 0, 2)]),
+        jnp.clip(page_hop_hist / hop_norm, 0, 2),
+        jnp.clip(page_lat_hist / lat_norm, 0, 4),
+        jnp.clip(page_mig_hist / lat_norm, 0, 4),
+        page_act_hist.astype(jnp.float32) / N_ACTIONS,
+        one_hot(page_cube, spec.n_cubes),
+        one_hot(compute_cube, spec.n_cubes),
+    ]
+    s = jnp.concatenate([jnp.atleast_1d(p).reshape(-1) for p in parts])
+    assert s.shape[0] == spec.dim, (s.shape, spec.dim)
+    return s

@@ -1,0 +1,28 @@
+"""Jitted wrapper: pads batch/feature dims to tile boundaries and dispatches
+to the Pallas kernel (interpret mode on CPU; compiled on TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dueling_qnet.kernel import BATCH_TILE, dueling_qnet_fused
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def qnet_forward(params: dict, states: jnp.ndarray,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """params: repro.core.dqn dueling param dict (w0,b0,w1,b1,w_v,b_v,w_a,b_a).
+    states: (B, state_dim). Returns Q (B, n_actions)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S = states.shape
+    pad_b = (-B) % BATCH_TILE
+    x = jnp.pad(states, ((0, pad_b), (0, 0)))
+    q = dueling_qnet_fused(
+        x, params["w0"], params["b0"], params["w1"], params["b1"],
+        params["w_v"], params["b_v"], params["w_a"], params["b_a"],
+        interpret=interpret)
+    return q[:B]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused dueling-qnet kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dueling_qnet_ref(x, w0, b0, w1, b1, wv, bv, wa, ba):
+    x = x.astype(jnp.float32)
+    h = jnp.maximum(x @ w0.astype(jnp.float32) + b0, 0.0)
+    h = jnp.maximum(h @ w1.astype(jnp.float32) + b1, 0.0)
+    v = h @ wv.astype(jnp.float32) + bv
+    a = h @ wa.astype(jnp.float32) + ba
+    return v + a - jnp.mean(a, axis=-1, keepdims=True)

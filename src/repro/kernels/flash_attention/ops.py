@@ -1,0 +1,46 @@
+"""Jitted wrapper: GQA expansion + layout (B,S,H,hd)<->(B,H,S,hd) + padding,
+dispatching to the Pallas flash kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (BLOCK_KV, BLOCK_Q,
+                                                  flash_attention)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gqa_flash_attention(q, k, v, *, causal: bool = True,
+                        scale: float | None = None,
+                        interpret: bool | None = None):
+    """q: (B, S, H, hd); k/v: (B, S, K, hd) with H % K == 0.
+
+    Returns (B, S, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    bq = min(BLOCK_Q, S)
+    bkv = min(BLOCK_KV, S)
+    pad = (-S) % max(bq, bkv)
+    # zero-padded KV rows are masked out by causality; for bidirectional
+    # attention the caller must supply block-aligned S
+    assert causal or pad == 0, "non-causal requires block-aligned seq len"
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    out = flash_attention(qp.transpose(0, 2, 1, 3), kp.transpose(0, 2, 1, 3),
+                          vp.transpose(0, 2, 1, 3), causal=causal,
+                          scale=scale, block_q=bq, block_kv=bkv,
+                          interpret=interpret)
+    return out.transpose(0, 2, 1, 3)[:, :S]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: dense (masked) softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale: float | None = None, causal: bool = True):
+    """q,k,v: (B, H, S, hd) -> (B, H, S, hd), fp32 math."""
+    B, H, S, hd = q.shape
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

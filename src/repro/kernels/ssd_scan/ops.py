@@ -1,0 +1,40 @@
+"""Jitted wrapper for the SSD Pallas kernel (interpret on CPU), with
+head-group splitting when the (Q, Q, H) decay block would exceed VMEM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+VMEM_BUDGET = 8 * 2 ** 20       # conservative half-VMEM working-set target
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd(x, b, c, dt, a, *, chunk: int = 128,
+        interpret: bool | None = None):
+    """x: (B, L, H, P); b,c: (B, L, N); dt: (B, L, H); a: (H,)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    Bsz, L, H, P = x.shape
+    # head-group split so chunk*chunk*Hg*4B fits the VMEM budget
+    hg = max(int(VMEM_BUDGET // (chunk * chunk * 4)), 1)
+    hg = min(hg, H)
+    while H % hg:
+        hg -= 1
+    if hg == H:
+        return ssd_scan(x, b, c, dt, a, chunk=chunk, interpret=interpret)
+    groups = H // hg
+    xg = x.reshape(Bsz, L, groups, hg, P)
+    dtg = dt.reshape(Bsz, L, groups, hg)
+    ag = a.reshape(groups, hg)
+
+    def one(g):
+        return ssd_scan(xg[:, :, g], b, c, dtg[:, :, g], ag[g], chunk=chunk,
+                        interpret=interpret)
+
+    ys = jax.lax.map(one, jnp.arange(groups))       # (G, B, L, hg, P)
+    return jnp.moveaxis(ys, 0, 2).reshape(Bsz, L, H, P)

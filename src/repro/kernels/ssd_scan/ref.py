@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD scan: sequential state-space recurrence.
+
+y_t = C_t . S_t + 0   with  S_t = exp(dt_t * A) S_{t-1} + B_t (x) (dt_t x_t)
+
+(The D-skip and gating live outside the kernel in the model layer.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, b, c, dt, a):
+    """x: (B, L, H, P); b,c: (B, L, N); dt: (B, L, H); a: (H,) negative.
+    Returns (B, L, H, P), fp32."""
+    Bsz, L, H, P = x.shape
+    N = b.shape[-1]
+    x = x.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+
+    def step(S, inp):
+        x_t, b_t, c_t, dt_t = inp           # (B,H,P) (B,N) (B,N) (B,H)
+        decay = jnp.exp(dt_t * a)           # (B,H)
+        S = S * decay[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", b_t, dt_t, x_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, S)
+        return S, y
+
+    S0 = jnp.zeros((Bsz, H, N, P))
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(b, 1, 0),
+          jnp.moveaxis(c, 1, 0), jnp.moveaxis(dt, 1, 0))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1)           # (B, L, H, P)

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes — 16x16 (single pod, 256 chips) and 2x16x16 (2 pods,
+512 chips) — and extract memory / cost / collective analyses for §Roofline.
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the device
+count at first init. Never set this flag globally (tests/benches want 1 CPU).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, parse_hlo_collectives
+from repro.models import build_model
+from repro.models.model import model_flops
+from repro.sharding import policies
+from repro.train.optimizer import adamw, quantized_adamw
+from repro.train.serve_step import make_serve_step
+from repro.train.train_step import make_train_step
+
+# Training memory knobs per arch (microbatching + int8 moments for the 398B).
+TRAIN_MICROBATCH = {"default": 8, "jamba-1.5-large-398b": 16}
+QUANTIZED_OPT = {"jamba-1.5-large-398b", "mixtral-8x22b"}
+# Baseline uses full remat for training (save only super-block boundaries);
+# block-level dot-saving is a §Perf iteration (memory <-> recompute tradeoff).
+TRAIN_REMAT = "full"
+
+
+def apply_variant(cfg, variant: str, mesh):
+    """§Perf beyond-baseline optimizations, applied per variant tag."""
+    import dataclasses as _dc
+    if variant == "baseline":
+        return cfg
+    if cfg.moe is not None and "moe_local" in variant:
+        data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, dispatch_groups=data))
+    if cfg.moe is not None and "moe_tp" in variant:
+        data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, dispatch_groups=data,
+                                               prefer_tp=True))
+    if "remat_block" in variant:
+        cfg = _dc.replace(cfg, remat="block")
+    if "remat_none" in variant:
+        cfg = _dc.replace(cfg, remat="none")
+    if "seqpar" in variant:
+        cfg = _dc.replace(cfg, seq_shard=True)
+    if "savear" in variant:
+        cfg = _dc.replace(cfg, remat="collectives")
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+               variant: str = "baseline"):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if SHAPES[shape_name].kind == "train":
+        cfg = _dc.replace(cfg, remat=TRAIN_REMAT)
+    cfg = apply_variant(cfg, variant, mesh)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+
+    model = build_model(cfg)
+    t0 = time.time()
+    from repro.models.model import abstract_init
+    from repro.sharding.context import sharding_ctx
+    param_shapes, roles = abstract_init(model)
+    pspecs = policies.param_specs(roles, param_shapes, cfg, mesh)
+    batch_sds = model.input_specs(shape)
+    bspecs = policies.batch_specs(cfg, shape, mesh, batch_sds)
+    pol = policies.resolve_policy(cfg, mesh)
+    ctx = sharding_ctx(mesh, pol)
+    ctx.__enter__()
+
+    if shape.kind == "train":
+        quant = arch in QUANTIZED_OPT
+        opt = (quantized_adamw if quant else adamw)(1e-4, weight_decay=0.1)
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        ospecs = policies.opt_state_specs(pspecs, param_shapes, mesh, cfg,
+                                          quantized=quant)
+        mb = TRAIN_MICROBATCH.get(arch, TRAIN_MICROBATCH["default"])
+        if "mb16" in variant:
+            mb = 16
+        if "mb32" in variant:
+            mb = 32
+        gspecs = policies.zero_shard_specs(pspecs, param_shapes, mesh, cfg)
+        step_fn = make_train_step(model, opt, microbatches=mb,
+                                  grad_shardings=gspecs,
+                                  batch_shardings=bspecs)
+        jf = jax.jit(step_fn, in_shardings=(pspecs, ospecs, bspecs, None),
+                     out_shardings=(pspecs, ospecs, None))
+        lowered = jf.lower(param_shapes, opt_shapes, batch_sds,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+        trip_extra = mb
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            hidden, _ = model.apply(params, batch)
+            return model.logits(params, hidden[:, -1:])
+
+        jf = jax.jit(prefill_step, in_shardings=(pspecs, bspecs))
+        lowered = jf.lower(param_shapes, batch_sds)
+        trip_extra = 1
+    else:  # decode
+        serve = make_serve_step(model)
+        # donate the KV/SSM caches: in-place update aliasing halves decode
+        # residency (without it the old+new cache coexist, §Perf D1)
+        jf = jax.jit(serve, in_shardings=(
+            pspecs, bspecs["token"], bspecs["caches"], bspecs["position"]),
+            donate_argnums=(2,))
+        lowered = jf.lower(param_shapes, batch_sds["token"],
+                           batch_sds["caches"], batch_sds["position"])
+        trip_extra = 1
+
+    ctx.__exit__(None, None, None)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # per-device costs from the partitioned HLO, while-trip corrected
+    stats = parse_hlo_collectives(hlo)
+
+    chips = policies.count_devices(mesh)
+    flops_dev_raw = float(ca.get("flops", 0.0))       # body-once (diagnostic)
+    bytes_dev_raw = float(ca.get("bytes accessed", 0.0))
+    mf = model_flops(cfg, shape)
+    from repro.launch.memory_model import memory_bytes
+    mem_bytes = memory_bytes(cfg, shape,
+                             mb=trip_extra if shape.kind == "train" else 1,
+                             quantized_opt=arch in QUANTIZED_OPT)
+
+    roof = Roofline(flops=stats.flops * chips,
+                    bytes_hbm=mem_bytes,
+                    bytes_collective=stats.collective_bytes * chips,
+                    chips=chips, model_flops=mf)
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes + mem.generated_code_size_in_bytes
+                     - mem.alias_size_in_bytes)   # donated buffers counted once
+    return {
+        "status": "ok",
+        "chips": chips,
+        "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": int(mem.argument_size_in_bytes),
+            "output_bytes_per_device": int(mem.output_size_in_bytes),
+            "temp_bytes_per_device": int(mem.temp_size_in_bytes),
+            "total_bytes_per_device": int(per_dev_bytes),
+            "fits_16GB": bool(per_dev_bytes < 16e9),
+        },
+        "xla_cost_analysis_flops_body_once": flops_dev_raw,
+        "xla_cost_analysis_bytes_body_once": bytes_dev_raw,
+        "hlo_parsed_hbm_bytes_per_device": stats.hbm_bytes,
+        "collective_ops_bytes_raw": {k: float(v) for k, v in
+                                     stats.collective_ops.items()},
+        "trip_counts": stats.trip_counts,
+        "roofline": roof.as_dict(),
+    }
+
+
+def run_cell(arch, shape_name, multi_pod, out, variant="baseline"):
+    key = f"{arch}|{shape_name}|{'multi' if multi_pod else 'single'}"
+    if variant != "baseline":
+        key += f"|{variant}"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    print(f"=== {key} ===", flush=True)
+    try:
+        res = lower_cell(arch, shape_name, mesh, multi_pod, variant)
+    except Exception as e:
+        traceback.print_exc()
+        res = {"status": "error", "error": f"{type(e).__name__}: {e}"}
+    out[key] = res
+    if res["status"] == "ok":
+        r = res["roofline"]
+        print(f"  compile={res['compile_s']}s "
+              f"mem/dev={res['memory']['total_bytes_per_device']/1e9:.2f}GB "
+              f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+              f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+              f"roofline_frac={r['roofline_fraction']:.3f}", flush=True)
+    else:
+        print(f"  {res['status']}: {res.get('reason', res.get('error'))}",
+              flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    out = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            out = json.load(f)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    for arch, shape, mp in cells:
+        key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+        if args.variant != "baseline":
+            key += f"|{args.variant}"
+        if out.get(key, {}).get("status") == "ok":
+            print(f"=== {key} === (cached)", flush=True)
+            continue
+        run_cell(arch, shape, mp, out, args.variant)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+
+    n_ok = sum(1 for v in out.values() if v["status"] == "ok")
+    n_skip = sum(1 for v in out.values() if v["status"] == "skipped")
+    n_err = sum(1 for v in out.values() if v["status"] == "error")
+    print(f"\nDONE: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,310 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh):
+
+  compute_s    = HLO_FLOPs / (chips * 197e12)          bf16 peak per chip
+  memory_s     = HLO_bytes / (chips * 819e9)           HBM bandwidth
+  collective_s = collective_bytes / (chips * 50e9)     ICI per link
+
+HLO sources:
+  - compiled.cost_analysis() gives flops / bytes accessed, but counts each
+    `while` (lax.scan) body ONCE (measured; DESIGN.md §5). We correct by
+    parsing the optimized HLO: per-computation collective operand bytes and
+    while-loop trip counts, propagated through the call graph.
+  - collective bytes = sum of operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, trip-count corrected.
+  - FLOPs/bytes corrections use the dominant-scan structure: total ~
+    reported + (trip-1) * body share. We cross-check with analytic
+    MODEL_FLOPS (6*N*D / 2*N*D) and report both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (~per chip usable)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of an HLO shape like 'bf16[16,128,4096]{2,1,0}' or a (possibly
+    nested) tuple '(f32[2,4], bf16[8])'."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        b = _DTYPE_BYTES.get(dt)
+        if b is None or b == 0:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * b
+    return total
+
+
+@dataclasses.dataclass
+class HLOStats:
+    collective_bytes: float
+    collective_ops: dict
+    trip_counts: dict
+    flops: float = 0.0          # dot FLOPs, trip-corrected (per device)
+    hbm_bytes: float = 0.0      # fusion-boundary operand+output bytes, corrected
+
+
+# ops that don't move HBM bytes themselves (children or bookkeeping)
+_NO_IO = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+          "while", "conditional", "call", "after-all",
+          "partition-id", "replica-id"}
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OP_TAIL_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _split_shape_op(rest: str):
+    """Split '<shape> <op>(...' handling arbitrarily nested tuple shapes."""
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None, None
+        shape, tail = rest[:end + 1], rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None, None
+        shape, tail = rest[:sp], rest[sp:]
+    m = _OP_TAIL_RE.match(tail)
+    return shape, (m.group(1) if m else None)
+
+
+def _dot_flops(rest: str, out_shape: str, var_dims: dict, line: str) -> float:
+    """FLOPs of a dot: 2 * prod(output dims) * prod(lhs contracting dims)."""
+    out_dims = 1
+    m = re.search(r"\w+\[([\d,]*)\]", out_shape)
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            out_dims *= int(d)
+    args = re.findall(r"%([\w\.\-]+)", rest.split("(", 1)[1])
+    lhs = var_dims.get(args[0]) if args else None
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if lhs is not None and cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            if int(d) < len(lhs):
+                contract *= lhs[int(d)]
+    return 2.0 * out_dims * contract
+
+
+def _shape_dims(shape_str: str):
+    m = re.search(r"\w+\[([\d,]*)\]", shape_str)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(1).split(",") if d)
+
+
+def parse_hlo_costs(hlo_text: str) -> HLOStats:
+    """Per-computation dot-FLOPs / fusion-boundary HBM bytes / collective
+    traffic, propagated through the call graph with while-loop trip counts.
+
+    The optimized HLO is post-fusion SPMD (per-device): each top-level fusion
+    or dot reads its operands and writes its output once -> summing operand +
+    output bytes across top-level instructions approximates HBM traffic; dot
+    FLOPs come from output x contracting dims; collective bytes use output
+    shapes (reduce-scatter: its larger operand). `while` bodies multiply by
+    backend_config known_trip_count — the correction XLA's own cost_analysis
+    (body counted once) lacks.
+    """
+    comp = defaultdict(lambda: {"coll": 0.0, "flops": 0.0, "bytes": 0.0})
+    comp_ops: dict[str, dict] = defaultdict(lambda: defaultdict(float))
+    edges: dict[str, list] = defaultdict(list)
+    var_bytes: dict[str, int] = {}
+    var_dims: dict[str, tuple] = {}
+    cur = None
+
+    for line in hlo_text.splitlines():
+        header = _HEADER_RE.match(line)
+        if header:
+            cur = header.group(1)
+            var_bytes, var_dims = {}, {}
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        var, rest = mi.group(1), mi.group(2)
+        shape_str, op = _split_shape_op(rest)
+        if shape_str is None or op is None:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        var_bytes[var] = nbytes
+        var_dims[var] = _shape_dims(shape_str)
+        base_op = op.replace("-start", "").replace("-done", "")
+
+        if base_op in _COLLECTIVES:
+            b = nbytes
+            if base_op == "reduce-scatter":
+                args = re.findall(r"%([\w\.\-]+)", rest.split("(", 1)[1])
+                b = max(b, sum(var_bytes.get(a, 0) for a in args[:1]))
+            if op.endswith("-done"):
+                continue                      # counted at -start
+            comp[cur]["coll"] += b
+            comp_ops[cur][base_op] += b
+            continue
+        if op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", rest)
+            cm2 = re.search(r"condition=%?([\w\.\-]+)", rest)
+            t = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+            trip = int(t.group(1)) if t else 1
+            if bm:
+                edges[cur].append((bm.group(1), trip, "while"))
+            if cm2:
+                edges[cur].append((cm2.group(1), trip, "while"))
+            continue
+        if op in ("call", "conditional"):
+            for c in re.findall(r"(?:to_apply|calls|body|branch_\w+|"
+                                r"true_computation|false_computation)="
+                                r"%?([\w\.\-]+)", rest):
+                edges[cur].append((c, 1, "call"))
+            continue
+        if op == "dot":
+            comp[cur]["flops"] += _dot_flops(rest, shape_str, var_dims, line)
+        if op == "fusion":
+            fm = re.search(r"calls=%?([\w\.\-]+)", rest)
+            if fm:
+                # fused dots count as FLOPs; fusion-internal ops don't touch HBM
+                edges[cur].append((fm.group(1), 1, "fusion"))
+        if op not in _NO_IO:
+            args = re.findall(r"%([\w\.\-]+)", rest.split("(", 1)[1]) \
+                if "(" in rest else []
+            io = nbytes + sum(var_bytes.get(a, 0) for a in args)
+            comp[cur]["bytes"] += io
+
+    called = {callee for lst in edges.values() for callee, _, _ in lst}
+    memo: dict[str, dict] = {}
+
+    def total(c: str, depth=0) -> dict:
+        if c in memo:
+            return memo[c]
+        if depth > 64:
+            return {"coll": 0.0, "flops": 0.0, "bytes": 0.0}
+        s = dict(comp.get(c, {"coll": 0.0, "flops": 0.0, "bytes": 0.0}))
+        for callee, mult, kind in edges.get(c, []):
+            sub = total(callee, depth + 1)
+            s["coll"] += mult * sub["coll"]
+            s["flops"] += mult * sub["flops"]
+            if kind != "fusion":        # while/call bodies hold real HBM ops
+                s["bytes"] += mult * sub["bytes"]
+        memo[c] = s
+        return s
+
+    entry = None
+    m_entry = re.search(r"^\s*ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    if m_entry:
+        entry = m_entry.group(1)
+    roots = ([entry] if entry else
+             [c for c in set(list(comp) + list(edges)) if c not in called])
+    agg = {"coll": 0.0, "flops": 0.0, "bytes": 0.0}
+    for r in roots:
+        t = total(r)
+        for k in agg:
+            agg[k] += t[k]
+    ops = defaultdict(float)
+    for c in comp_ops:
+        for op, b in comp_ops[c].items():
+            ops[op] += b     # uncorrected per-op breakdown (diagnostic)
+    trips = {}
+    for lst in edges.values():
+        for callee, t, _kind in lst:
+            if t > 1:
+                trips[callee] = t
+    return HLOStats(collective_bytes=agg["coll"], collective_ops=dict(ops),
+                    trip_counts=trips, flops=agg["flops"],
+                    hbm_bytes=agg["bytes"])
+
+
+# backwards-compatible alias
+parse_hlo_collectives = parse_hlo_costs
+
+
+def scan_corrected(reported: float, trip_product: int, body_share: float = 0.95):
+    """Correct a body-counted-once aggregate: total ~= reported * (share *
+    trip + (1-share)). `body_share`: fraction of the reported cost inside the
+    scanned body (layer stacks dominate)."""
+    return reported * (body_share * trip_product + (1.0 - body_share))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    chips: int
+    model_flops: float
+
+    @property
+    def compute_s(self):
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self):
+        return self.bytes_hbm / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self):
+        return self.bytes_collective / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self):
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self):
+        """Fraction of the chips' peak the step achieves, assuming perfect
+        overlap (model-FLOPs time / bounding-term time)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / max(self.step_s, 1e-12)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "bytes_hbm": self.bytes_hbm,
+            "bytes_collective": self.bytes_collective, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

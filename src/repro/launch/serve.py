@@ -1,0 +1,53 @@
+"""Batched serving driver: continuous-batching greedy decode.
+
+    python -m repro.launch.serve --arch mamba2-370m --smoke --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.train.serve_step import BatchServer, Request
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    server = BatchServer(model, params, batch=args.batch,
+                         max_seq=args.max_seq)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab, 8).tolist(),
+                    max_new=args.max_new) for _ in range(args.requests)]
+    pending = list(reqs)
+    done = []
+    steps = 0
+    while pending or any(server.slots):
+        while pending and server.admit(pending[0]):
+            pending.pop(0)
+        server.step()
+        steps += 1
+        done = [r for r in reqs if r.done]
+        if steps > 10000:
+            break
+    for i, r in enumerate(reqs):
+        print(f"req{i}: prompt={r.prompt[:4]}... -> {r.generated}")
+    print(f"[serve] {len(done)}/{len(reqs)} completed in {steps} decode steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Architecture zoo: composable pure-JAX model definitions."""
+from repro.models.model import Model, build_model, count_params, model_flops  # noqa: F401

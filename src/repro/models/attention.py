@@ -1,0 +1,272 @@
+"""Attention: GQA with full / sliding-window / local / bidirectional / cross
+variants, memory-sane chunked ("flash-scan") computation for long sequences,
+and single-token decode against (sequence-sharded) KV caches.
+
+Paths:
+  attend()         dense einsum with mask      — short sequences / smoke tests
+  attend_chunked() nested lax.scan with online softmax — long prefill; for
+                   windowed attention the KV window is dynamic-sliced per query
+                   chunk, so HLO FLOPs stay linear in S.
+  decode_attend()  one new token vs cache; softmax reductions run sharded over
+                   the cache's sequence axis (flash-decoding style SP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnCfg
+from repro.models import layers
+from repro.models.layers import DTYPE, _normal
+
+NEG_INF = -1e9
+CHUNK_Q = 512
+CHUNK_KV = 1024
+DENSE_MAX_S = 2048
+
+
+def init_attention(key, d_model: int, cfg: AttnCfg):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    params = {
+        "wq": _normal(kq, (d_model, H * hd), s),
+        "wk": _normal(kk, (d_model, K * hd), s),
+        "wv": _normal(kv, (d_model, K * hd), s),
+        "wo": _normal(ko, (H * hd, d_model), (H * hd) ** -0.5),
+    }
+    roles = {
+        "wq": ("embed", "qheads"), "wk": ("embed", "kvheads"),
+        "wv": ("embed", "kvheads"), "wo": ("qheads", "embed"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), DTYPE)
+        params["k_norm"] = jnp.ones((hd,), DTYPE)
+        roles["q_norm"] = (None,)
+        roles["k_norm"] = (None,)
+    return params, roles
+
+
+def _qkv(params, x, cfg: AttnCfg, positions, rope: bool = True):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, K, hd)
+    v = (x @ params["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = layers.l2norm(q) * params["q_norm"]
+        k = layers.l2norm(k) * params["k_norm"]
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, n_heads):
+    """Broadcast kv heads to match query heads (GQA)."""
+    B, S, K, hd = k.shape
+    rep = n_heads // K
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def _mask(sq, skv, q_off, kind: str, window: int):
+    qi = q_off + jnp.arange(sq)[:, None]
+    ki = jnp.arange(skv)[None, :]
+    if kind == "bidir":
+        return jnp.ones((sq, skv), bool)
+    m = ki <= qi
+    if kind == "window":
+        m &= ki > qi - window
+    return m
+
+
+def attend(q, k, v, kind: str, window: int, scale: float, q_off=0):
+    """Dense attention. q: (B,Sq,H,hd), k/v: (B,Skv,H,hd)."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    m = _mask(q.shape[1], k.shape[1], q_off, kind, window)
+    logits = jnp.where(m[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def attend_chunked(q, k, v, kind: str, window: int, scale: float,
+                   kv_valid: int | None = None):
+    """Online-softmax chunked attention (flash-style, pure JAX).
+
+    Full/bidir: outer scan over query chunks, inner scan over all KV chunks
+    with causal masking. Windowed ('window'): per query chunk only the KV
+    window is dynamic-sliced, keeping compiled FLOPs linear in S.
+    Supports Sq != Skv (cross attention): KV is padded to a chunk multiple and
+    positions >= kv_valid are masked.
+    """
+    B, S, H, hd = q.shape
+    S_kv = k.shape[1]
+    if kind != "bidir":
+        assert S_kv == S, "causal/windowed attention needs Sq == Skv"
+    kv_valid = kv_valid if kv_valid is not None else S_kv
+    cq = min(CHUNK_Q, S)
+    assert S % cq == 0
+    nq = S // cq
+
+    if kind == "window" and window + cq < S:
+        kv_span = ((window + cq + CHUNK_KV - 1) // CHUNK_KV) * CHUNK_KV
+        kv_span = min(kv_span, S)
+        kp = jnp.pad(k, ((0, 0), (kv_span, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (kv_span, 0), (0, 0), (0, 0)))
+
+        @jax.checkpoint
+        def q_block(i):
+            q_i = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+            k_i = jax.lax.dynamic_slice_in_dim(kp, i * cq, kv_span + cq, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(vp, i * cq, kv_span + cq, axis=1)
+            # positions of k_i run from i*cq - kv_span .. i*cq + cq (pre-pad space)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_i).astype(jnp.float32) * scale
+            qi = (i * cq + jnp.arange(cq))[:, None]
+            ki = (i * cq - kv_span + jnp.arange(kv_span + cq))[None, :]
+            m = (ki <= qi) & (ki > qi - window) & (ki >= 0)
+            logits = jnp.where(m[None, None], logits, NEG_INF)
+            p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+            return jnp.einsum("bhqk,bkhd->bqhd", p, v_i)
+
+        out = jax.lax.map(q_block, jnp.arange(nq))          # (nq,B,cq,H,hd)
+        return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+    ckv = min(CHUNK_KV, S_kv) if S_kv >= CHUNK_KV else S_kv
+    pad_kv = (-S_kv) % ckv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nkv = k.shape[1] // ckv
+    kc = k.reshape(B, nkv, ckv, H, hd)
+    vc = v.reshape(B, nkv, ckv, H, hd)
+    masked_kv = kv_valid < nkv * ckv
+
+    @jax.checkpoint     # recompute the online-softmax pass in backward; the
+    def q_block(i):     # inner scan would otherwise save per-step P blocks
+        q_i = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        q_pos = i * cq + jnp.arange(cq)
+
+        def kv_step(carry, j):
+            acc, m_run, l_run = carry
+            k_j, v_j = kc[:, j], vc[:, j]
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j).astype(jnp.float32) * scale
+            k_pos = j * ckv + jnp.arange(ckv)
+            if kind != "bidir":
+                msk = k_pos[None, :] <= q_pos[:, None]
+                logits = jnp.where(msk[None, None], logits, NEG_INF)
+            if masked_kv:
+                logits = jnp.where((k_pos < kv_valid)[None, None, None],
+                                   logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = (acc * corr[..., None]
+                   + jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype), v_j))
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, cq, hd), jnp.float32)
+        m0 = jnp.full((B, H, cq), NEG_INF)
+        l0 = jnp.zeros((B, H, cq))
+        (acc, m_run, l_run), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                              jnp.arange(nkv))
+        out = acc / jnp.maximum(l_run, 1e-20)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)     # (B,cq,H,hd)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))              # (nq,B,cq,H,hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def self_attention(params, x, cfg: AttnCfg, kind: str, positions=None,
+                   rope: bool = True):
+    """kind: 'causal' | 'window' | 'bidir'. Returns (B,S,D)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _qkv(params, x, cfg, positions, rope)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    scale = cfg.softmax_scale or cfg.head_dim ** -0.5
+    if S <= DENSE_MAX_S:
+        o = attend(q, k, v, kind, cfg.window, scale)
+    else:
+        o = attend_chunked(q, k, v, kind, cfg.window, scale)
+    return o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder / VLM image layers)
+# ---------------------------------------------------------------------------
+
+def cross_attention(params, x, memory, cfg: AttnCfg):
+    """x: (B,Sq,D) queries; memory: (B,Skv,D) or precomputed (k,v) tuple."""
+    B, Sq, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, Sq, H, hd)
+    if isinstance(memory, tuple):
+        k, v = memory
+    else:
+        Skv = memory.shape[1]
+        k = (memory @ params["wk"]).reshape(B, Skv, K, hd)
+        v = (memory @ params["wv"]).reshape(B, Skv, K, hd)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = cfg.softmax_scale or hd ** -0.5
+    if Sq <= 16 or max(Sq, k.shape[1]) <= DENSE_MAX_S:
+        # short query blocks (incl. single-token decode): dense logits are
+        # (B,H,Sq,Skv) — small enough even for 32k memories
+        o = attend(q, k, v, "bidir", 0, scale)
+    else:
+        pad_q = (-Sq) % CHUNK_Q if Sq > CHUNK_Q else 0
+        if pad_q:
+            q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        o = attend_chunked(q, k, v, "bidir", 0, scale,
+                           kv_valid=k.shape[1])[:, :Sq]
+    return o.reshape(B, Sq, H * hd) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token vs KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attend(params, x, cache_k, cache_v, position, cfg: AttnCfg,
+                  window: int = 0):
+    """x: (B,1,D); cache_k/v: (B,S,K,hd) with valid entries < position.
+
+    The softmax max/sum reductions contract over the cache sequence axis, so a
+    sequence-sharded cache (PartitionSpec on S) runs flash-decoding style under
+    GSPMD (partial max/sum + all-reduce).
+    Returns (out (B,1,D), new_k (B,1,K,hd), new_v).
+    """
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, 1, H, hd)
+    k_new = (x @ params["wk"]).reshape(B, 1, K, hd)
+    v_new = (x @ params["wv"]).reshape(B, 1, K, hd)
+    if cfg.qk_norm:
+        q = layers.l2norm(q) * params["q_norm"]
+        k_new = layers.l2norm(k_new) * params["k_norm"]
+    pos = jnp.full((1,), position)
+    q = layers.apply_rope(q, pos, cfg.rope_theta)
+    k_new = layers.apply_rope(k_new, pos, cfg.rope_theta)
+
+    S = cache_k.shape[1]
+    scale = cfg.softmax_scale or hd ** -0.5
+    rep = H // K
+    qg = q.reshape(B, 1, K, rep, hd)
+    # logits over the (sharded) cache axis, fp32
+    logits = jnp.einsum("bokrd,bskd->bkrs", qg, cache_k).astype(jnp.float32) * scale
+    new_logit = jnp.einsum("bokrd,bokd->bkro", qg, k_new).astype(jnp.float32) * scale
+    ki = jnp.arange(S)
+    valid = ki[None, None, None, :] < position
+    if window:
+        valid &= ki[None, None, None, :] >= position - window
+    logits = jnp.where(valid, logits, NEG_INF)
+    m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), new_logit)
+    p = jnp.exp(logits - m)
+    p_new = jnp.exp(new_logit - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True) + p_new
+    ctx = (jnp.einsum("bkrs,bskd->bkrd", (p / denom).astype(x.dtype), cache_v)
+           + (p_new / denom).astype(x.dtype) * v_new.reshape(B, 1, K, 1, hd)[:, 0])
+    out = ctx.reshape(B, 1, H * hd) @ params["wo"]
+    return out, k_new, v_new

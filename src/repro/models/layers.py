@@ -1,0 +1,154 @@
+"""Fundamental layers: RMSNorm, RoPE, SwiGLU/GELU MLP, embeddings.
+
+Pure functions over explicit parameter dicts. Parameters are bf16; norms and
+softmax accumulate in fp32. Every init_* returns (params, roles) where `roles`
+mirrors the params tree with a tuple of semantic axis names per leaf — the
+sharding policy maps roles -> PartitionSpec (see repro.sharding.policies).
+
+Axis-role vocabulary:
+  'embed'  d_model            'ff'      MLP hidden
+  'vocab'  vocabulary         'qheads'  merged q heads*head_dim
+  'kvheads' merged kv heads*head_dim    'experts' MoE expert axis
+  'heads'  per-head axis      'inner'   mamba d_inner
+  null     replicated
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+DTYPE = jnp.bfloat16
+
+
+def _normal(key, shape, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), DTYPE)}, {"scale": ("embed",)}
+
+
+@jax.custom_vjp
+def _rmsnorm_core(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (xf * inv).astype(x.dtype) * scale
+    return y, (x, scale, inv)
+
+
+def _rmsnorm_bwd(res, dy):
+    """Exact grad computed in fp32, *returned in the input dtype*: without
+    this, the fp32 internals leak into the backward graph and every
+    tensor-parallel gradient all-reduce moves fp32 payloads (2x wire bytes —
+    measured in §Perf B2)."""
+    x, scale, inv = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    xhat = xf * inv
+    dscale = jnp.sum(dyf * xhat.astype(jnp.float32),
+                     axis=tuple(range(dy.ndim - 1))).astype(scale.dtype)
+    dxhat = dyf * scale.astype(jnp.float32)
+    d = x.shape[-1]
+    dx = inv * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True))
+    return dx.astype(x.dtype), dscale, None
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(params, x, eps=1e-6):
+    return _rmsnorm_core(x, params["scale"], eps)
+
+
+def l2norm(x, eps=1e-6):
+    """Per-head qk-norm (qwen3)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (S,) or broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                   # (S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, swiglu: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    if swiglu:
+        params = {
+            "w_gate": _normal(k1, (d_model, d_ff), s_in),
+            "w_up": _normal(k2, (d_model, d_ff), s_in),
+            "w_down": _normal(k3, (d_ff, d_model), s_out),
+        }
+        roles = {
+            "w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+            "w_down": ("ff", "embed"),
+        }
+    else:
+        params = {
+            "w_up": _normal(k2, (d_model, d_ff), s_in),
+            "w_down": _normal(k3, (d_ff, d_model), s_out),
+        }
+        roles = {"w_up": ("embed", "ff"), "w_down": ("ff", "embed")}
+    return params, roles
+
+
+def mlp(params, x, swiglu: bool = True):
+    if swiglu:
+        g = jax.nn.silu(x @ params["w_gate"])
+        return ((g * (x @ params["w_up"])) @ params["w_down"]).astype(x.dtype)
+    return (jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab_padded: int, d_model: int):
+    params = {"table": _normal(key, (vocab_padded, d_model), 1.0)}
+    return params, {"table": ("vocab", "embed")}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def init_lm_head(key, d_model: int, vocab_padded: int):
+    params = {"w": _normal(key, (d_model, vocab_padded), d_model ** -0.5)}
+    return params, {"w": ("embed", "vocab")}

@@ -1,0 +1,178 @@
+"""Mamba2 / SSD (state-space duality) mixer.
+
+Chunked SSD algorithm (training/prefill): the sequence is split into chunks of
+length Q; within a chunk the computation is a masked quadratic form (maps to
+the MXU), across chunks a small recurrence over per-chunk states is carried by
+`lax.scan`:
+
+  dA_t = dt_t * A_h                          (A_h < 0, per head)
+  seg  = within-chunk cumsum of dA
+  intra:  Y_ij = (C_i . B_j) * exp(seg_i - seg_j) * dt_j  for i >= j
+  states: S_c  = sum_j exp(seg_end - seg_j) * B_j (x) (dt_j * X_j)
+  recur:  R_{c+1} = exp(sum_c dA) * R_c + S_c
+  inter:  Y_i  += (C_i . R_c) * exp(seg_i)
+  out:    y = (Y + D * x) -> RMSNorm gated by silu(z) -> out_proj
+
+Decode: exact per-token recurrence on the (B, H, P, N) state plus a causal
+depthwise-conv ring buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models import layers
+from repro.models.layers import DTYPE, _normal
+
+
+def dims(d_model: int, cfg: SSMCfg):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba(key, d_model: int, cfg: SSMCfg):
+    d_inner, H = dims(d_model, cfg)
+    G, N = cfg.n_groups, cfg.d_state
+    conv_ch = d_inner + 2 * G * N
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    params = {
+        "w_in": _normal(ks[0], (d_model, d_in_proj), d_model ** -0.5),
+        "conv_w": _normal(ks[1], (cfg.conv, conv_ch), 0.5),
+        "conv_b": jnp.zeros((conv_ch,), DTYPE),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), DTYPE),
+        "w_out": _normal(ks[2], (d_inner, d_model), d_inner ** -0.5),
+    }
+    roles = {
+        "w_in": ("embed", "inner_proj"), "conv_w": (None, "conv_ch"),
+        "conv_b": ("conv_ch",), "a_log": ("heads",), "d_skip": ("heads",),
+        "dt_bias": ("heads",), "norm_scale": ("inner",),
+        "w_out": ("inner", "embed"),
+    }
+    return params, roles
+
+
+def _split_proj(proj, d_inner, G, N, H):
+    z, x, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + G * N,
+               2 * d_inner + 2 * G * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq. x: (B,L,CH); w: (K,CH)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba_block(params, hidden, cfg: SSMCfg, d_model: int):
+    """hidden: (B, L, D) -> (B, L, D). Chunked SSD."""
+    Bsz, L, _ = hidden.shape
+    d_inner, H = dims(d_model, cfg)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+    Q = min(cfg.chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    proj = hidden @ params["w_in"]
+    z, xBC_x, Bmat, Cmat, dt = _split_proj(proj, d_inner, G, N, H)
+    xBC = jnp.concatenate([xBC_x, Bmat, Cmat], axis=-1)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    x, Bmat, Cmat = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+
+    x = x.reshape(Bsz, L, H, P)
+    Bmat = Bmat.reshape(Bsz, L, G, N).astype(jnp.float32)
+    Cmat = Cmat.reshape(Bsz, L, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(params["a_log"])                                      # (H,)
+
+    # chunked views, scanned chunk-by-chunk (carries the state recurrence and
+    # keeps the per-head decay tensor at one chunk's footprint)
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, Q, H, P), 1, 0).astype(jnp.float32)
+    Bc = jnp.moveaxis(Bmat.reshape(Bsz, nc, Q, G, N)[:, :, :, 0], 1, 0)
+    Cc = jnp.moveaxis(Cmat.reshape(Bsz, nc, Q, G, N)[:, :, :, 0], 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, Q, H), 1, 0)                # (nc,B,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(R, inp):
+        x_i, B_i, C_i, dt_i = inp                  # (B,Q,H,P) (B,Q,N) .. (B,Q,H)
+        dA = dt_i * A
+        seg = jnp.cumsum(dA, axis=1)                                   # (B,Q,H)
+        seg_end = seg[:, -1:, :]
+        # intra-chunk masked quadratic (the "attention-like" SSD term)
+        CB = jnp.einsum("bin,bjn->bij", C_i, B_i)                      # (B,Q,Q)
+        decay = jnp.exp(jnp.clip(seg[:, :, None, :] - seg[:, None, :, :],
+                                 -60.0, 0.0))                          # (B,Q,Q,H)
+        att = CB[..., None] * decay * jnp.where(mask[None, ..., None], 1.0, 0.0)
+        att = att * dt_i[:, None, :, :]                                # weight dt_j
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, x_i)
+        # contribution of the running inter-chunk state
+        in_decay = jnp.exp(jnp.clip(seg, -60.0, 0.0))
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", C_i, in_decay, R)
+        # update running state
+        state_w = jnp.exp(jnp.clip(seg_end - seg, -60.0, 0.0)) * dt_i
+        S = jnp.einsum("bjn,bjh,bjhp->bhnp", B_i, state_w, x_i)
+        R_new = (R * jnp.exp(jnp.clip(seg_end[:, 0, :], -60.0, 0.0))
+                 [:, :, None, None] + S)
+        return R_new, y_intra + y_inter
+
+    init = jnp.zeros((Bsz, H, N, P))
+    _, yc = jax.lax.scan(chunk_step, init, (xc, Bc, Cc, dtc))          # (nc,B,Q,H,P)
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, L, H, P)
+    y = y + params["d_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, L, d_inner).astype(hidden.dtype)
+    y = layers.rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent step)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(batch: int, d_model: int, cfg: SSMCfg):
+    d_inner, H = dims(d_model, cfg)
+    conv_ch = d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.d_state, cfg.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv - 1, conv_ch), DTYPE),
+    }
+
+
+def mamba_decode_step(params, hidden, state, cfg: SSMCfg, d_model: int):
+    """hidden: (B, 1, D); state: {ssm (B,H,N,P), conv (B,K-1,CH)}."""
+    Bsz = hidden.shape[0]
+    d_inner, H = dims(d_model, cfg)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    proj = hidden[:, 0] @ params["w_in"]                               # (B, dproj)
+    z, x, Bmat, Cmat, dt = _split_proj(proj, d_inner, G, N, H)
+    xBC = jnp.concatenate([x, Bmat, Cmat], axis=-1)                    # (B, CH)
+    window = jnp.concatenate([state["conv"], xBC[:, None]], axis=1)    # (B,K,CH)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+                           + params["conv_b"])
+    new_conv = window[:, 1:]
+    x, Bmat, Cmat = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    x = x.reshape(Bsz, H, P).astype(jnp.float32)
+    Bv = Bmat.reshape(Bsz, G, N)[:, 0].astype(jnp.float32)             # (B,N)
+    Cv = Cmat.reshape(Bsz, G, N)[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    A = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * A)                                            # (B,H)
+
+    new_ssm = (state["ssm"] * decay[:, :, None, None]
+               + jnp.einsum("bn,bh,bhp->bhnp", Bv, dt, x))
+    y = jnp.einsum("bn,bhnp->bhp", Cv, new_ssm)
+    y = y + params["d_skip"][None, :, None] * x
+    y = y.reshape(Bsz, d_inner).astype(hidden.dtype)
+    y = layers.rmsnorm({"scale": params["norm_scale"]},
+                       y * jax.nn.silu(z))
+    out = (y @ params["w_out"])[:, None]
+    return out, {"ssm": new_ssm, "conv": new_conv}

@@ -1,0 +1,226 @@
+"""Unified model API.
+
+build_model(cfg) -> Model with:
+  init(rng)                          -> (params, roles)
+  apply(params, batch)               -> (hidden (B,S,D), aux)    [train/prefill]
+  logits(params, hidden_chunk)       -> (.., V_padded)           [chunked head]
+  decode_step(params, token, caches, position) -> (logits, caches)
+  init_caches(batch, seq)            -> cache pytree
+  input_specs(shape)                 -> (batch dict of ShapeDtypeStruct)
+  count_params / flops helpers
+
+Batch layout (synthetic pipeline produces exactly this):
+  tokens (B, S) i32, plus per-family extras:
+    encdec : enc_frames (B, S_enc, D) stub frame embeddings
+    vlm    : img_embed (B, n_img, D) stub patch embeddings
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import layers, mamba, transformer
+from repro.models.layers import DTYPE
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    apply: Callable
+    logits: Callable
+    decode_step: Callable
+    init_caches: Callable
+    input_specs: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    V = cfg.padded_vocab
+
+    def init(rng):
+        keys = jax.random.split(rng, 5)
+        params, roles = {}, {}
+        p, r = layers.init_embedding(keys[0], V, cfg.d_model)
+        params["embed"], roles["embed"] = p, r
+        p, r = transformer.init_stack(keys[1], cfg)
+        params["decoder"], roles["decoder"] = p, r
+        p, r = layers.init_rmsnorm(cfg.d_model)
+        params["ln_f"], roles["ln_f"] = p, r
+        if not cfg.tie_embeddings:
+            p, r = layers.init_lm_head(keys[2], cfg.d_model, V)
+            params["head"], roles["head"] = p, r
+        if cfg.encoder is not None:
+            enc_pat = (("B", "D"),)
+            p, r = transformer.init_stack(
+                keys[3], cfg, pattern=enc_pat,
+                n_super=cfg.encoder.n_layers, first_k_dense=0)
+            params["encoder"], roles["encoder"] = p, r
+            p, r = layers.init_rmsnorm(cfg.d_model)
+            params["ln_enc"], roles["ln_enc"] = p, r
+        return params, roles
+
+    def _memory(params, batch):
+        if cfg.encoder is not None:
+            enc, _ = transformer.apply_stack(params["encoder"],
+                                             batch["enc_frames"].astype(DTYPE),
+                                             cfg, pattern=(("B", "D"),))
+            return layers.rmsnorm(params["ln_enc"], enc, cfg.norm_eps)
+        if cfg.n_img_tokens:
+            return batch["img_embed"].astype(DTYPE)
+        return None
+
+    def apply(params, batch):
+        x = layers.embed(params["embed"], batch["tokens"]).astype(DTYPE)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, DTYPE)
+        memory = _memory(params, batch)
+        x, aux = transformer.apply_stack(params["decoder"], x, cfg,
+                                         memory=memory)
+        return layers.rmsnorm(params["ln_f"], x, cfg.norm_eps), aux
+
+    def logits(params, hidden):
+        if cfg.tie_embeddings:
+            return hidden @ params["embed"]["table"].T
+        return hidden @ params["head"]["w"]
+
+    def init_caches(batch, seq):
+        mem_len = 0
+        if cfg.encoder is not None or cfg.n_img_tokens:
+            mem_len = cfg.n_img_tokens or seq
+        return transformer.init_caches(cfg, batch, seq, memory_len=mem_len)
+
+    def decode_step(params, token, caches, position):
+        """token: (B,1) i32. Returns (logits (B,1,V), new caches)."""
+        x = layers.embed(params["embed"], token).astype(DTYPE)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, DTYPE)
+        x, caches = transformer.decode_stack(params["decoder"], x, caches,
+                                             position, cfg)
+        h = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return logits(params, h), caches
+
+    def input_specs(shape: ShapeCfg):
+        """ShapeDtypeStruct stand-ins for the entry-point batch (no alloc)."""
+        B, S = shape.global_batch, shape.seq
+        sds = jax.ShapeDtypeStruct
+        if shape.kind in ("train", "prefill"):
+            if cfg.encoder is not None:
+                return {
+                    "tokens": sds((B, cfg.encoder.dec_seq), jnp.int32),
+                    "enc_frames": sds((B, S, cfg.d_model), DTYPE),
+                    "labels": sds((B, cfg.encoder.dec_seq), jnp.int32),
+                }
+            batch = {"tokens": sds((B, S), jnp.int32),
+                     "labels": sds((B, S), jnp.int32)}
+            if cfg.n_img_tokens:
+                batch["img_embed"] = sds((B, cfg.n_img_tokens, cfg.d_model),
+                                         DTYPE)
+            return batch
+        # decode: one new token against a seq-length cache
+        caches = jax.eval_shape(lambda: init_caches(B, S))
+        return {"token": sds((B, 1), jnp.int32),
+                "position": sds((), jnp.int32),
+                "caches": caches}
+
+    return Model(cfg, init, apply, logits, decode_step, init_caches,
+                 input_specs)
+
+
+def abstract_init(model: Model, rng=None):
+    """(param ShapeDtypeStructs, roles) without allocating anything."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    captured = {}
+
+    def f(k):
+        p, r = model.init(k)
+        captured["roles"] = r        # python-side, built during tracing
+        return p
+
+    shapes = jax.eval_shape(f, rng)
+    return shapes, captured["roles"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter / FLOP accounting (analytic; used by roofline + MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def _block_params(cfg: ModelConfig, mixer: str, ffn: str,
+                  active_only: bool = False) -> int:
+    D = cfg.d_model
+    n = 2 * D                       # ln1 + ln2-ish
+    if mixer == "M":
+        d_inner, H = mamba.dims(D, cfg.ssm)
+        G, N = cfg.ssm.n_groups, cfg.ssm.d_state
+        d_proj = 2 * d_inner + 2 * G * N + H
+        n += D * d_proj + cfg.ssm.conv * (d_inner + 2 * G * N) + 3 * H \
+            + d_inner + d_inner * D
+    else:
+        a = cfg.attn
+        n += D * a.n_heads * a.head_dim * 2 + D * a.n_kv * a.head_dim * 2
+        if mixer == "C":
+            n += D * a.n_heads * a.head_dim * 2 + D * a.n_kv * a.head_dim * 2
+    if ffn == "D":
+        mult = 3 if cfg.swiglu else 2
+        n += mult * D * cfg.d_ff
+    elif ffn == "E":
+        m = cfg.moe
+        mult = 3 if cfg.swiglu else 2
+        per_expert = mult * D * m.d_expert
+        routed = (m.top_k if active_only else m.n_routed) * per_expert
+        n += routed + m.n_shared * per_expert + D * m.n_routed
+    return n
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    n = cfg.padded_vocab * cfg.d_model          # embedding
+    if not cfg.tie_embeddings:
+        n += cfg.padded_vocab * cfg.d_model     # head
+    for i in range(cfg.first_k_dense):
+        n += _block_params(cfg, cfg.pattern[0][0], "D", active_only)
+    for mx, ff in cfg.pattern:
+        n += cfg.n_super * _block_params(cfg, mx, ff, active_only)
+    if cfg.encoder is not None:
+        n += cfg.encoder.n_layers * _block_params(cfg, "B", "D", active_only)
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCfg) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params, D = tokens);
+    2*N*D for inference steps; attention quadratic term added explicitly."""
+    n_active = count_params(cfg, active_only=True)
+    B, S = shape.global_batch, shape.seq
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * n_active * tokens
+        mult = 3.0
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_active * tokens
+        mult = 1.0
+    else:  # decode: one token, but attention reads the full cache
+        tokens = B
+        flops = 2.0 * n_active * tokens
+        mult = 1.0
+    # attention score+value FLOPs
+    a = cfg.attn
+    attn_layers = sum(1 for mx, _ in cfg.pattern if mx in "AGWLCB")
+    n_attn = cfg.n_super * attn_layers + cfg.first_k_dense
+    if cfg.encoder is not None and shape.kind != "decode":
+        n_attn += cfg.encoder.n_layers
+    hdim = a.n_heads * a.head_dim
+    if shape.kind == "decode":
+        ctx = S
+        flops += mult * n_attn * 4.0 * B * ctx * hdim
+    else:
+        per_layer = 0.0
+        for mx, _ in cfg.pattern:
+            if mx in ("W", "L"):
+                ctx = min(a.window, S)
+            elif mx in ("A", "G", "C", "B"):
+                ctx = S / 2  # causal average
+            else:
+                continue
+            per_layer += 4.0 * B * S * ctx * hdim
+        flops += mult * cfg.n_super * per_layer
+    return flops

@@ -1,0 +1,139 @@
+"""Mixture-of-experts FFN: top-k token-choice routing with capacity-bounded
+sort-based dispatch (gather -> per-expert dense matmul -> weighted scatter).
+
+This is the production-style "dropping" MoE: capacity C per expert is static
+(C = ceil(T_group * k / E * capacity_factor)), tokens beyond capacity are
+dropped (standard at scale). Expert weights are stacked (E, ...) so they shard
+over the model axis (expert parallelism) when E % mesh_model == 0, otherwise
+the policy shards d_expert inside each expert (TP-in-expert, e.g. mixtral's
+8 experts on a 16-way axis).
+
+Dispatch carries an explicit group dimension G (cfg.dispatch_groups). With
+G = the data-parallel degree, routing/sort/gather/scatter are shard-local and
+the G axis of every heavy tensor is pinned to the data axis via the
+activation-sharding context — without the pin, GSPMD replicates the dispatch
+buffers and all-reduces their gradients through the layer scan (§Perf A1/A2).
+
+Router styles:
+  mixtral/jamba : top-k over logits, softmax over the selected k
+  deepseek      : softmax over all experts, top-k, renormalize
+Shared experts (deepseek) run densely on every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoECfg
+from repro.models.layers import DTYPE, _normal
+from repro.sharding.context import constrain
+
+
+def init_moe(key, d_model: int, cfg: MoECfg, swiglu: bool = True):
+    ks = jax.random.split(key, 8)
+    E, F = cfg.n_routed, cfg.d_expert
+    s_in, s_out = d_model ** -0.5, F ** -0.5
+    params = {
+        "router": _normal(ks[0], (d_model, E), s_in).astype(jnp.float32),
+        "w_gate": _normal(ks[1], (E, d_model, F), s_in),
+        "w_up": _normal(ks[2], (E, d_model, F), s_in),
+        "w_down": _normal(ks[3], (E, F, d_model), s_out),
+    }
+    roles = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "expert_ff"),
+        "w_up": ("experts", "embed", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "embed"),
+    }
+    if cfg.n_shared:
+        Fs = cfg.n_shared * F
+        params["ws_gate"] = _normal(ks[4], (d_model, Fs), s_in)
+        params["ws_up"] = _normal(ks[5], (d_model, Fs), s_in)
+        params["ws_down"] = _normal(ks[6], (Fs, d_model), Fs ** -0.5)
+        roles["ws_gate"] = ("embed", "ff")
+        roles["ws_up"] = ("embed", "ff")
+        roles["ws_down"] = ("ff", "embed")
+    return params, roles
+
+
+def _capacity(n_tokens: int, cfg: MoECfg) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_routed * cfg.capacity_factor)
+    return max((c + 7) // 8 * 8, 8)
+
+
+def moe_ffn(params, x, cfg: MoECfg, swiglu: bool = True):
+    """x: (B, S, D) -> (B, S, D), plus aux metrics dict."""
+    B, S, D = x.shape
+    T = B * S
+    G = max(cfg.dispatch_groups, 1)
+    if T % G or (T // G) * cfg.top_k < cfg.n_routed:
+        G = 1
+    if G > 1:
+        xg = constrain(x.reshape(G, T // G, 1, D), ("data", None, None, None))
+        yg, aux = jax.vmap(
+            lambda xs: _moe_dispatch(params, xs, cfg, swiglu))(xg)
+        yg = constrain(yg, ("data", None, None, None))
+        return yg.reshape(B, S, D), jax.tree.map(jnp.mean, aux)
+    return _moe_dispatch(params, x, cfg, swiglu)
+
+
+def _moe_dispatch(params, x, cfg: MoECfg, swiglu: bool = True):
+    """Single-group dispatch with flat 1-D indices (the 2-D grouped-index
+    variant lowered to pathological scatters under GSPMD — §Perf C4)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_routed, cfg.top_k
+    C = _capacity(T, cfg)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])          # (T, E)
+    if cfg.router_pre_softmax:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, K)           # (T, K)
+        gates = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    else:
+        top_logits, expert_idx = jax.lax.top_k(logits, K)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+
+    # --- sort-based dispatch with static capacity ---
+    flat_e = expert_idx.reshape(T * K)                            # (TK,)
+    flat_g = gates.reshape(T * K)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_tok[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * K) - starts[se]                          # rank in expert
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)                   # overflow slot
+    tok_of_slot = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        st.astype(jnp.int32))[:-1].reshape(E, C)
+    gate_of_slot = jnp.zeros((E * C + 1,)).at[slot].set(sg)[:-1].reshape(E, C)
+    valid_slot = jnp.zeros((E * C + 1,)).at[slot].set(
+        keep.astype(jnp.float32))[:-1].reshape(E, C)
+
+    xe = xf[tok_of_slot] * valid_slot[..., None].astype(x.dtype)  # (E, C, D)
+    if swiglu:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, params["w_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])          # (E, C, D)
+
+    w = (gate_of_slot * valid_slot)[..., None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[tok_of_slot.reshape(-1)].add(
+        (ye * w).reshape(E * C, D))
+
+    if cfg.n_shared:
+        if swiglu:
+            g = jax.nn.silu(xf @ params["ws_gate"])
+            out = out + (g * (xf @ params["ws_up"])) @ params["ws_down"]
+        else:
+            out = out + jax.nn.gelu(xf @ params["ws_up"]) @ params["ws_down"]
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    fe = jnp.zeros((E,)).at[flat_e].add(1.0) / (T * K)
+    aux = {"lb_loss": E * jnp.sum(me * fe),
+           "drop_frac": 1.0 - jnp.sum(valid_slot) / (T * K)}
+    return out.reshape(B, S, D), aux

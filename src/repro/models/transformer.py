@@ -1,0 +1,268 @@
+"""Block assembly: super-block patterns scanned over depth.
+
+A block = (mixer, ffn) pair from the config pattern. Parameters for each
+pattern position are stacked over the number of super-blocks and consumed by
+`lax.scan`, so HLO size is independent of depth. Supports dense / MoE FFNs,
+attention (full / SWA / local / global / bidirectional / +cross) and Mamba2
+mixers, optional leading dense layers (deepseek), and a separate encoder stack
+(whisper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers, mamba, moe
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+PyTree = Any
+
+MIXER_KIND = {"A": "causal", "G": "causal", "W": "window", "L": "window",
+              "B": "bidir", "C": "causal"}
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, mixer: str, ffn: str):
+    keys = jax.random.split(key, 6)
+    params, roles = {}, {}
+    p, r = init_rmsnorm(cfg.d_model)
+    params["ln1"], roles["ln1"] = p, r
+    if mixer == "M":
+        p, r = mamba.init_mamba(keys[0], cfg.d_model, cfg.ssm)
+    else:
+        p, r = attn_mod.init_attention(keys[0], cfg.d_model, cfg.attn)
+    params["mixer"], roles["mixer"] = p, r
+    if mixer == "C":
+        p, r = attn_mod.init_attention(keys[1], cfg.d_model, cfg.attn)
+        params["xattn"], roles["xattn"] = p, r
+        p, r = init_rmsnorm(cfg.d_model)
+        params["ln_x"], roles["ln_x"] = p, r
+    if ffn == "D":
+        p, r = init_rmsnorm(cfg.d_model)
+        params["ln2"], roles["ln2"] = p, r
+        p, r = layers.init_mlp(keys[2], cfg.d_model, cfg.d_ff, cfg.swiglu)
+        params["ffn"], roles["ffn"] = p, r
+    elif ffn == "E":
+        p, r = init_rmsnorm(cfg.d_model)
+        params["ln2"], roles["ln2"] = p, r
+        p, r = moe.init_moe(keys[2], cfg.d_model, cfg.moe, cfg.swiglu)
+        params["ffn"], roles["ffn"] = p, r
+    return params, roles
+
+
+def apply_block(params, x, cfg: ModelConfig, mixer: str, ffn: str,
+                memory=None, positions=None):
+    """x: (B,S,D). memory: (B,S_kv,D) for cross blocks. Returns (x, aux)."""
+    from repro.sharding.context import constrain
+    seq_spec = ("data", "model", None)
+    aux = {}
+    if cfg.seq_shard:
+        x = constrain(x, seq_spec)
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if mixer == "M":
+        out = mamba.mamba_block(params["mixer"], h, cfg.ssm, cfg.d_model)
+    else:
+        # RoPE everywhere (whisper's sinusoidal absolute embeddings replaced by
+        # RoPE — recorded simplification, DESIGN.md §6).
+        out = attn_mod.self_attention(params["mixer"], h, cfg.attn,
+                                      MIXER_KIND[mixer], positions)
+    # named so the 'collectives' remat policy can save post-all-reduce
+    # activations (remat's re-forward then skips the TP collectives, §Perf B4)
+    x = x + jax.ad_checkpoint.checkpoint_name(out, "mixer_out")
+    if mixer == "C" and memory is not None:
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attention(params["xattn"], h, memory, cfg.attn)
+    if cfg.seq_shard:
+        x = constrain(x, seq_spec)
+    if ffn == "D":
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        x = x + jax.ad_checkpoint.checkpoint_name(
+            layers.mlp(params["ffn"], h, cfg.swiglu), "ffn_out")
+    elif ffn == "E":
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        out, moe_aux = moe.moe_ffn(params["ffn"], h, cfg.moe, cfg.swiglu)
+        x = x + jax.ad_checkpoint.checkpoint_name(out, "ffn_out")
+        aux["lb_loss"] = moe_aux["lb_loss"]
+    if cfg.seq_shard:
+        x = constrain(x, seq_spec)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ModelConfig, pattern=None, n_super=None,
+               first_k_dense=None):
+    pattern = pattern if pattern is not None else cfg.pattern
+    n_super = n_super if n_super is not None else cfg.n_super
+    first_k = cfg.first_k_dense if first_k_dense is None else first_k_dense
+    params, roles = {"first": [], "supers": {}}, {"first": [], "supers": {}}
+    keys = jax.random.split(key, len(pattern) + first_k)
+    for i in range(first_k):
+        p, r = init_block(keys[i], cfg, pattern[0][0], "D")
+        params["first"].append(p)
+        roles["first"].append(r)
+    for i, (mx, ff) in enumerate(pattern):
+        sub = jax.random.split(keys[first_k + i], n_super)
+        fn = functools.partial(init_block, cfg=cfg, mixer=mx, ffn=ff)
+        p = jax.vmap(lambda k: fn(k)[0])(sub)          # stacked (n_super, ...)
+        _, r = init_block(keys[first_k + i], cfg, mx, ff)
+        params["supers"][str(i)] = p
+        roles["supers"][str(i)] = jax.tree.map(
+            lambda t: ("layers",) + t, r,
+            is_leaf=lambda t: isinstance(t, tuple))
+    return params, roles
+
+
+def apply_stack(params, x, cfg: ModelConfig, pattern=None, memory=None,
+                positions=None):
+    pattern = pattern if pattern is not None else cfg.pattern
+    aux_sum = jnp.zeros(())
+    for i, p in enumerate(params["first"]):
+        x, aux = apply_block(p, x, cfg, pattern[0][0], "D", memory, positions)
+
+    def super_block(carry, block_params):
+        x, aux_sum = carry
+        for i, (mx, ff) in enumerate(pattern):
+            x, aux = apply_block(block_params[str(i)], x, cfg, mx, ff,
+                                 memory, positions)
+            if "lb_loss" in aux:
+                aux_sum = aux_sum + aux["lb_loss"]
+        return (x, aux_sum), None
+
+    if cfg.remat != "none":
+        policy = None                       # 'full': recompute everything
+        if cfg.remat == "block":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        elif cfg.remat == "collectives":
+            # save post-all-reduce block outputs: the backward re-forward
+            # recomputes matmuls but never re-runs TP collectives
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "ffn_out")
+        super_block = jax.checkpoint(super_block, policy=policy)
+    (x, aux_sum), _ = jax.lax.scan(super_block, (x, aux_sum),
+                                   params["supers"])
+    return x, {"lb_loss": aux_sum}
+
+
+# ---------------------------------------------------------------------------
+# Decode stacks (single-token, with caches)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int, pattern=None,
+                n_super=None, memory_len: int = 0):
+    """ShapeDtype-compatible cache pytree for one decoder stack."""
+    pattern = pattern if pattern is not None else cfg.pattern
+    n_super = n_super if n_super is not None else cfg.n_super
+    K, hd = cfg.attn.n_kv, cfg.attn.head_dim
+    caches = {"first": [], "supers": {}}
+    window = cfg.attn.window
+
+    for i in range(cfg.first_k_dense):
+        caches["first"].append(
+            {"k": jnp.zeros((batch, seq, K, hd), layers.DTYPE),
+             "v": jnp.zeros((batch, seq, K, hd), layers.DTYPE)})
+    for i, (mx, ff) in enumerate(pattern):
+        if mx == "M":
+            d_inner, H = mamba.dims(cfg.d_model, cfg.ssm)
+            conv_ch = d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+            c = {"ssm": jnp.zeros((n_super, batch, H, cfg.ssm.d_state,
+                                   cfg.ssm.head_dim), jnp.float32),
+                 "conv": jnp.zeros((n_super, batch, cfg.ssm.conv - 1, conv_ch),
+                                   layers.DTYPE)}
+        else:
+            S = min(seq, window) if mx in ("W", "L") and window else seq
+            c = {"k": jnp.zeros((n_super, batch, S, K, hd), layers.DTYPE),
+                 "v": jnp.zeros((n_super, batch, S, K, hd), layers.DTYPE)}
+            if mx == "C" and memory_len:
+                c["xk"] = jnp.zeros((n_super, batch, memory_len, K, hd),
+                                    layers.DTYPE)
+                c["xv"] = jnp.zeros((n_super, batch, memory_len, K, hd),
+                                    layers.DTYPE)
+        caches["supers"][str(i)] = c
+    return caches
+
+
+def _decode_attn_block(params, x, cache, position, cfg: ModelConfig, mixer):
+    """Windowed mixers keep a ring-buffer cache of size `window`: every live
+    entry is inside the window by construction, so the attention mask only
+    needs the fill count (min(position, S))."""
+    windowed = mixer in ("W", "L") and cfg.attn.window
+    S = cache["k"].shape[1]
+    wpos = position % S if windowed else position
+    eff_pos = jnp.minimum(position, S) if windowed else position
+    out, k_new, v_new = attn_mod.decode_attend(
+        params["mixer"], rmsnorm(params["ln1"], x, cfg.norm_eps),
+        cache["k"], cache["v"], eff_pos, cfg.attn, window=0)
+    x = x + out
+    new_cache = dict(cache)
+    upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+        c, n.astype(c.dtype), wpos, axis=1)
+    new_cache["k"] = upd(cache["k"], k_new)
+    new_cache["v"] = upd(cache["v"], v_new)
+    if mixer == "C" and "xk" in cache:
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attention(params["xattn"], h,
+                                         (cache["xk"], cache["xv"]), cfg.attn)
+    return x, new_cache
+
+
+def decode_block(params, x, cache, position, cfg: ModelConfig, mixer, ffn):
+    if mixer == "M":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        out, new_state = mamba.mamba_decode_step(params["mixer"], h, cache,
+                                                 cfg.ssm, cfg.d_model)
+        x = x + out
+        new_cache = new_state
+    else:
+        x, new_cache = _decode_attn_block(params, x, cache, position, cfg,
+                                          mixer)
+    if ffn == "D":
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        x = x + layers.mlp(params["ffn"], h, cfg.swiglu)
+    elif ffn == "E":
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        out, _ = moe.moe_ffn(params["ffn"], h, cfg.moe, cfg.swiglu)
+        x = x + out
+    return x, new_cache
+
+
+def decode_stack(params, x, caches, position, cfg: ModelConfig, pattern=None):
+    """Single-token decode through the stack.
+
+    Uses fori_loop with the stacked caches held in the loop *carry* and
+    updated in place (`.at[i].set`): XLA aliases while-loop carries, so the
+    multi-GB KV/SSM caches live in ONE buffer. A scan with caches as xs/ys
+    double-buffers them (measured +40% decode residency, §Perf D2).
+    """
+    pattern = pattern if pattern is not None else cfg.pattern
+    new_first = []
+    for p, c in zip(params["first"], caches["first"]):
+        x, nc = decode_block(p, x, c, position, cfg, pattern[0][0], "D")
+        new_first.append(nc)
+
+    def body(i, carry):
+        x, cache_st = carry
+        for j, (mx, ff) in enumerate(pattern):
+            bp = jax.tree.map(lambda p: p[i], params["supers"][str(j)])
+            bc = jax.tree.map(lambda c: c[i], cache_st[str(j)])
+            x, nc = decode_block(bp, x, bc, position, cfg, mx, ff)
+            cache_st = dict(cache_st)
+            cache_st[str(j)] = jax.tree.map(
+                lambda c, n: c.at[i].set(n.astype(c.dtype)),
+                cache_st[str(j)], nc)
+        return (x, cache_st)
+
+    x, new_supers = jax.lax.fori_loop(0, cfg.n_super, body,
+                                      (x, caches["supers"]))
+    return x, {"first": new_first, "supers": new_supers}

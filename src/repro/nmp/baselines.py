@@ -1,0 +1,74 @@
+"""NMP techniques and mapping baselines (paper §6.3).
+
+Schedulers (pick the compute cube for each windowed op, vectorized):
+  BNMP : Active-Routing-style — compute at the destination operand's cube.
+  LDB  : load-balancing — compute at the first source's cube (sources
+         outnumber destinations, so this spreads NMP-table load).
+  PEI  : cache-aware instruction offloading — if one source hits the CPU
+         cache, offload the op (with the cached value) to the *other* source's
+         cube; if both hit, offload to src1's cube; if neither, behave like
+         BNMP (locality-aware default).
+
+Mappers:
+  TOM  : epoch-profiled physical remapping — evaluate K candidate
+         consecutive-page stride-hash mappings for a profiling window each,
+         then commit the best co-locating mapping for the epoch group.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nmp.config import NMPConfig
+
+BNMP, LDB, PEI = "bnmp", "ldb", "pei"
+TECHNIQUES = (BNMP, LDB, PEI)
+
+
+def schedule(technique: str, dcube, s1cube, s2cube, hot1, hot2):
+    """Vectorized compute-cube selection. hot1/hot2: bool, PEI cache-hit flags."""
+    if technique == BNMP:
+        return dcube
+    if technique == LDB:
+        return s1cube
+    if technique == PEI:
+        neither = ~(hot1 | hot2)
+        both = hot1 & hot2
+        cc = jnp.where(hot1, s2cube, s1cube)          # offload to the missing side
+        cc = jnp.where(both, s1cube, cc)
+        cc = jnp.where(neither, dcube, cc)
+        return cc
+    raise ValueError(technique)
+
+
+# ---------------------------------------------------------------------------
+# TOM
+# ---------------------------------------------------------------------------
+
+def tom_candidates(n_pages: int, cfg: NMPConfig, n_candidates: int = 6) -> jnp.ndarray:
+    """Candidate page->cube mappings: consecutive-page groups of stride 2^k
+    hashed round-robin over cubes (the paper's 'best data co-location' family).
+
+    Returns (K, n_pages) int32.
+    """
+    pages = jnp.arange(n_pages)
+    cands = []
+    for k in range(n_candidates):
+        stride = 1 << k
+        cands.append(((pages // stride) % cfg.n_cubes).astype(jnp.int32))
+    return jnp.stack(cands)
+
+
+def tom_colocation_score(mapping: jnp.ndarray, dest, src1, src2, valid,
+                         n_cubes: int = 16) -> jnp.ndarray:
+    """Paper: pick the candidate with best co-location and least data movement.
+
+    Score = operand co-location fraction minus a load-imbalance penalty (a
+    perfectly co-locating mapping that funnels every op into one cube moves all
+    its traffic through one region — the 'data movement' TOM avoids)."""
+    d, a, b = mapping[dest], mapping[src1], mapping[src2]
+    co = ((a == d).astype(jnp.float32) + (b == d).astype(jnp.float32)) / 2.0
+    co_frac = jnp.sum(co * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+    ops_c = jnp.zeros((n_cubes,)).at[d].add(valid)
+    total = jnp.maximum(jnp.sum(valid), 1.0)
+    imb = (jnp.max(ops_c) / total - 1.0 / n_cubes) / (1.0 - 1.0 / n_cubes)
+    return co_frac - 0.5 * jnp.clip(imb, 0.0, 1.0)

@@ -1,0 +1,596 @@
+"""Trace-driven, epoch-based NMP timing engine.
+
+The entire simulate -> observe -> act -> learn loop is a single `jax.lax.scan`
+(one step per agent invocation epoch), so an AIMM run is one compiled XLA
+program: the continual-learning agent literally trains inside the simulator.
+
+Epoch model (documented cost model; see DESIGN.md §2):
+
+  window   : the next `window_sizes[interval_level]` ops of the trace
+  schedule : technique (BNMP/LDB/PEI) picks a compute cube per op, then the
+             AIMM compute-remap table overrides per-page
+  route    : packets s1->c, s2->c, c->d over XY routes; per-link flit loads
+  time     : cycles = mc_inject + max(compute, link, dram serialization)
+             + mean latency + NMP-table overflow stalls + migration stalls
+  feedback : OPC = ops/cycles; reward = sign(dOPC); state vector from
+             system EMAs + hot-page info cache entry (paper Fig. 3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import actions as act_mod
+from repro.core import agent as agent_mod
+from repro.core.actions import (DEFAULT, FAR_COMPUTE, FAR_DATA, INC_INTERVAL,
+                                DEC_INTERVAL, NEAR_COMPUTE, NEAR_DATA,
+                                SOURCE_COMPUTE, N_ACTIONS)
+from repro.core.agent import AgentConfig, AgentState
+from repro.core.dqn import DQNConfig
+from repro.core.reward import compute_reward
+from repro.core.state import StateSpec, build_state
+from repro.nmp import baselines
+from repro.nmp.config import NMPConfig
+from repro.nmp.migration import migration_cost
+from repro.nmp.network import hop_count, link_loads, n_links, nearest_mc
+from repro.nmp.paging import (PageInfoCache, default_alloc, init_page_cache,
+                              lookup_or_insert, push_hist)
+from repro.nmp.traces import Trace
+
+MAPPERS = ("none", "tom", "aimm")
+
+# Energy counter layout (see stats.py).
+EN_PAGE_CACHE, EN_NMP_BUF, EN_MIG_Q, EN_MDMA, EN_WEIGHT, EN_REPLAY, \
+    EN_STATE_BUF, EN_NET_BIT_HOPS, EN_MEM_BITS, EN_N = range(10)
+
+
+class EnvState(NamedTuple):
+    page_to_cube: jnp.ndarray      # (P,) i32 data mapping
+    compute_remap: jnp.ndarray     # (P,) i32, -1 = none
+    op_ptr: jnp.ndarray            # () i32
+    interval_level: jnp.ndarray    # () i32 (stride-1 epochs between invocations)
+    since_invoke: jnp.ndarray      # () i32 epochs since last agent invocation
+    span_sum: jnp.ndarray          # () f32 OPC sum of current action tenure
+    span_n: jnp.ndarray            # () f32
+    prev_span_mean: jnp.ndarray    # () f32 (-1 = none yet)
+    opc_ring: jnp.ndarray          # (T,) f32 per-phase OPC one iteration ago
+    ref_sum: jnp.ndarray           # () f32 same-phase reference sum for tenure
+    ref_n: jnp.ndarray             # () f32
+    page_access_ema: jnp.ndarray   # (P,) f32
+    nmp_occ: jnp.ndarray           # (C,) f32
+    rb_hit: jnp.ndarray            # (C,) f32
+    mc_queue: jnp.ndarray          # (M,) f32
+    global_act_hist: jnp.ndarray   # (Hg,) i32
+    cache: PageInfoCache
+    pending_mig_loads: jnp.ndarray  # (L,) f32
+    pending_mig_stall: jnp.ndarray  # () f32
+    prev_state_vec: jnp.ndarray    # (S,) f32
+    prev_action: jnp.ndarray       # () i32
+    recent_pages: jnp.ndarray      # (R,) i32 pages acted on recently (-1 empty)
+    remap_age: jnp.ndarray         # (P,) i32 epochs since compute remap set
+    rng: jax.Array
+    # TOM state
+    tom_scores: jnp.ndarray        # (K,) f32
+    tom_active: jnp.ndarray        # () i32 candidate idx in use (-1 = default)
+    # cumulative stats
+    cycles: jnp.ndarray
+    ops_done: jnp.ndarray
+    hops_sum: jnp.ndarray
+    util_sum: jnp.ndarray
+    epochs: jnp.ndarray
+    mig_count: jnp.ndarray
+    mig_page_mask: jnp.ndarray     # (P,) f32
+    access_total: jnp.ndarray
+    access_on_migrated: jnp.ndarray
+    energy: jnp.ndarray            # (EN_N,) f64-ish counters (f32)
+
+
+class EpisodeResult(NamedTuple):
+    env: EnvState
+    agent: AgentState | None
+    metrics: dict[str, jnp.ndarray]   # per-epoch stacked
+
+
+def _init_env(trace_np: dict, n_pages: int, cfg: NMPConfig, spec: StateSpec,
+              seed: int, page_table: np.ndarray | None,
+              t_ring: int = 1) -> EnvState:
+    P, C, M = n_pages, cfg.n_cubes, cfg.n_mcs
+    L = n_links(cfg)
+    pt = page_table if page_table is not None else default_alloc(P, cfg)
+    return EnvState(
+        page_to_cube=jnp.asarray(pt, jnp.int32),
+        compute_remap=jnp.full((P,), -1, jnp.int32),
+        op_ptr=jnp.zeros((), jnp.int32),
+        interval_level=jnp.zeros((), jnp.int32),    # invoke every epoch initially
+        since_invoke=jnp.zeros((), jnp.int32),
+        span_sum=jnp.zeros(()),
+        span_n=jnp.zeros(()),
+        prev_span_mean=jnp.full((), -1.0),
+        opc_ring=jnp.zeros((t_ring,)),
+        ref_sum=jnp.zeros(()),
+        ref_n=jnp.zeros(()),
+        page_access_ema=jnp.zeros((P,)),
+        nmp_occ=jnp.zeros((C,)),
+        rb_hit=jnp.full((C,), 0.5),
+        mc_queue=jnp.zeros((M,)),
+        global_act_hist=jnp.zeros((spec.global_act_hist,), jnp.int32),
+        cache=init_page_cache(cfg, spec.hop_hist, spec.lat_hist,
+                              spec.mig_hist, spec.act_hist),
+        pending_mig_loads=jnp.zeros((L,)),
+        pending_mig_stall=jnp.zeros(()),
+        prev_state_vec=jnp.zeros((spec.dim,)),
+        prev_action=jnp.zeros((), jnp.int32),
+        recent_pages=jnp.full((max(cfg.recent_ring, 1),), -1, jnp.int32),
+        remap_age=jnp.zeros((P,), jnp.int32),
+        rng=jax.random.PRNGKey(seed),
+        tom_scores=jnp.zeros((6,)),
+        tom_active=jnp.full((), -1, jnp.int32),
+        cycles=jnp.zeros(()),
+        ops_done=jnp.zeros(()),
+        hops_sum=jnp.zeros(()),
+        util_sum=jnp.zeros(()),
+        epochs=jnp.zeros(()),
+        mig_count=jnp.zeros(()),
+        mig_page_mask=jnp.zeros((P,)),
+        access_total=jnp.zeros(()),
+        access_on_migrated=jnp.zeros(()),
+        energy=jnp.zeros((EN_N,)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One epoch
+# ---------------------------------------------------------------------------
+
+def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
+           rw_pages: jnp.ndarray, n_ops: int, cfg: NMPConfig, spec: StateSpec,
+           technique: str, mapper: str, agent_cfg: AgentConfig | None,
+           tom_cands: jnp.ndarray | None, explore: bool,
+           forced_action: int = -1):
+    P = env.page_to_cube.shape[0]
+    C = cfg.n_cubes
+    W = cfg.w_max
+    window = jnp.asarray(cfg.epoch_ops, jnp.int32)
+
+    # ---- window fetch (trace arrays pre-padded by W) ----
+    sl = lambda a: jax.lax.dynamic_slice(a, (env.op_ptr,), (W,))
+    dest, src1, src2 = sl(trace["dest"]), sl(trace["src1"]), sl(trace["src2"])
+    idx = jnp.arange(W)
+    valid = ((idx < window) & (env.op_ptr + idx < n_ops)).astype(jnp.float32)
+    w_valid = valid.sum()
+    has_ops = w_valid > 0
+
+    # ---- data mapping (TOM may override the page table) ----
+    if mapper == "tom":
+        eff_table = jnp.where(env.tom_active >= 0,
+                              tom_cands[jnp.maximum(env.tom_active, 0)],
+                              env.page_to_cube)
+    else:
+        eff_table = env.page_to_cube
+    dcube = eff_table[dest]
+    s1cube = eff_table[src1]
+    s2cube = eff_table[src2]
+
+    # ---- schedule compute cube ----
+    thresh = jnp.sort(env.page_access_ema)[int(P * (1 - cfg.pei_hot_frac)) - 1]
+    hot1 = env.page_access_ema[src1] >= jnp.maximum(thresh, 1e-6)
+    hot2 = env.page_access_ema[src2] >= jnp.maximum(thresh, 1e-6)
+    ccube = baselines.schedule(technique, dcube, s1cube, s2cube, hot1, hot2)
+    if mapper == "aimm":
+        # compute-remap table: -1 none, 0..C-1 fixed cube, C = "source mode"
+        # (schedule at the op's own first-source cube, paper action (vi)).
+        cr = env.compute_remap[dest]
+        cr = jnp.where(cr >= 0, cr, env.compute_remap[src1])
+        cr = jnp.where(cr >= 0, cr, env.compute_remap[src2])
+        ccube = jnp.where(cr == C, s1cube, jnp.where(cr >= 0, cr, ccube))
+
+    # ---- route: flows s1->c, s2->c, c->d (skip zero-hop flows implicitly) ----
+    fsrc = jnp.concatenate([s1cube, s2cube, ccube])
+    fdst = jnp.concatenate([ccube, ccube, dcube])
+    fw = jnp.concatenate([valid, valid, valid]) * cfg.packet_flits
+    loads = link_loads(fsrc, fdst, fw, cfg) + env.pending_mig_loads
+
+    hops_op = (hop_count(s1cube, ccube, cfg.mesh_x)
+               + hop_count(s2cube, ccube, cfg.mesh_x)
+               + hop_count(ccube, dcube, cfg.mesh_x)).astype(jnp.float32)
+    hops_total = jnp.sum(hops_op * valid)
+    mean_hops = hops_total / jnp.maximum(w_valid, 1.0)
+
+    # ---- per-cube compute load & NMP-table occupancy ----
+    ops_c = jnp.zeros((C,)).at[ccube].add(valid)
+    table_excess = jnp.maximum(ops_c - cfg.nmp_table_size, 0.0).sum()
+    compute_serial = jnp.max(ops_c) * cfg.t_op / cfg.cube_issue_rate
+    eff_cubes = jnp.square(ops_c.sum()) / jnp.maximum(jnp.sum(ops_c ** 2), 1.0)
+    util = eff_cubes / C
+
+    # ---- row-buffer model: distinct (cube,page) pairs accessed per cube ----
+    acc_cube = jnp.concatenate([dcube, s1cube, s2cube])
+    acc_page = jnp.concatenate([dest, src1, src2])
+    acc_valid = jnp.concatenate([valid, valid, valid])
+    key = jnp.where(acc_valid > 0, acc_cube.astype(jnp.int32) * P + acc_page,
+                    jnp.int32(C * P + 7))
+    skey = jnp.sort(key)
+    newrow = jnp.concatenate([jnp.ones((1,), bool), skey[1:] != skey[:-1]])
+    newrow = newrow & (skey < C * P)
+    sort_cube = (skey // P).astype(jnp.int32)
+    distinct_c = jnp.zeros((C,)).at[jnp.clip(sort_cube, 0, C - 1)].add(
+        newrow.astype(jnp.float32) * (sort_cube < C))
+    acc_c = jnp.zeros((C,)).at[acc_cube].add(acc_valid)
+    hit_c = jnp.where(acc_c > 0, 1.0 - distinct_c / jnp.maximum(acc_c, 1.0), 0.5)
+    lat_c = hit_c * cfg.t_dram_hit + (1 - hit_c) * cfg.t_dram_miss
+    dram_serial = jnp.max(acc_c * lat_c) / (cfg.n_vaults * 4.0)
+
+    # ---- epoch cycles & OPC ----
+    mcq = jnp.zeros((cfg.n_mcs,)).at[nearest_mc(cfg)[dcube]].add(valid)
+    mc_inject = w_valid / (cfg.n_mcs * cfg.mc_issue_rate)
+    # Hottest-link serialization with superlinear queuing amplification: a link
+    # loaded far above the network average queues disproportionately (3-stage
+    # routers, token flow control), so imbalance costs more than linearly.
+    mean_load = jnp.sum(loads) / loads.shape[0]
+    imbalance = jnp.max(loads) / jnp.maximum(mean_load, 1.0)
+    link_serial = jnp.max(loads) * (1.0 + (cfg.congestion_alpha - 1.0)
+                                    * jnp.clip((imbalance - 1.0) / 4.0, 0.0, 1.0))
+    mean_lat = (mean_hops * cfg.t_router + cfg.packet_flits
+                + jnp.sum(acc_c * lat_c) / jnp.maximum(acc_c.sum(), 1.0))
+    # agent invocation cadence: the interval actions control how many epochs an
+    # action's tenure lasts (paper intervals {100,125,167,250} cycles, modeled
+    # as {1,2,3,4} fixed-size epochs between invocations).
+    stride = env.interval_level + 1
+    invoke = (env.since_invoke + 1 >= stride) & has_ops
+    agent_overhead = jnp.where(invoke, cfg.t_agent, 0.0) if mapper == "aimm" else 0.0
+    cycles = (agent_overhead + mc_inject
+              + jnp.maximum(jnp.maximum(compute_serial, link_serial), dram_serial)
+              + mean_lat + table_excess * cfg.t_op + env.pending_mig_stall)
+    cycles = jnp.where(has_ops, cycles, 0.0)
+    opc = jnp.where(has_ops, w_valid / jnp.maximum(cycles, 1.0), 0.0)
+    # The performance monitor accumulates OPC over the current action's tenure.
+    # Reward for the previous action (paper: +-1 on performance improvement or
+    # degradation): compare the tenure-mean OPC against the *same trace phase
+    # one kernel iteration ago* (like-for-like; content-controlled), falling
+    # back to the previous tenure's mean while the phase ring is still filling.
+    span_sum = env.span_sum + opc
+    span_n = env.span_n + jnp.where(has_ops, 1.0, 0.0)
+    cur_mean = span_sum / jnp.maximum(span_n, 1.0)
+    T_ring = env.opc_ring.shape[0]
+    slot = env.epochs.astype(jnp.int32) % T_ring
+    ring_ready = (env.epochs >= T_ring) & has_ops
+    ref_sum = env.ref_sum + jnp.where(ring_ready, env.opc_ring[slot], 0.0)
+    ref_n = env.ref_n + jnp.where(ring_ready, 1.0, 0.0)
+    ref_mean = ref_sum / jnp.maximum(ref_n, 1.0)
+    use_ring = ref_n >= span_n - 0.5
+    r_ring = compute_reward(cur_mean, ref_mean, deadband=0.01)
+    r_prev = jnp.where(env.prev_span_mean >= 0.0,
+                       compute_reward(cur_mean, env.prev_span_mean,
+                                      deadband=0.01), 0.0)
+    reward = jnp.where(invoke,
+                       jnp.where(use_ring & (ref_n > 0), r_ring, r_prev), 0.0)
+    opc_ring = jnp.where(has_ops, env.opc_ring.at[slot].set(opc), env.opc_ring)
+
+    # ---- EMAs / system info ----
+    d = 0.7
+    nmp_occ = d * env.nmp_occ + (1 - d) * ops_c
+    rb_hit = d * env.rb_hit + (1 - d) * hit_c
+    mc_queue = d * env.mc_queue + (1 - d) * mcq
+    page_ema = 0.9 * env.page_access_ema
+    page_ema = page_ema.at[dest].add(valid).at[src1].add(valid).at[src2].add(valid)
+
+    # ---- hot page + page-info cache update ----
+    # The MCs take turns feeding the agent page info (§5.1 round-robin); pages
+    # acted on in the last few invocations are skipped so invocations cover the
+    # hot set instead of hammering one page.
+    touch_cnt = jnp.zeros((P,)).at[dest].add(valid).at[src1].add(valid).at[src2].add(valid)
+    recently = jnp.zeros((P,)).at[env.recent_pages].set(
+        (env.recent_pages >= 0).astype(jnp.float32))
+    hot_page = jnp.argmax(touch_cnt * (1.0 - recently)).astype(jnp.int32)
+    touches_hot = touch_cnt[hot_page]
+    is_hot_op = ((dest == hot_page) | (src1 == hot_page) | (src2 == hot_page)) & (valid > 0)
+    first_hot = jnp.argmax(is_hot_op)
+    ccube_hot = ccube[first_hot]
+    s1cube_hot = s1cube[first_hot]
+    hops_hot = hops_op[first_hot]
+
+    cache, ent = lookup_or_insert(env.cache, hot_page)
+    cache = cache._replace(
+        freq=cache.freq.at[ent].add(1.0),
+        accesses=cache.accesses.at[ent].add(touches_hot),
+        hop_hist=push_hist(cache.hop_hist, ent, hops_hot),
+        lat_hist=push_hist(cache.lat_hist, ent, mean_lat),
+    )
+
+    # ---- mapper-specific control ----
+    env_rng, k_agent, k_nbr = jax.random.split(env.rng, 3)
+    mig_latency = jnp.zeros(())
+    mig_stall = jnp.zeros(())
+    mig_loads = jnp.zeros_like(env.pending_mig_loads)
+    migrated = jnp.zeros(())
+    page_to_cube = env.page_to_cube
+    compute_remap = env.compute_remap
+    interval_level = env.interval_level
+    tom_scores, tom_active = env.tom_scores, env.tom_active
+    action = jnp.zeros((), jnp.int32)
+    new_agent = agent
+
+    if mapper == "aimm":
+        # state vector (paper Fig. 3)
+        page_rate = touches_hot / jnp.maximum(3.0 * w_valid, 1.0)
+        mig_per_acc = cache.migrations[ent] / jnp.maximum(cache.accesses[ent], 1.0)
+        svec = build_state(
+            spec, nmp_occ, rb_hit, mc_queue, env.global_act_hist,
+            interval_level, page_rate, mig_per_acc,
+            cache.hop_hist[ent], cache.lat_hist[ent], cache.mig_hist[ent],
+            cache.act_hist[ent], eff_table[hot_page], ccube_hot,
+            occ_norm=float(cfg.nmp_table_size),
+        )
+        if forced_action >= 0:
+            # scripted policy (ablations / mechanism-ceiling studies): bypass
+            # the DQN and take `forced_action` at every invocation.
+            action = jnp.where(invoke, forced_action, DEFAULT).astype(jnp.int32)
+            new_agent = agent
+        else:
+            # Fig. 4-2 flow: at an invocation, the completed transition
+            # (s_{t-1}, a_{t-1}, r_{t-1}, s_t) enters the replay buffer; the
+            # DNN trains continually (every epoch) off the replay buffer.
+            sel = lambda new, old: jax.tree.map(
+                lambda n, o: jnp.where(invoke & (env.prev_span_mean >= 0), n, o),
+                new, old)
+            agent_obs = agent_mod.observe(agent, env.prev_state_vec,
+                                          env.prev_action, reward, svec)
+            new_agent = sel(agent_obs, agent)
+            new_agent = agent_mod.train(new_agent, agent_cfg)
+            action_g, new_agent = agent_mod.act(new_agent, agent_cfg, svec,
+                                                explore)
+            action = jnp.where(invoke, action_g, DEFAULT).astype(jnp.int32)
+
+        # --- apply action (no-ops unless this epoch is an invocation) ---
+        nbr = act_mod.random_neighbor(k_nbr, ccube_hot, cfg.mesh_x, cfg.mesh_y)
+        diag = act_mod.diagonal_opposite(ccube_hot, cfg.mesh_x, cfg.mesh_y)
+        is_data = (action == NEAR_DATA) | (action == FAR_DATA)
+        is_comp = ((action == NEAR_COMPUTE) | (action == FAR_COMPUTE)
+                   | (action == SOURCE_COMPUTE))
+        data_tgt = jnp.where(action == NEAR_DATA, nbr, diag)
+        comp_tgt = jnp.where(action == NEAR_COMPUTE, nbr,
+                             jnp.where(action == FAR_COMPUTE, diag,
+                                       jnp.asarray(C, jnp.int32)))
+
+        old_cube = page_to_cube[hot_page]
+        mig_latency, mig_stall, mig_loads = migration_cost(
+            old_cube, data_tgt, rw_pages[hot_page], touches_hot, cfg)
+        moved = is_data & (data_tgt != old_cube) & invoke
+        migrated = moved.astype(jnp.float32)
+        page_to_cube = page_to_cube.at[hot_page].set(
+            jnp.where(moved, data_tgt, old_cube).astype(jnp.int32))
+        mig_latency = jnp.where(moved, mig_latency, 0.0)
+        mig_stall = jnp.where(moved, mig_stall, 0.0)
+        mig_loads = jnp.where(moved, mig_loads, 0.0)
+
+        # DEFAULT on the selected page restores its default mapping (clears the
+        # compute-remap entry) — gives the agent an undo for stale remaps.
+        entry = jnp.where(is_comp, comp_tgt,
+                          jnp.where(action == DEFAULT,
+                                    jnp.asarray(-1, jnp.int32),
+                                    compute_remap[hot_page]))
+        compute_remap = compute_remap.at[hot_page].set(
+            jnp.where(invoke, entry, compute_remap[hot_page]).astype(jnp.int32))
+        # Finite compute-remap table: entries expire after remap_ttl epochs
+        # (LRU-style eviction under table pressure) — bounds stale-remap damage.
+        remap_age = jnp.where(compute_remap >= 0, env.remap_age + 1, 0)
+        expired = remap_age > cfg.remap_ttl
+        compute_remap = jnp.where(expired, -1, compute_remap)
+        remap_age = jnp.where(expired, 0, remap_age)
+        interval_level = jnp.where(invoke,
+                                   act_mod.adjust_interval(interval_level, action),
+                                   interval_level)
+
+        cache = cache._replace(
+            migrations=cache.migrations.at[ent].add(migrated),
+            mig_hist=jnp.where(moved,
+                               push_hist(cache.mig_hist, ent, mig_latency),
+                               cache.mig_hist),
+            act_hist=jnp.where(invoke,
+                               push_hist(cache.act_hist, ent,
+                                         action.astype(jnp.float32)),
+                               cache.act_hist),
+        )
+        gah = jnp.where(invoke,
+                        jnp.concatenate([env.global_act_hist[1:], action[None]]),
+                        env.global_act_hist)
+    else:
+        svec = env.prev_state_vec
+        gah = env.global_act_hist
+
+    if mapper == "tom":
+        K = tom_cands.shape[0]
+        period = K + 8                 # K profiling windows + 8 commit windows
+        phase = (env.epochs.astype(jnp.int32)) % period
+        # profiling: evaluate candidate `phase` on this window
+        def score_k(k):
+            return baselines.tom_colocation_score(tom_cands[k], dest, src1,
+                                                  src2, valid, C)
+        scores_all = jax.vmap(score_k)(jnp.arange(K))
+        tom_scores = jnp.where(phase < K,
+                               tom_scores.at[jnp.clip(phase, 0, K - 1)].set(
+                                   scores_all[jnp.clip(phase, 0, K - 1)]),
+                               tom_scores)
+        commit = phase == K
+        best = jnp.argmax(tom_scores).astype(jnp.int32)
+        prev_map = jnp.where(tom_active >= 0,
+                             tom_cands[jnp.maximum(tom_active, 0)],
+                             env.page_to_cube)
+        changed = jnp.sum((tom_cands[best] != prev_map).astype(jnp.float32))
+        tom_active = jnp.where(commit, best, tom_active)
+        # remap data movement: amortized one-time link traffic + stall
+        mig_stall = jnp.where(commit, changed * cfg.page_flits / (n_links(cfg) * 8.0),
+                              0.0)
+        migrated = jnp.where(commit, changed, 0.0)
+
+    # ---- accesses on migrated pages (Fig. 10 stat) ----
+    mig_mask = env.mig_page_mask
+    if mapper == "aimm":
+        mig_mask = mig_mask.at[hot_page].set(
+            jnp.maximum(mig_mask[hot_page], migrated))
+    acc_mig = (jnp.sum(mig_mask[dest] * valid) + jnp.sum(mig_mask[src1] * valid)
+               + jnp.sum(mig_mask[src2] * valid))
+
+    # ---- energy counters ----
+    en = env.energy
+    en = en.at[EN_MEM_BITS].add(w_valid * 3 * cfg.packet_bytes * 8)
+    en = en.at[EN_NET_BIT_HOPS].add(hops_total * cfg.packet_bytes * 8
+                                    + migrated * cfg.page_bytes * 8 * 2)
+    en = en.at[EN_PAGE_CACHE].add(2 * w_valid)
+    en = en.at[EN_NMP_BUF].add(2 * w_valid)
+    if mapper == "aimm":
+        en = en.at[EN_MIG_Q].add(2 * migrated)
+        en = en.at[EN_MDMA].add(migrated * cfg.page_flits)
+        bs = agent_cfg.dqn.batch_size
+        inv = invoke.astype(jnp.float32)
+        en = en.at[EN_WEIGHT].add(inv + 3 * bs)  # inference + fwd/bwd batch
+        en = en.at[EN_REPLAY].add(inv + bs)
+        en = en.at[EN_STATE_BUF].add(2.0 * inv)
+
+    new_env = EnvState(
+        page_to_cube=page_to_cube,
+        compute_remap=compute_remap,
+        op_ptr=env.op_ptr + window,
+        interval_level=interval_level,
+        since_invoke=jnp.where(invoke, 0,
+                               env.since_invoke
+                               + jnp.where(has_ops, 1, 0)).astype(jnp.int32),
+        span_sum=jnp.where(invoke, 0.0, span_sum),
+        span_n=jnp.where(invoke, 0.0, span_n),
+        prev_span_mean=jnp.where(invoke, cur_mean, env.prev_span_mean),
+        opc_ring=opc_ring,
+        ref_sum=jnp.where(invoke, 0.0, ref_sum),
+        ref_n=jnp.where(invoke, 0.0, ref_n),
+        page_access_ema=page_ema,
+        nmp_occ=nmp_occ,
+        rb_hit=rb_hit,
+        mc_queue=mc_queue,
+        global_act_hist=gah,
+        cache=cache,
+        pending_mig_loads=mig_loads,
+        pending_mig_stall=mig_stall,
+        prev_state_vec=jnp.where(invoke, svec, env.prev_state_vec),
+        prev_action=jnp.where(invoke, action, env.prev_action).astype(jnp.int32),
+        recent_pages=(jnp.where(invoke,
+                                jnp.concatenate([env.recent_pages[1:],
+                                                 hot_page[None]]),
+                                env.recent_pages)
+                      if mapper == "aimm" else env.recent_pages),
+        remap_age=(remap_age if mapper == "aimm" else env.remap_age),
+        rng=env_rng,
+        tom_scores=tom_scores,
+        tom_active=tom_active,
+        cycles=env.cycles + cycles,
+        ops_done=env.ops_done + w_valid,
+        hops_sum=env.hops_sum + hops_total,
+        util_sum=env.util_sum + jnp.where(has_ops, util, 0.0),
+        epochs=env.epochs + jnp.where(has_ops, 1.0, 0.0),
+        mig_count=env.mig_count + migrated * (1.0 if mapper == "aimm" else 0.0),
+        mig_page_mask=mig_mask,
+        access_total=env.access_total + 3 * w_valid,
+        access_on_migrated=env.access_on_migrated + acc_mig,
+        energy=en,
+    )
+    metrics = {
+        "opc": opc, "cycles": cycles, "reward": reward,
+        "action": action, "mean_hops": mean_hops, "util": util,
+        "invoke": invoke.astype(jnp.float32), "valid": w_valid,
+    }
+    return new_env, new_agent, metrics
+
+
+# ---------------------------------------------------------------------------
+# Episode runner
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_ops", "cfg", "spec", "technique",
+                                   "mapper", "agent_cfg", "n_epochs", "explore",
+                                   "forced_action"))
+def _run_scan(trace, rw_pages, env, agent, tom_cands, n_ops, cfg, spec,
+              technique, mapper, agent_cfg, n_epochs, explore,
+              forced_action=-1):
+    def body(carry, _):
+        env, agent = carry
+        env, agent, m = _epoch(env, agent, trace, rw_pages, n_ops, cfg, spec,
+                               technique, mapper, agent_cfg, tom_cands, explore,
+                               forced_action)
+        return (env, agent), m
+
+    (env, agent), ms = jax.lax.scan(body, (env, agent), None, length=n_epochs)
+    return env, agent, ms
+
+
+def state_spec_for(cfg: NMPConfig) -> StateSpec:
+    return StateSpec(n_cubes=cfg.n_cubes, n_mcs=cfg.n_mcs)
+
+
+def default_agent_cfg(cfg: NMPConfig) -> AgentConfig:
+    """Default AIMM hyperparameters.
+
+    gamma=0: the tenure reward already integrates the action's effect over its
+    own horizon (like-for-like vs the previous kernel iteration), so mapping
+    control is contextual-bandit-shaped; bootstrapping with large gamma only
+    amplified TD noise at these sample counts (see EXPERIMENTS.md §Paper).
+    """
+    spec = state_spec_for(cfg)
+    return AgentConfig(dqn=DQNConfig(state_dim=spec.dim, n_actions=N_ACTIONS,
+                                     gamma=0.0))
+
+
+def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
+                technique: str = "bnmp", mapper: str = "none",
+                agent: AgentState | None = None,
+                agent_cfg: AgentConfig | None = None,
+                seed: int = 0, page_table: np.ndarray | None = None,
+                explore: bool = True, forced_action: int = -1) -> EpisodeResult:
+    """Run one episode (= one pass over the trace) and return final stats.
+
+    `agent` persists across episodes (continual learning); pass the returned
+    agent back in to keep training. Env state is reset each episode, matching
+    the paper's protocol ("simulation states are cleared except the DNN").
+    """
+    assert mapper in MAPPERS and technique in baselines.TECHNIQUES
+    spec = state_spec_for(cfg)
+    if mapper == "aimm":
+        agent_cfg = agent_cfg or default_agent_cfg(cfg)
+        if agent is None and forced_action < 0:
+            agent = agent_mod.init_agent(jax.random.PRNGKey(seed + 1), agent_cfg)
+    n_ops = trace.n_ops
+    n_epochs = int(np.ceil(n_ops / cfg.epoch_ops)) + 1
+
+    pad = cfg.w_max
+    tr = {k: jnp.asarray(np.concatenate([v, np.zeros(pad, v.dtype)]))
+          for k, v in trace.as_dict().items() if k != "program_id"}
+    rw = jnp.asarray(trace.read_write)
+    iter_ops = trace.iter_ops or trace.n_ops
+    t_ring = int(np.clip(iter_ops // cfg.epoch_ops, 1, n_epochs + 1))
+    env = _init_env(tr, trace.n_pages, cfg, spec, seed, page_table, t_ring)
+    tom_cands = baselines.tom_candidates(trace.n_pages, cfg)
+
+    env, agent, ms = _run_scan(tr, rw, env, agent, tom_cands, n_ops, cfg, spec,
+                               technique, mapper, agent_cfg, n_epochs, explore,
+                               forced_action)
+    return EpisodeResult(env, agent, ms)
+
+
+def run_program(trace: Trace, cfg: NMPConfig = NMPConfig(),
+                technique: str = "bnmp", mapper: str = "none",
+                episodes: int = 5, seed: int = 0,
+                page_table: np.ndarray | None = None,
+                agent_cfg: AgentConfig | None = None,
+                agent: AgentState | None = None) -> list[EpisodeResult]:
+    """Paper §6.1 protocol: run the application episode `episodes` times,
+    clearing simulation state between runs but keeping the DNN."""
+    results = []
+    for e in range(episodes):
+        res = run_episode(trace, cfg, technique, mapper, agent=agent,
+                          agent_cfg=agent_cfg, seed=seed + e,
+                          page_table=page_table)
+        agent = res.agent
+        results.append(res)
+    return results

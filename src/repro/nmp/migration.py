@@ -1,0 +1,41 @@
+"""Page migration model (paper §5.3).
+
+A data-remap decision enqueues (page, new_cube) into the migration system.
+The MDMA streams the 4 KB frame over the XY route old->new:
+
+  * traffic   : page_flits x hops, charged to the link-load histogram of the
+                following epoch (migration shares the memory network),
+  * latency   : DMA serialization + per-hop routing, reported back to the MC
+                and recorded in the page's migration-latency history,
+  * blocking  : RW pages are locked during migration (coherence) — ops touching
+                the page in-flight stall; RO pages migrate non-blocking with
+                only a residual cost (old frame serves reads until drained).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nmp.config import NMPConfig
+from repro.nmp.network import hop_count, link_loads
+
+
+def migration_cost(old_cube: jnp.ndarray, new_cube: jnp.ndarray,
+                   is_rw: jnp.ndarray, touches: jnp.ndarray,
+                   cfg: NMPConfig) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cost of migrating one page.
+
+    touches: number of window ops touching the page while it migrates.
+    Returns (latency_cycles, stall_cycles, link_load_vector).
+    """
+    hops = hop_count(old_cube, new_cube, cfg.mesh_x).astype(jnp.float32)
+    moving = (hops > 0).astype(jnp.float32)
+    latency = moving * (cfg.page_flits + hops * cfg.t_router + cfg.t_page_walk)
+    # Blocked accesses overlap the DMA; the epoch-level stall is a fraction of
+    # the DMA duration (blocking >> non-blocking, which only pays an old-frame
+    # drain residual).
+    stall_frac = jnp.where(is_rw, 0.25, 0.05)
+    stall = moving * (stall_frac * latency
+                      + 4.0 * jnp.minimum(touches.astype(jnp.float32), 8.0))
+    loads = link_loads(old_cube[None], new_cube[None],
+                       jnp.asarray([cfg.page_flits]), cfg) * moving
+    return latency, stall, loads

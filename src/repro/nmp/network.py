@@ -1,0 +1,60 @@
+"""Memory-cube network model: 2D mesh, static XY routing, link-load histograms.
+
+Link indexing (undirected, contention aggregates both directions):
+  horizontal link (y, x <-> x+1):  id = y * (X-1) + x          for x in [0, X-1)
+  vertical   link (x, y <-> y+1):  id = H + x * (Y-1) + y      for y in [0, Y-1)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nmp.config import NMPConfig
+
+
+def hop_count(a: jnp.ndarray, b: jnp.ndarray, mesh_x: int) -> jnp.ndarray:
+    """Manhattan distance between cube ids (XY routing path length)."""
+    ax, ay = a % mesh_x, a // mesh_x
+    bx, by = b % mesh_x, b // mesh_x
+    return jnp.abs(ax - bx) + jnp.abs(ay - by)
+
+
+def n_links(cfg: NMPConfig) -> int:
+    return cfg.mesh_y * (cfg.mesh_x - 1) + cfg.mesh_x * (cfg.mesh_y - 1)
+
+
+def link_loads(src: jnp.ndarray, dst: jnp.ndarray, weight: jnp.ndarray,
+               cfg: NMPConfig) -> jnp.ndarray:
+    """Accumulate flow `weight` (flits) over every link on each XY route.
+
+    src, dst: (F,) cube ids; weight: (F,) flits. Returns (n_links,) loads.
+    XY routing: traverse X at the source row, then Y at the destination column.
+    Fully vectorized via indicator outer-products (mesh dims are tiny).
+    """
+    X, Y = cfg.mesh_x, cfg.mesh_y
+    sx, sy = src % X, src // X
+    dx, dy = dst % X, dst // X
+
+    lo_x, hi_x = jnp.minimum(sx, dx), jnp.maximum(sx, dx)
+    xs = jnp.arange(X - 1)
+    ind_h = ((xs[None, :] >= lo_x[:, None]) & (xs[None, :] < hi_x[:, None]))
+    row_oh = (jnp.arange(Y)[None, :] == sy[:, None])
+    # loads_h[y, x] = sum_f weight_f * ind_h[f, x] * row_oh[f, y]
+    loads_h = jnp.einsum("f,fy,fx->yx", weight.astype(jnp.float32),
+                         row_oh.astype(jnp.float32), ind_h.astype(jnp.float32))
+
+    lo_y, hi_y = jnp.minimum(sy, dy), jnp.maximum(sy, dy)
+    ys = jnp.arange(Y - 1)
+    ind_v = ((ys[None, :] >= lo_y[:, None]) & (ys[None, :] < hi_y[:, None]))
+    col_oh = (jnp.arange(X)[None, :] == dx[:, None])
+    loads_v = jnp.einsum("f,fx,fy->xy", weight.astype(jnp.float32),
+                         col_oh.astype(jnp.float32), ind_v.astype(jnp.float32))
+
+    return jnp.concatenate([loads_h.reshape(-1), loads_v.reshape(-1)])
+
+
+def nearest_mc(cfg: NMPConfig) -> jnp.ndarray:
+    """Static cube -> nearest-MC index map (ties broken by MC order)."""
+    cubes = jnp.arange(cfg.n_cubes)
+    mcs = jnp.asarray(cfg.mc_cubes)
+    d = hop_count(cubes[:, None], mcs[None, :], cfg.mesh_x)
+    return jnp.argmin(d, axis=1).astype(jnp.int32)

@@ -1,0 +1,121 @@
+"""Paging structures: page->cube table, page-info cache (§5.1), allocators.
+
+The virtual->physical mapping is modeled at its actionable granularity: a
+`page -> cube` table (which memory cube hosts the page frame). Two initial
+allocation policies are provided:
+
+  default_alloc : round-robin interleave across cubes (the physical-to-DRAM
+                  hash of a conventional controller),
+  hoard_alloc   : NMP-aware HOARD (§6.3) — each program's pages are allocated
+                  from per-program chunks so a program's data is physically
+                  co-located (contiguous cube regions).
+
+The page-info cache is the paper's fully-associative, LFU-evicted structure in
+each MC, holding per-page access/migration counters plus hop / latency /
+migration-latency / action histories. We model the caches of all MCs as one
+pooled array (MCs take round-robin turns feeding the agent, so the pool is
+what the agent effectively sees).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nmp.config import NMPConfig
+
+
+def default_alloc(n_pages: int, cfg: NMPConfig, seed: int = 0) -> np.ndarray:
+    """Round-robin page interleaving across cubes."""
+    return (np.arange(n_pages) % cfg.n_cubes).astype(np.int32)
+
+
+def random_alloc(n_pages: int, cfg: NMPConfig, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.n_cubes, n_pages).astype(np.int32)
+
+
+def hoard_alloc(n_pages: int, cfg: NMPConfig, program_of_page: np.ndarray,
+                seed: int = 0) -> np.ndarray:
+    """HOARD-style: thread/program-private chunks -> contiguous cube regions.
+
+    Programs get disjoint, contiguous spans of cubes proportional to their page
+    counts; within a span, pages interleave across that span's cubes only.
+    """
+    program_of_page = np.asarray(program_of_page)
+    n_prog = int(program_of_page.max()) + 1
+    counts = np.bincount(program_of_page, minlength=n_prog).astype(np.float64)
+    share = np.maximum(np.round(counts / counts.sum() * cfg.n_cubes), 1).astype(int)
+    while share.sum() > cfg.n_cubes:
+        share[np.argmax(share)] -= 1
+    while share.sum() < cfg.n_cubes:
+        share[np.argmin(share)] += 1
+    start = np.concatenate([[0], np.cumsum(share)[:-1]])
+    table = np.zeros(n_pages, np.int32)
+    for p in range(n_prog):
+        idx = np.where(program_of_page == p)[0]
+        span = max(share[p], 1)
+        table[idx] = start[p] + (np.arange(idx.size) % span)
+    return table
+
+
+class PageInfoCache(NamedTuple):
+    """Pooled MC page-info cache (paper §5.1). All arrays leading dim = entries."""
+    tag: jnp.ndarray       # page id, -1 = empty
+    freq: jnp.ndarray      # LFU counter
+    accesses: jnp.ndarray  # total access count for the page
+    migrations: jnp.ndarray
+    hop_hist: jnp.ndarray  # (E, 8) communication hop counts
+    lat_hist: jnp.ndarray  # (E, 8) round-trip packet latencies
+    mig_hist: jnp.ndarray  # (E, 4) migration latencies
+    act_hist: jnp.ndarray  # (E, 4) actions taken on the page
+
+
+def init_page_cache(cfg: NMPConfig, hop_h=8, lat_h=8, mig_h=4, act_h=4) -> PageInfoCache:
+    E = cfg.page_cache_entries
+    return PageInfoCache(
+        tag=jnp.full((E,), -1, jnp.int32),
+        freq=jnp.zeros((E,), jnp.float32),
+        accesses=jnp.zeros((E,), jnp.float32),
+        migrations=jnp.zeros((E,), jnp.float32),
+        hop_hist=jnp.zeros((E, hop_h), jnp.float32),
+        lat_hist=jnp.zeros((E, lat_h), jnp.float32),
+        mig_hist=jnp.zeros((E, mig_h), jnp.float32),
+        act_hist=jnp.zeros((E, act_h), jnp.float32),
+    )
+
+
+def lookup_or_insert(cache: PageInfoCache, page: jnp.ndarray
+                     ) -> tuple[PageInfoCache, jnp.ndarray]:
+    """Find `page`'s entry; on miss, LFU-evict (victim content abandoned, §5.1).
+
+    Returns (cache, entry_index).
+    """
+    hit = cache.tag == page
+    found = jnp.any(hit)
+    hit_idx = jnp.argmax(hit)
+    victim = jnp.argmin(jnp.where(cache.tag < 0, -1.0, cache.freq))
+    idx = jnp.where(found, hit_idx, victim).astype(jnp.int32)
+
+    def clear(arr):
+        return arr.at[idx].set(jnp.zeros_like(arr[idx]))
+
+    cache = cache._replace(
+        tag=cache.tag.at[idx].set(page.astype(jnp.int32)),
+        freq=jnp.where(found, cache.freq, cache.freq.at[idx].set(0.0)),
+        accesses=jnp.where(found, cache.accesses, clear(cache.accesses)),
+        migrations=jnp.where(found, cache.migrations, clear(cache.migrations)),
+        hop_hist=jnp.where(found, cache.hop_hist, clear(cache.hop_hist)),
+        lat_hist=jnp.where(found, cache.lat_hist, clear(cache.lat_hist)),
+        mig_hist=jnp.where(found, cache.mig_hist, clear(cache.mig_hist)),
+        act_hist=jnp.where(found, cache.act_hist, clear(cache.act_hist)),
+    )
+    return cache, idx
+
+
+def push_hist(hist: jnp.ndarray, idx: jnp.ndarray, value: jnp.ndarray) -> jnp.ndarray:
+    """Shift entry `idx`'s history left and append `value`."""
+    row = hist[idx]
+    row = jnp.concatenate([row[1:], value[None].astype(jnp.float32)])
+    return hist.at[idx].set(row)

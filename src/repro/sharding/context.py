@@ -1,0 +1,57 @@
+"""Activation-sharding context: models stay mesh-agnostic, launchers install
+a policy that turns logical axis tags into with_sharding_constraint calls.
+
+    with sharding_ctx(mesh, policy):
+        ...  # model code calls constrain(x, ("data", None, "model"))
+
+Outside a context (unit tests, single-device runs) `constrain` is identity.
+Logical axes: 'data' -> the policy's data axes (('pod','data') on multi-pod),
+'model' -> the model axis. Dims that don't divide their mesh axes are left
+unconstrained (JAX rejects uneven shardings).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_STATE: dict = {"mesh": None, "dp": None}
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, policy):
+    old = dict(_STATE)
+    _STATE["mesh"] = mesh
+    _STATE["dp"] = policy.dp
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def _axis_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def constrain(x, axes: tuple):
+    """axes: logical tags per dim ('data' | 'model' | None)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for d, tag in zip(x.shape, axes):
+        ax = _STATE["dp"] if tag == "data" else ("model" if tag == "model"
+                                                 else None)
+        if ax is not None and d % _axis_size(mesh, ax) != 0:
+            ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,261 @@
+"""Sharding policies: semantic axis roles -> PartitionSpecs.
+
+Model init returns a `roles` pytree mirroring params, each leaf a tuple of
+axis-role names (see models.layers docstring). The policy maps roles onto the
+mesh, driven by divisibility (JAX rejects uneven argument shardings):
+
+  - Megatron TP on 'model': vocab, ff, merged q/kv head dims, MoE expert_ff or
+    expert axis (EP when n_routed % model == 0), mamba inner dims.
+  - FSDP fallback: when a role cannot shard (e.g. 40 heads on a 16-way axis is
+    irrelevant — merged dims still shard; only *activation* head sharding
+    changes), weights remain sharded and XLA gathers them per layer.
+  - ZeRO: optimizer moments take the param spec plus the data axis on the
+    largest remaining divisible dim.
+  - Decode caches: sequence-sharded over 'model' (flash-decoding SP);
+    long_500k (batch=1) shards sequence over every mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    model_axis: str = "model"
+    data_axes: tuple = ("data",)
+    moe_ep: bool = True
+    attn_tp: bool = True          # informational (activation-level choice)
+    zero_opt: bool = True
+    fsdp_params: bool = False     # shard params over data too (ZeRO-3 style)
+
+    @property
+    def dp(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+
+# Param bytes per chip above which TP-only param residency can't fit and
+# the policy adds data-axis (FSDP) param sharding.
+FSDP_THRESHOLD_BYTES = 8e9
+
+
+def resolve_policy(cfg: ModelConfig, mesh: Mesh) -> Policy:
+    from repro.models.model import count_params
+    model_size = mesh.shape["model"]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    moe_ep = bool(cfg.moe and cfg.moe.n_routed % model_size == 0
+                  and not cfg.moe.prefer_tp)
+    attn_tp = cfg.attn.n_heads % model_size == 0
+    fsdp = count_params(cfg) * 2 / model_size > FSDP_THRESHOLD_BYTES
+    return Policy(data_axes=data_axes, moe_ep=moe_ep, attn_tp=attn_tp,
+                  fsdp_params=fsdp)
+
+
+def _role_axis(role: str | None, pol: Policy, cfg: ModelConfig, dim: int,
+               model_size: int):
+    if role is None:
+        return None
+    table = {
+        "vocab": "model",
+        "ff": "model",
+        "qheads": "model",
+        "kvheads": "model",
+        "inner": "model",
+        "inner_proj": "model",
+        "conv_ch": "model",
+        "expert_ff": None if pol.moe_ep else "model",
+        "experts": "model" if pol.moe_ep else None,
+        "embed": None,
+        "heads": None,
+        "layers": None,
+    }
+    axis = table.get(role)
+    if axis == "model" and dim % model_size != 0:
+        return None                      # divisibility guard
+    return axis
+
+
+def param_specs(roles: PyTree, shapes: PyTree, cfg: ModelConfig,
+                mesh: Mesh) -> PyTree:
+    """PartitionSpec per param leaf from its role tuple + shape."""
+    pol = resolve_policy(cfg, mesh)
+    model_size = mesh.shape["model"]
+
+    data_size = int(np.prod([mesh.shape[a] for a in pol.data_axes]))
+
+    def one(role_tuple, shp):
+        dims = shp.shape
+        spec = []
+        used_model = False
+        for role, d in zip(role_tuple, dims):
+            ax = _role_axis(role, pol, cfg, d, model_size)
+            if ax == "model" and used_model:
+                ax = None                # one model axis per tensor
+            if ax == "model":
+                used_model = True
+            spec.append(ax)
+        if pol.fsdp_params:
+            # ZeRO-3: additionally shard the largest remaining dim over data
+            cands = [(d, i) for i, (d, s) in enumerate(zip(dims, spec))
+                     if s is None and d % data_size == 0 and d >= data_size]
+            if cands:
+                _, idx = max(cands)
+                spec[idx] = pol.dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, roles, shapes,
+                        is_leaf=lambda t: isinstance(t, tuple) and all(
+                            x is None or isinstance(x, str) for x in t))
+
+
+def zero_shard_specs(specs: PyTree, shapes: PyTree, mesh: Mesh,
+                     cfg: ModelConfig) -> PyTree:
+    """Optimizer-state shardings: param spec + data axis on the largest
+    remaining divisible dim (ZeRO-1 partitioning of moments)."""
+    pol = resolve_policy(cfg, mesh)
+    data_size = int(np.prod([mesh.shape[a] for a in pol.data_axes]))
+
+    def one(sharding, shp):
+        spec = list(sharding.spec) + [None] * (len(shp.shape)
+                                               - len(sharding.spec))
+        if any(s is not None and ("data" in (s if isinstance(s, tuple)
+                                             else (s,))) for s in spec):
+            return NamedSharding(mesh, P(*spec))    # already data-sharded
+        cands = [(d, i) for i, (d, s) in enumerate(zip(shp.shape, spec))
+                 if s is None and d % data_size == 0 and d >= data_size]
+        if cands:
+            _, idx = max(cands)
+            spec[idx] = pol.data_axes if len(pol.data_axes) > 1 else \
+                pol.data_axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs, shapes)
+
+
+def opt_state_specs(param_sharding: PyTree, param_shapes: PyTree, mesh: Mesh,
+                    cfg: ModelConfig, quantized: bool = False) -> PyTree:
+    """Shardings for the optimizer state pytree.
+
+    Plain: {'m','v'} fp32, ZeRO-sharded (param spec + data axis).
+    Quantized: {'mq','ms','vq','vs'} — payload (..., F/256, 256) inherits the
+    param's sharding with the last-dim axis moved to the F/256 dim; leaves
+    whose last dim doesn't divide 256 fall back to fp32 {'m','v'}.
+    """
+    from repro.train.optimizer import quantizable
+    z = zero_shard_specs(param_sharding, param_shapes, mesh, cfg)
+    if not quantized:
+        return {"m": z, "v": z}
+    model_size = mesh.shape["model"]
+
+    def one(sharding, zspec, shp):
+        if not quantizable(shp.shape):
+            return {"m": zspec, "v": zspec}
+        spec = list(sharding.spec) + [None] * (len(shp.shape)
+                                               - len(sharding.spec))
+        last = spec[-1]
+        nb = shp.shape[-1] // 256
+        axis_sz = {None: 1}
+        last_ok = last is None or nb % int(np.prod(
+            [mesh.shape[a] for a in (last if isinstance(last, tuple)
+                                     else (last,))])) == 0
+        qspec = NamedSharding(mesh, P(*spec[:-1],
+                                      last if last_ok else None, None))
+        sspec = NamedSharding(mesh, P(*spec[:-1], last if last_ok else None))
+        return {"mq": qspec, "ms": sspec, "vq": qspec, "v_lo": sspec,
+                "v_sc": sspec}
+
+    return jax.tree.map(one, param_sharding, z, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                specs_tree: PyTree) -> PyTree:
+    """Shardings matching model.input_specs(shape)."""
+    pol = resolve_policy(cfg, mesh)
+    dp = pol.dp
+    B = shape.global_batch
+    dp_size = int(np.prod([mesh.shape[a] for a in pol.data_axes]))
+    bspec = dp if B % dp_size == 0 else None
+
+    def spec_for(path_key: str, sds):
+        nd = len(sds.shape)
+        if path_key in ("tokens", "labels", "token"):
+            return NamedSharding(mesh, P(*([bspec] + [None] * (nd - 1))))
+        if path_key in ("enc_frames", "img_embed"):
+            return NamedSharding(mesh, P(*([bspec] + [None] * (nd - 1))))
+        if path_key == "position":
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P())
+
+    out = {}
+    for k, v in specs_tree.items():
+        if k == "caches":
+            out[k] = cache_specs(cfg, shape, mesh, v)
+        else:
+            out[k] = spec_for(k, v)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                caches: PyTree) -> PyTree:
+    """Decode-cache shardings.
+
+    Attention k/v (n_super, B, S, K, hd): sequence over 'model'
+    (flash-decoding); batch over data axes. With batch=1 (long_500k) the
+    sequence takes every axis. Mamba ssm (n_super, B, H, N, P): heads over
+    'model'. Conv (n_super, B, K-1, CH): channels over 'model'.
+    """
+    pol = resolve_policy(cfg, mesh)
+    model_size = mesh.shape["model"]
+    dp_size = int(np.prod([mesh.shape[a] for a in pol.data_axes]))
+    all_axes = pol.data_axes + ("model",)
+    all_size = dp_size * model_size
+
+    def one_leaf(path, sds):
+        dims = sds.shape
+        nd = len(dims)
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("ssm",):
+            lead = nd - 4
+            B, H = dims[lead], dims[lead + 1]
+            b = pol.dp if B % dp_size == 0 and B > 1 else None
+            h = "model" if H % model_size == 0 else None
+            return NamedSharding(mesh, P(*([None] * lead + [b, h, None, None])))
+        if name in ("conv",):
+            lead = nd - 3
+            B, CH = dims[lead], dims[lead + 2]
+            b = pol.dp if B % dp_size == 0 and B > 1 else None
+            c = "model" if CH % model_size == 0 else None
+            return NamedSharding(mesh, P(*([None] * lead + [b, None, c])))
+        # attention caches k/v/xk/xv: (..., B, S, K, hd)
+        lead = nd - 4
+        B, S = dims[lead], dims[lead + 1]
+        if B % dp_size == 0 and B > 1:
+            b = pol.dp
+            s = "model" if S % model_size == 0 else None
+        else:
+            b = None
+            s = all_axes if S % all_size == 0 else (
+                "model" if S % model_size == 0 else None)
+        return NamedSharding(mesh, P(*([None] * lead + [b, s, None, None])))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one_leaf(p, l) for p, l in flat])
+
+
+def count_devices(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

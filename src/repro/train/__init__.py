@@ -1,0 +1,3 @@
+"""Training/serving substrate: optimizers, steps, data, checkpoints, loops."""
+from repro.train.optimizer import adamw, quantized_adamw, sgd  # noqa: F401
+from repro.train.train_step import make_train_step, make_loss_fn  # noqa: F401

@@ -1,0 +1,135 @@
+"""Sharded checkpointing with atomic commits, retention, resharding restore,
+and async writes — the fault-tolerance substrate for the train loop.
+
+Layout:
+  <dir>/step_<k>.tmp/...   while writing
+  <dir>/step_<k>/          after atomic rename (commit point)
+      meta.json            tree structure, shapes, dtypes, step, extras
+      shard_<i>.npz        leaf arrays (one file per host in multi-host runs)
+
+Restore maps saved leaves back onto the requested shardings via
+`jax.device_put`, so a checkpoint written on one mesh restores onto another
+(elastic resize / failure-driven re-mesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ----------------------------------------------------------
+    def save(self, step: int, tree: PyTree, extras: dict | None = None,
+             host_id: int = 0):
+        arrays = {k: np.asarray(v) for k, v in _leaf_paths(tree)}
+        meta = {
+            "step": step,
+            "extras": extras or {},
+            "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for k, a in arrays.items()},
+        }
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, arrays, meta, host_id))
+            self._thread.start()
+        else:
+            self._write(step, arrays, meta, host_id)
+
+    def _write(self, step, arrays, meta, host_id):
+        tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        os.makedirs(tmp, exist_ok=True)
+        # bf16 has no numpy dtype; store as uint16 view + dtype tag
+        store = {}
+        for k, a in arrays.items():
+            if a.dtype == jnp.bfloat16:
+                store[k] = a.view(np.uint16)
+                meta["leaves"][k]["dtype"] = "bfloat16"
+            else:
+                store[k] = a
+        np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **store)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)           # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # -- read -----------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: PyTree, step: int | None = None,
+                shardings: PyTree | None = None, host_id: int = 0
+                ) -> tuple[PyTree, dict]:
+        """Restore onto `template`'s structure; place per `shardings` if given
+        (resharding restore for elastic meshes)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shard_flat = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(flat))
+        leaves = []
+        for (p, leaf), sh in zip(flat, shard_flat):
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            a = data[key]
+            if meta["leaves"][key]["dtype"] == "bfloat16":
+                a = a.view(jnp.bfloat16)
+            if sh is not None:
+                leaves.append(jax.device_put(a, sh))
+            else:
+                leaves.append(jnp.asarray(a))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, {"step": meta["step"], **meta["extras"]}

@@ -1,0 +1,80 @@
+"""Deterministic synthetic LM data pipeline (multi-host ready).
+
+Tokens are a stateless hash of (seed, step, position) so any host can
+materialize exactly its shard of any step without coordination — the property
+a 1000-node data pipeline needs for deterministic restart after failure
+(resume at step k reproduces the same global batch bit-for-bit).
+
+The stream has learnable structure (a periodic Markov-ish mix), so small-model
+training loss decreases visibly in the e2e example.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq: int
+    global_batch: int
+    seed: int = 0
+    structure: int = 97          # period of the learnable component
+
+
+def _hash(x: np.ndarray) -> np.ndarray:
+    x = (x ^ (x >> 16)) * np.uint64(0x45d9f3b)
+    x = (x ^ (x >> 16)) * np.uint64(0x45d9f3b)
+    return x ^ (x >> 16)
+
+
+def global_batch_np(cfg: DataConfig, step: int) -> np.ndarray:
+    """The full (B, S+1) token block for `step` (labels = tokens shifted)."""
+    B, S = cfg.global_batch, cfg.seq + 1
+    idx = np.arange(B * S, dtype=np.uint64).reshape(B, S)
+    base = _hash(idx + np.uint64(step * 1_000_003 + cfg.seed * 7_777_777))
+    noise = (base % np.uint64(cfg.vocab)).astype(np.int64)
+    # learnable structure: token ~ f(position mod structure) most of the time
+    pos = np.arange(S, dtype=np.int64)[None, :] % cfg.structure
+    pattern = (pos * 31 + 7) % cfg.vocab
+    use_pattern = (base >> np.uint64(32)) % np.uint64(4) != 0   # 75% pattern
+    return np.where(use_pattern, pattern, noise).astype(np.int32)
+
+
+def host_shard(cfg: DataConfig, step: int, host_id: int, n_hosts: int
+               ) -> np.ndarray:
+    """This host's rows of the global batch (contiguous row sharding)."""
+    assert cfg.global_batch % n_hosts == 0
+    per = cfg.global_batch // n_hosts
+    full = global_batch_np(cfg, step)
+    return full[host_id * per:(host_id + 1) * per]
+
+
+class SyntheticDataset:
+    """Iterator over (tokens, labels) batches; deterministic in (seed, step)."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0,
+                 host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.step = start_step
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        block = host_shard(self.cfg, self.step, self.host_id, self.n_hosts)
+        self.step += 1
+        return {"tokens": jnp.asarray(block[:, :-1]),
+                "labels": jnp.asarray(block[:, 1:])}
+
+    def state(self):
+        return {"step": self.step}
+
+    def restore(self, state):
+        self.step = int(state["step"])

@@ -1,0 +1,81 @@
+"""Elastic mesh management + straggler mitigation.
+
+At 1000+ nodes, device failures are routine: the control plane must (a) pick a
+working mesh from whatever devices remain, (b) reshard the checkpointed state
+onto it, (c) keep the data pipeline deterministic across the resize. The mesh
+refactorization here is pure logic (tested on CPU with forced device counts);
+the restore path is CheckpointManager.restore(shardings=...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+def factor_mesh(n_devices: int, model_parallel: int,
+                prefer_pods: int = 1) -> tuple[int, ...] | None:
+    """Choose (pod, data, model) given a device count and a fixed TP degree.
+
+    TP (model) stays fixed across resizes — param shardings survive — while
+    the data axis absorbs the lost nodes. Returns None if n_devices doesn't
+    support the TP degree.
+    """
+    if n_devices % model_parallel:
+        return None
+    rest = n_devices // model_parallel
+    pods = prefer_pods
+    while pods > 1 and rest % pods:
+        pods -= 1
+    return (pods, rest // pods, model_parallel)
+
+
+def largest_viable_mesh(n_devices: int, model_parallel: int,
+                        batch_divisor: int) -> tuple[int, ...] | None:
+    """Largest mesh (<= n_devices) whose data axis divides the global batch."""
+    for n in range(n_devices, model_parallel - 1, -1):
+        shape = factor_mesh(n, model_parallel)
+        if shape is None:
+            continue
+        _, data, _ = shape
+        if batch_divisor % data == 0:
+            return shape
+    return None
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Tracks per-step wall times; flags steps slower than `factor` x the
+    rolling median so the control plane can reroute / recompile / evict.
+    """
+    factor: float = 2.0
+    window: int = 32
+    times: list = dataclasses.field(default_factory=list)
+    flagged: int = 0
+
+    def observe(self, step_time: float) -> bool:
+        med = float(np.median(self.times[-self.window:])) if self.times else None
+        self.times.append(step_time)
+        if med is not None and step_time > self.factor * med:
+            self.flagged += 1
+            return True
+        return False
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.times[-self.window:])) if self.times else 0.0
+
+
+class SimulatedFailures:
+    """Deterministic failure injector for tests/examples: raises at the given
+    steps, once each (models a node loss the loop must survive)."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            raise RuntimeError(f"injected node failure at step {step}")

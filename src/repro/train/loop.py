@@ -1,0 +1,96 @@
+"""Fault-tolerant training loop.
+
+Wraps the jitted train step with: periodic + emergency checkpointing, restart
+from the latest commit on failure, straggler flagging, and deterministic data
+resume. This is the control plane a multi-pod run needs; failures are injected
+in tests via elastic.SimulatedFailures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import SyntheticDataset
+from repro.train.elastic import SimulatedFailures, StragglerWatchdog
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    max_restarts: int = 3
+    log_every: int = 10
+
+
+def train_loop(train_step: Callable, params, opt_state, dataset:
+               SyntheticDataset, cfg: LoopConfig,
+               failures: SimulatedFailures | None = None,
+               log: Callable = print) -> dict:
+    """Runs to cfg.total_steps, surviving injected failures via restart from
+    the last committed checkpoint. Returns final state + stats."""
+    ckpt = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep)
+    watchdog = StragglerWatchdog()
+    restarts = 0
+    step = 0
+    losses = []
+
+    # resume if a checkpoint exists
+    latest = ckpt.latest_step()
+    if latest is not None:
+        (params, opt_state), extras = ckpt.restore((params, opt_state))
+        step = extras["step"]
+        dataset.restore({"step": extras.get("data_step", step)})
+        log(f"[loop] resumed from step {step}")
+
+    import jax.numpy as jnp
+
+    while step < cfg.total_steps:
+        try:
+            batch = next(dataset)
+            if failures is not None:
+                failures.check(step)
+            t0 = time.time()
+            params, opt_state, metrics = train_step(
+                params, opt_state, batch, jnp.asarray(step))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            slow = watchdog.observe(dt)
+            if slow:
+                log(f"[loop] straggler flagged at step {step}: "
+                    f"{dt:.3f}s vs median {watchdog.median:.3f}s")
+            losses.append(float(metrics["loss"]))
+            if step % cfg.log_every == 0:
+                log(f"[loop] step {step} loss {float(metrics['loss']):.4f} "
+                    f"({dt*1e3:.0f} ms)")
+            step += 1
+            if step % cfg.checkpoint_every == 0:
+                ckpt.save(step, (params, opt_state),
+                          extras={"data_step": dataset.state()["step"]})
+        except RuntimeError as e:
+            restarts += 1
+            log(f"[loop] FAILURE: {e} -> restart {restarts}/{cfg.max_restarts}")
+            if restarts > cfg.max_restarts:
+                raise
+            ckpt.wait()
+            latest = ckpt.latest_step()
+            if latest is not None:
+                (params, opt_state), extras = ckpt.restore((params, opt_state))
+                step = extras["step"]
+                dataset.restore({"step": extras.get("data_step", step)})
+            else:
+                step = 0
+                dataset.restore({"step": 0})
+
+    ckpt.wait()
+    ckpt.save(step, (params, opt_state),
+              extras={"data_step": dataset.state()["step"]})
+    ckpt.wait()
+    return {"params": params, "opt_state": opt_state, "step": step,
+            "losses": losses, "restarts": restarts,
+            "stragglers": watchdog.flagged}

@@ -1,0 +1,96 @@
+"""Serving: batched prefill + decode with KV caches and simple continuous
+batching (slot-based request admission)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, token, caches, position) -> (next_token, caches).
+
+    Greedy decode of one token for the whole batch; the jitted unit the decode
+    dry-run cells lower.
+    """
+    def serve_step(params, token, caches, position):
+        logits, caches = model.decode_step(params, token, caches, position)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches
+
+    return serve_step
+
+
+def sample_token(logits, rng, temperature: float = 1.0, top_k: int = 0):
+    """Temperature + top-k sampling (fp32)."""
+    lg = logits.astype(jnp.float32) / max(temperature, 1e-5)
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e9, lg)
+    return jax.random.categorical(rng, lg, axis=-1)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 32
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchServer:
+    """Minimal continuous-batching server: fixed B slots, per-slot position,
+    prefill via teacher-forced decode, greedy generation."""
+
+    def __init__(self, model: Model, params, batch: int, max_seq: int):
+        self.model = model
+        self.params = params
+        self.B = batch
+        self.max_seq = max_seq
+        self.caches = model.init_caches(batch, max_seq)
+        self.positions = [0] * batch
+        self.slots: list[Request | None] = [None] * batch
+        self._step = jax.jit(make_serve_step(model))
+        self._decode = jax.jit(model.decode_step)
+
+    def admit(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                self.positions[i] = 0
+                return True
+        return False
+
+    def _tokens_now(self):
+        toks = []
+        for i, s in enumerate(self.slots):
+            if s is None:
+                toks.append(0)
+            elif self.positions[i] < len(s.prompt):
+                toks.append(s.prompt[self.positions[i]])
+            else:
+                toks.append(s.generated[-1] if s.generated else s.prompt[-1])
+        return jnp.asarray(toks, jnp.int32)[:, None]
+
+    def step(self):
+        """One lockstep decode across slots (batch shares a position counter in
+        this minimal variant: positions advance together; prompts left-pad)."""
+        pos = max(self.positions)
+        token = self._tokens_now()
+        logits, self.caches = self._decode(self.params, token, self.caches,
+                                           jnp.asarray(pos, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            self.positions[i] += 1
+            if self.positions[i] >= len(s.prompt):
+                s.generated.append(int(nxt[i]))
+                if len(s.generated) >= s.max_new:
+                    s.done = True
+                    self.slots[i] = None
+        return nxt

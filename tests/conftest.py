@@ -1,0 +1,4 @@
+import os
+# Tests run on the single real CPU device; the 512-device override is ONLY for
+# the dry-run (repro.launch.dryrun sets it before importing jax).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

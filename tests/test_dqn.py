@@ -1,0 +1,92 @@
+"""Unit tests: dueling DQN + replay buffer + agent learning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import agent as A
+from repro.core import dqn
+from repro.core.agent import AgentConfig, init_agent
+from repro.core.dqn import DQNConfig
+from repro.core.replay import init_replay, push, sample
+
+
+def test_q_values_shapes():
+    cfg = DQNConfig(state_dim=12, n_actions=5)
+    params = dqn.init_params(jax.random.PRNGKey(0), cfg)
+    q1 = dqn.q_values(params, jnp.zeros(12), cfg)
+    qb = dqn.q_values(params, jnp.zeros((7, 12)), cfg)
+    assert q1.shape == (5,) and qb.shape == (7, 5)
+    assert jnp.isfinite(q1).all()
+
+
+def test_dueling_identity():
+    """Q = V + A - mean(A): mean over actions of (Q - V) must be ~0."""
+    cfg = DQNConfig(state_dim=6, n_actions=4)
+    params = dqn.init_params(jax.random.PRNGKey(1), cfg)
+    s = jax.random.normal(jax.random.PRNGKey(2), (3, 6))
+    q = dqn.q_values(params, s, cfg)
+    x = jnp.maximum(s @ params["w0"] + params["b0"], 0)
+    x = jnp.maximum(x @ params["w1"] + params["b1"], 0)
+    v = x @ params["w_v"] + params["b_v"]
+    np.testing.assert_allclose(np.asarray(jnp.mean(q - v, axis=-1)), 0.0,
+                               atol=1e-5)
+
+
+def test_replay_ring_semantics():
+    buf = init_replay(4, 3)
+    for i in range(6):
+        buf = push(buf, jnp.full(3, i, jnp.float32), i, float(i),
+                   jnp.zeros(3), 0.0)
+    assert int(buf.size) == 4
+    assert int(buf.ptr) == 2
+    # oldest entries overwritten: buffer holds 2..5
+    assert set(np.asarray(buf.a).tolist()) == {2, 3, 4, 5}
+
+
+def test_replay_sample_masks_empty():
+    buf = init_replay(8, 3)
+    batch = sample(buf, jax.random.PRNGKey(0), 4)
+    assert float(batch["w"].sum()) == 0.0
+    buf = push(buf, jnp.ones(3), 1, 1.0, jnp.ones(3), 0.0)
+    batch = sample(buf, jax.random.PRNGKey(0), 4)
+    assert float(batch["w"].sum()) == 4.0
+
+
+def test_agent_learns_contextual_bandit():
+    cfg = AgentConfig(dqn=DQNConfig(state_dim=8, n_actions=8, gamma=0.0))
+    ag = init_agent(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+
+    def step(carry, _):
+        ag, key, s_prev, a_prev, r_prev = carry
+        key, k = jax.random.split(key)
+        ctx = jax.random.bernoulli(k)
+        s = jnp.where(ctx, jnp.ones(8), -jnp.ones(8))
+        ag = A.observe(ag, s_prev, a_prev, r_prev, s)
+        ag = A.train(ag, cfg)
+        a, ag = A.act(ag, cfg, s)
+        r = jnp.where(a == jnp.where(ctx, 5, 3), 1.0, -1.0)
+        return (ag, key, s, a, r), r
+
+    carry = (ag, key, jnp.zeros(8), jnp.zeros((), jnp.int32), jnp.zeros(()))
+    carry, rews = jax.lax.scan(jax.jit(step), carry, None, length=500)
+    late = np.asarray(rews)[-100:]
+    assert late.mean() > 0.7, late.mean()
+
+
+def test_target_sync_periodic():
+    cfg = AgentConfig(dqn=DQNConfig(state_dim=4, n_actions=2, target_sync=4),
+                      min_replay=1)
+    ag = init_agent(jax.random.PRNGKey(0), cfg)
+    ag = A.observe(ag, jnp.ones(4), 0, 1.0, jnp.ones(4))
+    for i in range(3):
+        ag = A.train(ag, cfg)
+    # after 3 updates online != target
+    d = sum(float(jnp.abs(a - b).sum()) for a, b in
+            zip(jax.tree.leaves(ag.params), jax.tree.leaves(ag.target_params)))
+    assert d > 0
+    ag = A.train(ag, cfg)   # 4th -> sync
+    d = sum(float(jnp.abs(a - b).sum()) for a, b in
+            zip(jax.tree.leaves(ag.params), jax.tree.leaves(ag.target_params)))
+    assert d == 0.0

@@ -1,0 +1,55 @@
+"""Hypothesis property tests on system invariants of the NMP engine."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.nmp import NMPConfig, run_episode
+from repro.nmp.stats import summarize
+from repro.nmp.traces import Trace
+
+CFG = NMPConfig()
+
+
+def _random_trace(seed: int, n_ops: int, n_pages: int) -> Trace:
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, n_pages, n_ops).astype(np.int32)
+    s1 = rng.integers(0, n_pages, n_ops).astype(np.int32)
+    s2 = rng.integers(0, n_pages, n_ops).astype(np.int32)
+    rw = np.zeros(n_pages, bool)
+    rw[np.unique(d)] = True
+    return Trace("rand", d, s1, s2, n_pages, rw, np.zeros_like(d),
+                 iter_ops=n_ops // 2)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(0, 10_000), st.sampled_from([256, 384, 512]),
+       st.sampled_from(["bnmp", "ldb", "pei"]))
+def test_op_conservation_any_trace(seed, n_ops, technique):
+    """Every op of any trace is processed exactly once; all derived stats stay
+    in their physical ranges."""
+    tr = _random_trace(seed, n_ops, 128)
+    s = summarize(run_episode(tr, CFG, technique=technique, mapper="none"))
+    assert s["ops"] == n_ops
+    assert s["cycles"] > 0
+    assert 0 <= s["compute_util"] <= 1
+    assert s["mean_hops"] >= 0
+    assert s["energy_nj"] > 0
+
+
+@settings(deadline=None, max_examples=4)
+@given(st.integers(0, 10_000), st.integers(0, 5))
+def test_aimm_page_table_stays_valid(seed, action):
+    """Whatever action the agent (here scripted) takes, the page table maps
+    every page to a real cube and migrated fractions stay in [0, 1]."""
+    tr = _random_trace(seed, 512, 96)
+    res = run_episode(tr, CFG, technique="bnmp", mapper="aimm",
+                      forced_action=action, seed=seed)
+    p2c = np.asarray(res.env.page_to_cube)
+    assert (p2c >= 0).all() and (p2c < CFG.n_cubes).all()
+    cr = np.asarray(res.env.compute_remap)
+    assert ((cr >= -1) & (cr <= CFG.n_cubes)).all()
+    s = summarize(res)
+    assert 0 <= s["frac_pages_migrated"] <= 1
+    assert 0 <= s["frac_access_migrated"] <= 1
+    assert s["ops"] == 512

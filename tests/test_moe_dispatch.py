@@ -1,0 +1,58 @@
+"""MoE dispatch properties: grouped == global under ample capacity; dropping
+bounded by capacity; gate weights sum to 1 over kept slots."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoECfg
+from repro.models.moe import _capacity, init_moe, moe_ffn
+
+
+def _setup(cf=8.0, groups=1, pre=False):
+    cfg = MoECfg(n_routed=8, top_k=2, d_expert=64, capacity_factor=cf,
+                 dispatch_groups=groups, router_pre_softmax=pre)
+    params, _ = init_moe(jax.random.PRNGKey(0), 32, cfg)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 16, 32)),
+                    jnp.bfloat16)
+    return cfg, params, x
+
+
+def test_grouped_equals_global_with_ample_capacity():
+    cfg1, params, x = _setup(groups=1)
+    cfg4 = dataclasses.replace(cfg1, dispatch_groups=4)
+    y1, a1 = moe_ffn(params, x, cfg1)
+    y4, a4 = moe_ffn(params, x, cfg4)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y4, np.float32), atol=1e-3)
+    assert float(a1["drop_frac"]) == 0.0
+    assert float(a4["drop_frac"]) == 0.0
+
+
+@pytest.mark.parametrize("pre", [False, True])
+def test_tight_capacity_drops_bounded(pre):
+    cfg, params, x = _setup(cf=0.5, pre=pre)
+    y, aux = moe_ffn(params, x, cfg)
+    assert 0.0 < float(aux["drop_frac"]) < 1.0
+    assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
+
+
+def test_capacity_rounding():
+    cfg = MoECfg(n_routed=8, top_k=2, d_expert=16)
+    assert _capacity(64, cfg) % 8 == 0
+    assert _capacity(8, cfg) >= 8
+
+
+def test_shared_experts_add_signal():
+    cfg = MoECfg(n_routed=4, top_k=1, d_expert=32, n_shared=2)
+    params, _ = init_moe(jax.random.PRNGKey(1), 32, cfg)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((2, 8, 32)),
+                    jnp.bfloat16)
+    y, _ = moe_ffn(params, x, cfg)
+    # zero the shared weights -> output must change
+    p2 = dict(params, ws_down=jnp.zeros_like(params["ws_down"]))
+    y2, _ = moe_ffn(p2, x, cfg)
+    assert float(jnp.abs(y.astype(jnp.float32)
+                         - y2.astype(jnp.float32)).max()) > 0

@@ -1,0 +1,46 @@
+"""Property tests for the cube network: hops, link loads, routing."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.nmp.config import NMPConfig
+from repro.nmp.network import hop_count, link_loads, n_links, nearest_mc
+
+CFG = NMPConfig()
+
+
+def test_hop_count_basics():
+    assert int(hop_count(jnp.asarray(0), jnp.asarray(0), 4)) == 0
+    assert int(hop_count(jnp.asarray(0), jnp.asarray(15), 4)) == 6  # corners
+    assert int(hop_count(jnp.asarray(0), jnp.asarray(3), 4)) == 3
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                min_size=1, max_size=20))
+def test_link_load_conservation(flows):
+    """Sum of per-link loads == sum over flows of weight * hops (XY routes
+    place exactly `hops` link traversals per flow)."""
+    src = jnp.asarray([f[0] for f in flows])
+    dst = jnp.asarray([f[1] for f in flows])
+    w = jnp.ones(len(flows)) * 3.0
+    loads = link_loads(src, dst, w, CFG)
+    total = float(loads.sum())
+    expect = float((w * hop_count(src, dst, CFG.mesh_x)).sum())
+    np.testing.assert_allclose(total, expect, rtol=1e-5)
+    assert loads.shape[0] == n_links(CFG)
+    assert (np.asarray(loads) >= 0).all()
+
+
+def test_nearest_mc_corners():
+    mc = np.asarray(nearest_mc(CFG))
+    # each corner cube maps to its own MC
+    for i, cube in enumerate(CFG.mc_cubes):
+        assert mc[cube] == i
+
+
+def test_8x8_mesh_links():
+    cfg = NMPConfig(mesh_x=8, mesh_y=8)
+    assert n_links(cfg) == 8 * 7 * 2
+    assert int(hop_count(jnp.asarray(0), jnp.asarray(63), 8)) == 14

@@ -1,0 +1,82 @@
+"""Roofline HLO parser: shape-byte parsing, trip-count correction, dot FLOPs
+validated against a known lowered program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (Roofline, _shape_bytes, parse_hlo_costs)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[2,3]{1,0}") == 24
+    assert _shape_bytes("bf16[128]") == 256
+    assert _shape_bytes("(s32[], f32[4,4]{1,0}, bf16[2]{0})") == 4 + 64 + 4
+    assert _shape_bytes("pred[7]") == 7
+
+
+def test_parser_trip_correction_scanned_matmul():
+    """A scanned matmul chain: parsed dot FLOPs must equal trips * per-dot."""
+    L, M, K = 12, 64, 64
+
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    x = jnp.ones((M, K))
+    w = jnp.ones((L, K, K))
+    hlo = jax.jit(f).lower(x, w).compile().as_text()
+    stats = parse_hlo_costs(hlo)
+    expect = L * 2 * M * K * K
+    assert stats.flops == pytest.approx(expect, rel=0.01), (
+        stats.flops, expect, stats.trip_counts)
+    assert any(t == L for t in stats.trip_counts.values())
+
+
+def test_parser_handles_nested_tuple_shapes():
+    """Nested scans with tuple carries produce nested-tuple HLO shapes; the
+    parser must still find the whiles and multiply nested trip counts."""
+    M = 64      # large enough that XLA keeps a real `dot` op
+
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return (d[0] + 1.0, jnp.tanh(d[1] @ d[1])), None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        c, _ = jax.lax.scan(outer, (x, x), None, length=5)
+        return c[0].sum() + c[1].sum()
+
+    x = jnp.ones((M, M))
+    hlo = jax.jit(f).lower(x).compile().as_text()
+    stats = parse_hlo_costs(hlo)
+    expect = 5 * 3 * 2 * M ** 3
+    assert stats.flops == pytest.approx(expect, rel=0.05), (
+        stats.flops, stats.trip_counts)
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops=197e12 * 256, bytes_hbm=0.1, bytes_collective=0.1,
+                 chips=256, model_flops=197e12 * 256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.dominant == "compute"
+    assert r.roofline_fraction == pytest.approx(1.0)
+    r2 = Roofline(flops=1, bytes_hbm=819e9 * 512, bytes_collective=1,
+                  chips=256, model_flops=1)
+    assert r2.dominant == "memory"
+    assert r2.memory_s == pytest.approx(2.0)
+
+
+def test_memory_model_sanity():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.memory_model import memory_bytes
+    cfg = get_config("minitron-8b")
+    train = memory_bytes(cfg, SHAPES["train_4k"], mb=8)
+    decode = memory_bytes(cfg, SHAPES["decode_32k"])
+    prefill = memory_bytes(cfg, SHAPES["prefill_32k"])
+    assert train > prefill > 0
+    assert decode > 2 * 2 * cfg.param_count()   # reads weights + caches
+    # more microbatches -> more weight re-reads
+    assert memory_bytes(cfg, SHAPES["train_4k"], mb=16) > train

@@ -1,0 +1,63 @@
+"""Trace generators reproduce the paper's §6.5 workload characteristics."""
+import numpy as np
+import pytest
+
+from repro.nmp.traces import APPS, analyze, make_trace, merge_traces, \
+    program_of_page
+
+
+@pytest.mark.parametrize("app", APPS)
+def test_trace_wellformed(app):
+    tr = make_trace(app, n_ops=2048)
+    for arr in (tr.dest, tr.src1, tr.src2):
+        assert arr.shape == (2048,)
+        assert arr.min() >= 0 and arr.max() < tr.n_pages
+    assert tr.read_write[np.unique(tr.dest)].all()   # dest pages are RW
+
+
+def test_determinism():
+    a = make_trace("PR", n_ops=1024)
+    b = make_trace("PR", n_ops=1024)
+    assert (a.dest == b.dest).all() and (a.src1 == b.src1).all()
+
+
+def test_active_page_classes():
+    """Fig. 5b: {LUD, PR, RBM, SC} have high active-page fractions (working
+    set ~ residency); {BP, SPMV} low — reproduce the relative ordering."""
+    frac = {}
+    for app in APPS:
+        tr = make_trace(app, n_ops=4096)
+        frac[app] = analyze(tr)["active_pages_mean"] / tr.n_pages
+    high = min(frac[a] for a in ("LUD", "RBM", "SC"))
+    low = max(frac[a] for a in ("BP", "SPMV"))
+    assert high > low, frac
+
+
+def test_affinity_radix_ordering():
+    """Fig. 5c: graph-like kernels (PR, LUD, RBM) have higher radix than
+    streaming kernels (MAC, RD)."""
+    rad = {app: analyze(make_trace(app, n_ops=4096))["radix_mean"]
+           for app in APPS}
+    assert min(rad["PR"], rad["RBM"]) > max(rad["MAC"], rad["RD"]), rad
+
+
+def test_bp_large_residency_small_ws():
+    """BP: huge page count, small working set (paper §7.3)."""
+    a = analyze(make_trace("BP", n_ops=4096))
+    tr = make_trace("BP", n_ops=4096)
+    assert tr.n_pages >= 2048
+    assert a["active_pages_mean"] < tr.n_pages * 0.2
+
+
+def test_merge_traces_multiprogram():
+    t1 = make_trace("KM", n_ops=512)
+    t2 = make_trace("RD", n_ops=512)
+    m = merge_traces([t1, t2])
+    assert m.n_ops == 1024
+    assert m.n_pages == t1.n_pages + t2.n_pages
+    # page spaces disjoint per program
+    owner = program_of_page(m)
+    p0 = np.unique(np.concatenate([m.dest[m.program_id == 0],
+                                   m.src1[m.program_id == 0]]))
+    assert (owner[p0] == 0).all()
+    assert m.iter_ops > 0

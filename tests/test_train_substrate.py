@@ -1,0 +1,133 @@
+"""Optimizer / loss / grad-accumulation / compression correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train.compression import compress_decompress, \
+    topk_with_error_feedback
+from repro.train.optimizer import (_dq8, _q8, adamw, cosine_schedule,
+                                   quantizable, quantized_adamw, sgd)
+from repro.train.train_step import chunked_ce_loss, make_loss_fn, \
+    make_train_step
+
+
+def _quad_problem():
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((4, 256)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((4, 256))}
+    grad_fn = jax.grad(lambda p: jnp.mean((p["w"] - target) ** 2))
+    return params, grad_fn, target
+
+
+def test_adamw_converges_quadratic():
+    params, grad_fn, target = _quad_problem()
+    opt = adamw(0.05)
+    state = opt.init(params)
+    for i in range(200):
+        params, state = opt.update(grad_fn(params), state, params,
+                                   jnp.asarray(i))
+    assert float(jnp.mean((params["w"] - target) ** 2)) < 1e-2
+
+
+def test_quantized_adamw_tracks_adamw():
+    params, grad_fn, target = _quad_problem()
+    opt_a, opt_q = adamw(0.05), quantized_adamw(0.05)
+    pa, pq = params, params
+    sa, sq = opt_a.init(params), opt_q.init(params)
+    for i in range(100):
+        pa, sa = opt_a.update(grad_fn(pa), sa, pa, jnp.asarray(i))
+        pq, sq = opt_q.update(grad_fn(pq), sq, pq, jnp.asarray(i))
+    # both converge to similar loss despite int8 moments
+    la = float(jnp.mean((pa["w"] - target) ** 2))
+    lq = float(jnp.mean((pq["w"] - target) ** 2))
+    assert lq < max(3 * la, 5e-2), (la, lq)
+
+
+def test_quantized_fallback_for_odd_leaves():
+    params = {"a": jnp.zeros((3, 7)), "b": jnp.zeros((2, 256))}
+    opt = quantized_adamw(0.1)
+    state = opt.init(params)
+    assert "m" in state["a"] and "mq" in state["b"]
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, s2 = opt.update(g, state, params, jnp.asarray(0))
+    assert jnp.isfinite(p2["a"]).all() and jnp.isfinite(p2["b"]).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 4), st.integers(1, 8))
+def test_q8_roundtrip_error_bound(rows, blocks):
+    x = np.random.default_rng(rows * 100 + blocks).standard_normal(
+        (rows, blocks * 256)).astype(np.float32) * 10
+    q, s = _q8(jnp.asarray(x))
+    back = np.asarray(_dq8(q, s, x.shape))
+    blockmax = np.abs(x.reshape(rows, blocks, 256)).max(-1, keepdims=True)
+    bound = (blockmax / 127.0 * 0.5 + 1e-6).repeat(256, -1).reshape(x.shape)
+    assert (np.abs(back - x) <= bound + 1e-5).all()
+
+
+def test_chunked_ce_matches_dense():
+    cfg = get_config("minitron-8b", smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 64
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab,
+                                                           (B, S)), jnp.int32)
+    hidden, _ = model.apply(params, {"tokens": tokens})
+    loss_chunked = chunked_ce_loss(model, params, hidden, tokens, z_loss=0.0)
+    logits = model.logits(params, hidden).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, tokens[..., None], axis=-1)[..., 0]
+    loss_dense = jnp.mean(lse - tgt)
+    np.testing.assert_allclose(float(loss_chunked), float(loss_dense),
+                               rtol=1e-4)
+
+
+def test_grad_accumulation_equivalence():
+    """microbatches=4 must reproduce the full-batch gradient step."""
+    cfg = get_config("minitron-8b", smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 8, 32
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    opt = sgd(1e-2)
+    s1 = jax.jit(make_train_step(model, opt, microbatches=1))
+    s4 = jax.jit(make_train_step(model, opt, microbatches=4))
+    p1, _, m1 = s1(params, {}, batch, jnp.asarray(0))
+    p4, _, m4 = s4(params, {}, batch, jnp.asarray(0))
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=2e-2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.1, atol=2e-3)
+
+
+def test_compression_int8_small_error():
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(4096),
+                    jnp.float32)
+    out = compress_decompress(g)
+    rel = float(jnp.abs(out - g).max() / jnp.abs(g).max())
+    assert rel < 0.01
+
+
+def test_topk_error_feedback_conserves():
+    g = jnp.asarray(np.random.default_rng(1).standard_normal(1024),
+                    jnp.float32)
+    sent, resid = topk_with_error_feedback(g, jnp.zeros_like(g), frac=0.05)
+    np.testing.assert_allclose(np.asarray(sent + resid), np.asarray(g),
+                               atol=1e-6)
+    assert float((sent != 0).mean()) <= 0.06
+
+
+def test_cosine_schedule():
+    sched = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert abs(float(sched(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(sched(jnp.asarray(100))) <= 0.11
