@@ -1,0 +1,25 @@
+# Single entry point for CI / local development.
+#
+#   make test         tier-1 verify: the full suite (what the roadmap gates on)
+#   make test-fast    quick lane: skips tests marked `slow`
+#   make bench-smoke  smallest benchmark slice (fig5 + the sweep-engine timing)
+#   make bench        every benchmark figure (BENCH_FULL=1 for paper scale)
+
+PY ?= python
+# src for the repro package, repo root for the benchmarks package
+PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: test test-fast bench-smoke bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-smoke:
+	BENCH_ONLY=fig5 $(PY) benchmarks/run.py
+
+bench:
+	$(PY) benchmarks/run.py

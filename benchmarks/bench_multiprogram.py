@@ -1,43 +1,28 @@
 """Fig. 12: multi-program workloads (2/3/4 apps) — BNMP shared baseline vs
-BNMP+HOARD vs BNMP+HOARD+AIMM (paper: HOARD and AIMM complement each other)."""
-import time
+BNMP+HOARD vs BNMP+HOARD+AIMM (paper: HOARD and AIMM complement each other).
 
-from benchmarks.common import EPISODES, FULL, N_OPS, Timer, emit
-from repro.nmp import NMPConfig, make_trace, merge_traces, run_episode, \
-    run_program
-from repro.nmp.paging import hoard_alloc
-from repro.nmp.stats import summarize
-from repro.nmp.traces import program_of_page
-
-COMBOS = [
-    ("SC-KM", ("SC", "KM")),
-    ("LUD-RBM-SPMV", ("LUD", "RBM", "SPMV")),
-    ("SC-KM-RD-MAC", ("SC", "KM", "RD", "MAC")),
-]
+The three lanes of every combo run through the batched sweep engine: one
+`scenarios.multi_program_grid` -> `sweep.run_grid` call (memoized in
+common.cached_grid) covers the whole figure instead of one simulator
+invocation per (combo, allocator, mapper).
+"""
+from benchmarks.common import EPISODES, N_OPS, cached_grid, emit, lane_summary
+from repro.nmp.scenarios import DEFAULT_COMBOS
 
 
 def run():
-    cfg = NMPConfig()
     per = max(N_OPS // 2, 4096)
-    for name, combo in COMBOS:
-        tr = merge_traces([make_trace(a, n_ops=per) for a in combo])
-        with Timer() as t0:
-            base = run_episode(tr, cfg, "bnmp", "none")
-        bcyc = summarize(base)["cycles"]
-        emit(f"fig12/{name}/BNMP", t0.us, 1.0)
+    cached = cached_grid("multi", combos=DEFAULT_COMBOS, n_ops_per_app=per,
+                         aimm_episodes=max(EPISODES, 3))
+    us = cached["us"] / len(cached["grid"])
 
-        hoard_table = hoard_alloc(tr.n_pages, cfg, program_of_page(tr))
-        with Timer() as t1:
-            h = run_episode(tr, cfg, "bnmp", "none", page_table=hoard_table)
-        emit(f"fig12/{name}/BNMP+HOARD", t1.us,
-             round(summarize(h)["cycles"] / bcyc, 4))
-
-        with Timer() as t2:
-            results = run_program(tr, cfg, "bnmp", "aimm",
-                                  episodes=max(EPISODES, 3), seed=0,
-                                  page_table=hoard_table)
-        emit(f"fig12/{name}/BNMP+HOARD+AIMM", t2.us,
-             round(summarize(results[-1])["cycles"] / bcyc, 4))
+    for combo, _ in DEFAULT_COMBOS:
+        base = lane_summary(cached, f"{combo}/shared/s0")["cycles"]
+        emit(f"fig12/{combo}/BNMP", us, 1.0)
+        hoard = lane_summary(cached, f"{combo}/hoard/s0")["cycles"]
+        emit(f"fig12/{combo}/BNMP+HOARD", us, round(hoard / base, 4))
+        aimm = lane_summary(cached, f"{combo}/hoard+aimm/s0")["cycles"]
+        emit(f"fig12/{combo}/BNMP+HOARD+AIMM", us, round(aimm / base, 4))
 
 
 if __name__ == "__main__":

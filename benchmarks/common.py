@@ -3,6 +3,15 @@
 Every benchmark prints `name,us_per_call,derived` CSV rows (one per paper
 table/figure datapoint). `us_per_call` is the wall time of the underlying
 simulator/compile call; `derived` is the paper-comparable quantity.
+
+Two execution paths are provided:
+
+  cached_episode : one serial (app, technique, mapper) cell, memoized —
+                   used by benchmarks that need the full EpisodeResult
+                   (per-epoch metrics, final env state).
+  cached_grid    : a whole scenario grid through the batched sweep engine
+                   (`repro.nmp.sweep.run_grid`), memoized — one compile and
+                   one dispatch for every cell of the grid.
 """
 from __future__ import annotations
 
@@ -64,3 +73,30 @@ def cached_episode(app: str, technique: str, mapper: str, **kw):
     out = {"res": res, "all": res_all, "us": t.us, "trace": tr}
     _EPISODE_CACHE[key] = out
     return out
+
+
+_GRID_CACHE: dict = {}
+
+
+def cached_grid(grid_name: str, **kw):
+    """Memoized batched run of a named scenario grid (see repro.nmp.scenarios).
+
+    Returns {"res": SweepResult, "grid": [Scenario], "us": wall_us}; lanes are
+    addressed by `Scenario.name` via `lane_summary`."""
+    from repro.nmp import scenarios, sweep
+    key = (grid_name, tuple(sorted((k, str(v)) for k, v in kw.items())))
+    if key in _GRID_CACHE:
+        return _GRID_CACHE[key]
+    grid = scenarios.build(grid_name, **kw)
+    res = sweep.run_grid(grid)
+    out = {"res": res, "grid": grid, "us": res.wall_s * 1e6}
+    _GRID_CACHE[key] = out
+    return out
+
+
+def lane_summary(cached: dict, name: str, episode: int | None = None) -> dict:
+    """Summary dict for the lane whose Scenario.name == `name`."""
+    for i, sc in enumerate(cached["grid"]):
+        if sc.name == name:
+            return cached["res"].episode_summary(i, episode)
+    raise KeyError(name)

@@ -1,25 +1,18 @@
 """Paper reproduction demo: Fig. 6-style table for one or all apps —
 techniques {BNMP, LDB, PEI} x mappers {Baseline, TOM, AIMM}.
 
+The whole table is one batched sweep (`sweep.run_grid`): every
+(app, technique, mapper) cell is a lane of a single compiled program instead
+of a serial run per cell.
+
     PYTHONPATH=src python examples/nmp_aimm_demo.py [--app SPMV | --all]
 """
 import argparse
 
-from repro.nmp import NMPConfig, make_trace, run_episode, run_program
-from repro.nmp.stats import summarize
+from repro.nmp import NMPConfig
+from repro.nmp.scenarios import single_program_grid
+from repro.nmp.sweep import run_grid
 from repro.nmp.traces import APPS
-
-
-def row(app, cfg, n_ops, episodes):
-    tr = make_trace(app, n_ops=n_ops)
-    out = {}
-    for tech in ("bnmp", "ldb", "pei"):
-        base = summarize(run_episode(tr, cfg, tech, "none"))["cycles"]
-        tom = summarize(run_episode(tr, cfg, tech, "tom"))["cycles"]
-        aimm = summarize(run_program(tr, cfg, tech, "aimm",
-                                     episodes=episodes)[-1])["cycles"]
-        out[tech] = (1.0, tom / base, aimm / base)
-    return out
 
 
 def main():
@@ -32,12 +25,25 @@ def main():
 
     cfg = NMPConfig()
     apps = APPS if args.all else [args.app]
+    grid = single_program_grid(apps=apps,
+                               techniques=("bnmp", "ldb", "pei"),
+                               mappers=("none", "tom", "aimm"),
+                               n_ops=args.n_ops,
+                               aimm_episodes=args.episodes)
+    res = run_grid(grid, cfg)
+    cell = {sc.name: res.episode_summary(i)["cycles"]
+            for i, sc in enumerate(grid)}
+
     print(f"{'app':6s} {'tech':5s} {'B':>6s} {'TOM':>6s} {'AIMM':>6s}   "
-          "(execution time normalized to each technique's baseline)")
+          "(execution time normalized to each technique's baseline; "
+          f"{len(grid)} lanes in {res.wall_s:.1f}s batched)")
     for app in apps:
-        r = row(app, cfg, args.n_ops, args.episodes)
-        for tech, (b, t, a) in r.items():
-            print(f"{app:6s} {tech:5s} {b:6.2f} {t:6.2f} {a:6.2f}")
+        for tech in ("bnmp", "ldb", "pei"):
+            base = cell[f"{app}/{tech}/none/s0"]
+            tom = cell[f"{app}/{tech}/tom/s0"]
+            aimm = cell[f"{app}/{tech}/aimm/s0"]
+            print(f"{app:6s} {tech:5s} {1.0:6.2f} {tom / base:6.2f} "
+                  f"{aimm / base:6.2f}")
 
 
 if __name__ == "__main__":

@@ -67,17 +67,20 @@ def epsilon(cfg: AgentConfig, step: jnp.ndarray) -> jnp.ndarray:
 
 
 def act(agent: AgentState, cfg: AgentConfig, state_vec: jnp.ndarray,
-        explore: bool = True) -> tuple[jnp.ndarray, AgentState]:
-    """ε-greedy action selection; returns (action, new agent state)."""
+        explore: bool | jnp.ndarray = True) -> tuple[jnp.ndarray, AgentState]:
+    """ε-greedy action selection; returns (action, new agent state).
+
+    `explore` may be a traced boolean (batched sweeps flip exploration per
+    episode inside one compiled program); RNG consumption is identical either
+    way, so greedy evaluation stays reproducible against static calls.
+    """
     rng, k_eps, k_act = jax.random.split(agent.rng, 3)
     q = dqn.q_values(agent.params, state_vec, cfg.dqn)
     greedy = jnp.argmax(q).astype(jnp.int32)
-    if explore:
-        eps = epsilon(cfg, agent.step)
-        rand_a = jax.random.randint(k_act, (), 0, cfg.dqn.n_actions)
-        action = jnp.where(jax.random.uniform(k_eps) < eps, rand_a, greedy)
-    else:
-        action = greedy
+    eps = epsilon(cfg, agent.step)
+    rand_a = jax.random.randint(k_act, (), 0, cfg.dqn.n_actions)
+    take_rand = jnp.asarray(explore) & (jax.random.uniform(k_eps) < eps)
+    action = jnp.where(take_rand, rand_a, greedy)
     return action, agent._replace(rng=rng, step=agent.step + 1)
 
 

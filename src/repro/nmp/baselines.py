@@ -40,6 +40,18 @@ def schedule(technique: str, dcube, s1cube, s2cube, hot1, hot2):
     raise ValueError(technique)
 
 
+def schedule_by_id(tech_id, dcube, s1cube, s2cube, hot1, hot2):
+    """`schedule` with a *traced* technique id (index into TECHNIQUES).
+
+    All three policies are evaluated and the lane's one is selected, so one
+    compiled program can serve a batch of scenarios with mixed techniques.
+    """
+    pei = schedule(PEI, dcube, s1cube, s2cube, hot1, hot2)
+    return jnp.where(tech_id == TECHNIQUES.index(PEI), pei,
+                     jnp.where(tech_id == TECHNIQUES.index(LDB), s1cube,
+                               dcube))
+
+
 # ---------------------------------------------------------------------------
 # TOM
 # ---------------------------------------------------------------------------

@@ -14,6 +14,15 @@ Epoch model (documented cost model; see DESIGN.md §2):
              + mean latency + NMP-table overflow stalls + migration stalls
   feedback : OPC = ops/cycles; reward = sign(dOPC); state vector from
              system EMAs + hot-page info cache entry (paper Fig. 3)
+
+Batching model (sweep.py): every per-trace quantity that used to be a Python
+static — op count, OPC-ring length, PEI hot-page sort index, technique,
+mapper, forced action, exploration flag — is carried as a traced `TraceCtx`
+scalar instead, and every state update is gated on `has_ops`, so epochs past
+the end of a (padded) trace are exact no-ops. That makes one compiled
+program valid for a whole stacked grid of scenarios: `sweep.run_grid` pads
+traces to a common envelope and `jax.vmap`s the same epoch body over a
+scenario axis, with episode chaining expressed as a `lax.scan`.
 """
 from __future__ import annotations
 
@@ -43,10 +52,61 @@ from repro.nmp.paging import (PageInfoCache, default_alloc, init_page_cache,
 from repro.nmp.traces import Trace
 
 MAPPERS = ("none", "tom", "aimm")
+MAPPER_ID = {m: i for i, m in enumerate(MAPPERS)}
+TECH_ID = {t: i for i, t in enumerate(baselines.TECHNIQUES)}
 
 # Energy counter layout (see stats.py).
 EN_PAGE_CACHE, EN_NMP_BUF, EN_MIG_Q, EN_MDMA, EN_WEIGHT, EN_REPLAY, \
     EN_STATE_BUF, EN_NET_BIT_HOPS, EN_MEM_BITS, EN_N = range(10)
+
+
+class TraceCtx(NamedTuple):
+    """Per-scenario runtime context: everything that used to be a compile-time
+    static but must vary across the lanes of a batched sweep."""
+    n_ops: jnp.ndarray          # () i32 real op count (trace arrays may be padded)
+    n_pages: jnp.ndarray        # () i32 real page count (tables may be padded)
+    t_ring: jnp.ndarray         # () i32 effective OPC phase-ring length
+    pei_idx: jnp.ndarray        # () i32 hot-threshold index into the ascending
+                                #        sort of the *real* pages' access EMAs
+    technique: jnp.ndarray      # () i32 index into baselines.TECHNIQUES
+    mapper: jnp.ndarray         # () i32 index into MAPPERS
+    forced_action: jnp.ndarray  # () i32 scripted action, -1 = learned policy
+    explore: jnp.ndarray        # () bool ε-greedy exploration on/off
+
+
+def pei_hot_index(n_pages: int, cfg: NMPConfig) -> int:
+    """Sort index of the PEI hot-page threshold among the real pages.
+
+    Matches the historical static indexing `sorted[int(P*(1-frac)) - 1]`
+    (including Python negative-index wraparound for tiny P).
+    """
+    return (int(n_pages * (1 - cfg.pei_hot_frac)) - 1) % n_pages
+
+
+def serial_epochs(n_ops: int, cfg: NMPConfig) -> int:
+    return int(np.ceil(n_ops / cfg.epoch_ops)) + 1
+
+
+def phase_ring_len(trace: Trace, cfg: NMPConfig) -> int:
+    """Length of the same-phase OPC reference ring for one trace."""
+    iter_ops = trace.iter_ops or trace.n_ops
+    n_epochs = serial_epochs(trace.n_ops, cfg)
+    return int(np.clip(iter_ops // cfg.epoch_ops, 1, n_epochs + 1))
+
+
+def make_ctx(trace: Trace, cfg: NMPConfig, technique: str, mapper: str,
+             forced_action: int = -1, explore: bool = True) -> TraceCtx:
+    assert mapper in MAPPERS and technique in baselines.TECHNIQUES
+    return TraceCtx(
+        n_ops=jnp.asarray(trace.n_ops, jnp.int32),
+        n_pages=jnp.asarray(trace.n_pages, jnp.int32),
+        t_ring=jnp.asarray(phase_ring_len(trace, cfg), jnp.int32),
+        pei_idx=jnp.asarray(pei_hot_index(trace.n_pages, cfg), jnp.int32),
+        technique=jnp.asarray(TECH_ID[technique], jnp.int32),
+        mapper=jnp.asarray(MAPPER_ID[mapper], jnp.int32),
+        forced_action=jnp.asarray(forced_action, jnp.int32),
+        explore=jnp.asarray(explore, bool),
+    )
 
 
 class EnvState(NamedTuple):
@@ -96,14 +156,17 @@ class EpisodeResult(NamedTuple):
     metrics: dict[str, jnp.ndarray]   # per-epoch stacked
 
 
-def _init_env(trace_np: dict, n_pages: int, cfg: NMPConfig, spec: StateSpec,
-              seed: int, page_table: np.ndarray | None,
-              t_ring: int = 1) -> EnvState:
-    P, C, M = n_pages, cfg.n_cubes, cfg.n_mcs
+def _init_env(page_table: jnp.ndarray, cfg: NMPConfig, spec: StateSpec,
+              seed, t_ring: int = 1) -> EnvState:
+    """Fresh env state. `page_table` fixes P (possibly padded); `seed` may be a
+    traced scalar (episode scans re-init inside jit); `t_ring` is the static
+    ring buffer size (>= every lane's effective TraceCtx.t_ring)."""
+    page_table = jnp.asarray(page_table, jnp.int32)
+    P = page_table.shape[0]
+    C, M = cfg.n_cubes, cfg.n_mcs
     L = n_links(cfg)
-    pt = page_table if page_table is not None else default_alloc(P, cfg)
     return EnvState(
-        page_to_cube=jnp.asarray(pt, jnp.int32),
+        page_to_cube=page_table,
         compute_remap=jnp.full((P,), -1, jnp.int32),
         op_ptr=jnp.zeros((), jnp.int32),
         interval_level=jnp.zeros((), jnp.int32),    # invoke every epoch initially
@@ -148,46 +211,57 @@ def _init_env(trace_np: dict, n_pages: int, cfg: NMPConfig, spec: StateSpec,
 # ---------------------------------------------------------------------------
 
 def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
-           rw_pages: jnp.ndarray, n_ops: int, cfg: NMPConfig, spec: StateSpec,
-           technique: str, mapper: str, agent_cfg: AgentConfig | None,
-           tom_cands: jnp.ndarray | None, explore: bool,
-           forced_action: int = -1):
+           rw_pages: jnp.ndarray, tom_cands: jnp.ndarray, ctx: TraceCtx,
+           cfg: NMPConfig, spec: StateSpec, agent_cfg: AgentConfig,
+           has_agent: bool):
+    """One epoch of the unified engine.
+
+    Technique and mapper are runtime selectors (all paths are computed, the
+    lane's path is picked with `where`), so the same compiled body serves any
+    scenario lane. Every update is gated on `has_ops` at the end: epochs after
+    the trace runs out leave env, agent and metrics untouched, which makes
+    op-count padding across a batch exact.
+    """
     P = env.page_to_cube.shape[0]
     C = cfg.n_cubes
     W = cfg.w_max
     window = jnp.asarray(cfg.epoch_ops, jnp.int32)
+    is_tom = ctx.mapper == MAPPER_ID["tom"]
+    is_aimm = ctx.mapper == MAPPER_ID["aimm"]
+    page_live = (jnp.arange(P) < ctx.n_pages).astype(jnp.float32)
 
     # ---- window fetch (trace arrays pre-padded by W) ----
     sl = lambda a: jax.lax.dynamic_slice(a, (env.op_ptr,), (W,))
     dest, src1, src2 = sl(trace["dest"]), sl(trace["src1"]), sl(trace["src2"])
     idx = jnp.arange(W)
-    valid = ((idx < window) & (env.op_ptr + idx < n_ops)).astype(jnp.float32)
+    valid = ((idx < window) & (env.op_ptr + idx < ctx.n_ops)).astype(jnp.float32)
     w_valid = valid.sum()
     has_ops = w_valid > 0
 
     # ---- data mapping (TOM may override the page table) ----
-    if mapper == "tom":
-        eff_table = jnp.where(env.tom_active >= 0,
-                              tom_cands[jnp.maximum(env.tom_active, 0)],
-                              env.page_to_cube)
-    else:
-        eff_table = env.page_to_cube
+    eff_table = jnp.where(is_tom & (env.tom_active >= 0),
+                          tom_cands[jnp.maximum(env.tom_active, 0)],
+                          env.page_to_cube)
     dcube = eff_table[dest]
     s1cube = eff_table[src1]
     s2cube = eff_table[src2]
 
     # ---- schedule compute cube ----
-    thresh = jnp.sort(env.page_access_ema)[int(P * (1 - cfg.pei_hot_frac)) - 1]
+    # PEI hot threshold: padded pages have EMA 0 and sort to the front, so the
+    # real-page quantile lives at offset (P - n_pages) + pei_idx.
+    sorted_ema = jnp.sort(env.page_access_ema)
+    thresh = sorted_ema[(P - ctx.n_pages) + ctx.pei_idx]
     hot1 = env.page_access_ema[src1] >= jnp.maximum(thresh, 1e-6)
     hot2 = env.page_access_ema[src2] >= jnp.maximum(thresh, 1e-6)
-    ccube = baselines.schedule(technique, dcube, s1cube, s2cube, hot1, hot2)
-    if mapper == "aimm":
-        # compute-remap table: -1 none, 0..C-1 fixed cube, C = "source mode"
-        # (schedule at the op's own first-source cube, paper action (vi)).
-        cr = env.compute_remap[dest]
-        cr = jnp.where(cr >= 0, cr, env.compute_remap[src1])
-        cr = jnp.where(cr >= 0, cr, env.compute_remap[src2])
-        ccube = jnp.where(cr == C, s1cube, jnp.where(cr >= 0, cr, ccube))
+    ccube = baselines.schedule_by_id(ctx.technique, dcube, s1cube, s2cube,
+                                     hot1, hot2)
+    # compute-remap table: -1 none, 0..C-1 fixed cube, C = "source mode"
+    # (schedule at the op's own first-source cube, paper action (vi)).
+    cr = env.compute_remap[dest]
+    cr = jnp.where(cr >= 0, cr, env.compute_remap[src1])
+    cr = jnp.where(cr >= 0, cr, env.compute_remap[src2])
+    aimm_cc = jnp.where(cr == C, s1cube, jnp.where(cr >= 0, cr, ccube))
+    ccube = jnp.where(is_aimm, aimm_cc, ccube)
 
     # ---- route: flows s1->c, s2->c, c->d (skip zero-hop flows implicitly) ----
     fsrc = jnp.concatenate([s1cube, s2cube, ccube])
@@ -242,7 +316,7 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
     # as {1,2,3,4} fixed-size epochs between invocations).
     stride = env.interval_level + 1
     invoke = (env.since_invoke + 1 >= stride) & has_ops
-    agent_overhead = jnp.where(invoke, cfg.t_agent, 0.0) if mapper == "aimm" else 0.0
+    agent_overhead = jnp.where(is_aimm & invoke, cfg.t_agent, 0.0)
     cycles = (agent_overhead + mc_inject
               + jnp.maximum(jnp.maximum(compute_serial, link_serial), dram_serial)
               + mean_lat + table_excess * cfg.t_op + env.pending_mig_stall)
@@ -256,9 +330,8 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
     span_sum = env.span_sum + opc
     span_n = env.span_n + jnp.where(has_ops, 1.0, 0.0)
     cur_mean = span_sum / jnp.maximum(span_n, 1.0)
-    T_ring = env.opc_ring.shape[0]
-    slot = env.epochs.astype(jnp.int32) % T_ring
-    ring_ready = (env.epochs >= T_ring) & has_ops
+    slot = env.epochs.astype(jnp.int32) % ctx.t_ring
+    ring_ready = (env.epochs >= ctx.t_ring) & has_ops
     ref_sum = env.ref_sum + jnp.where(ring_ready, env.opc_ring[slot], 0.0)
     ref_n = env.ref_n + jnp.where(ring_ready, 1.0, 0.0)
     ref_mean = ref_sum / jnp.maximum(ref_n, 1.0)
@@ -302,164 +375,166 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
         lat_hist=push_hist(cache.lat_hist, ent, mean_lat),
     )
 
-    # ---- mapper-specific control ----
+    # ---- AIMM control (computed for every lane; applied where is_aimm) ----
     env_rng, k_agent, k_nbr = jax.random.split(env.rng, 3)
-    mig_latency = jnp.zeros(())
-    mig_stall = jnp.zeros(())
-    mig_loads = jnp.zeros_like(env.pending_mig_loads)
-    migrated = jnp.zeros(())
-    page_to_cube = env.page_to_cube
-    compute_remap = env.compute_remap
-    interval_level = env.interval_level
-    tom_scores, tom_active = env.tom_scores, env.tom_active
-    action = jnp.zeros((), jnp.int32)
     new_agent = agent
 
-    if mapper == "aimm":
-        # state vector (paper Fig. 3)
-        page_rate = touches_hot / jnp.maximum(3.0 * w_valid, 1.0)
-        mig_per_acc = cache.migrations[ent] / jnp.maximum(cache.accesses[ent], 1.0)
-        svec = build_state(
-            spec, nmp_occ, rb_hit, mc_queue, env.global_act_hist,
-            interval_level, page_rate, mig_per_acc,
-            cache.hop_hist[ent], cache.lat_hist[ent], cache.mig_hist[ent],
-            cache.act_hist[ent], eff_table[hot_page], ccube_hot,
-            occ_norm=float(cfg.nmp_table_size),
-        )
-        if forced_action >= 0:
-            # scripted policy (ablations / mechanism-ceiling studies): bypass
-            # the DQN and take `forced_action` at every invocation.
-            action = jnp.where(invoke, forced_action, DEFAULT).astype(jnp.int32)
-            new_agent = agent
-        else:
-            # Fig. 4-2 flow: at an invocation, the completed transition
-            # (s_{t-1}, a_{t-1}, r_{t-1}, s_t) enters the replay buffer; the
-            # DNN trains continually (every epoch) off the replay buffer.
-            sel = lambda new, old: jax.tree.map(
-                lambda n, o: jnp.where(invoke & (env.prev_span_mean >= 0), n, o),
-                new, old)
-            agent_obs = agent_mod.observe(agent, env.prev_state_vec,
-                                          env.prev_action, reward, svec)
-            new_agent = sel(agent_obs, agent)
-            new_agent = agent_mod.train(new_agent, agent_cfg)
-            action_g, new_agent = agent_mod.act(new_agent, agent_cfg, svec,
-                                                explore)
-            action = jnp.where(invoke, action_g, DEFAULT).astype(jnp.int32)
+    # state vector (paper Fig. 3)
+    page_rate = touches_hot / jnp.maximum(3.0 * w_valid, 1.0)
+    mig_per_acc = cache.migrations[ent] / jnp.maximum(cache.accesses[ent], 1.0)
+    svec = build_state(
+        spec, nmp_occ, rb_hit, mc_queue, env.global_act_hist,
+        env.interval_level, page_rate, mig_per_acc,
+        cache.hop_hist[ent], cache.lat_hist[ent], cache.mig_hist[ent],
+        cache.act_hist[ent], eff_table[hot_page], ccube_hot,
+        occ_norm=float(cfg.nmp_table_size),
+    )
+    # scripted policy (ablations / mechanism-ceiling studies): when
+    # ctx.forced_action >= 0, bypass the DQN at every invocation.
+    action = jnp.where(invoke, ctx.forced_action, DEFAULT).astype(jnp.int32)
+    if has_agent:
+        # Fig. 4-2 flow: at an invocation, the completed transition
+        # (s_{t-1}, a_{t-1}, r_{t-1}, s_t) enters the replay buffer; the
+        # DNN trains continually (every epoch) off the replay buffer.
+        sel = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(invoke & (env.prev_span_mean >= 0), n, o),
+            new, old)
+        agent_obs = agent_mod.observe(agent, env.prev_state_vec,
+                                      env.prev_action, reward, svec)
+        agent_full = sel(agent_obs, agent)
+        agent_full = agent_mod.train(agent_full, agent_cfg)
+        action_g, agent_full = agent_mod.act(agent_full, agent_cfg, svec,
+                                             ctx.explore)
+        action = jnp.where(ctx.forced_action >= 0, action,
+                           jnp.where(invoke, action_g, DEFAULT)).astype(jnp.int32)
+        upd = has_ops & is_aimm & (ctx.forced_action < 0)
+        new_agent = jax.tree.map(lambda n, o: jnp.where(upd, n, o),
+                                 agent_full, agent)
+    action = jnp.where(is_aimm, action, jnp.zeros((), jnp.int32))
 
-        # --- apply action (no-ops unless this epoch is an invocation) ---
-        nbr = act_mod.random_neighbor(k_nbr, ccube_hot, cfg.mesh_x, cfg.mesh_y)
-        diag = act_mod.diagonal_opposite(ccube_hot, cfg.mesh_x, cfg.mesh_y)
-        is_data = (action == NEAR_DATA) | (action == FAR_DATA)
-        is_comp = ((action == NEAR_COMPUTE) | (action == FAR_COMPUTE)
-                   | (action == SOURCE_COMPUTE))
-        data_tgt = jnp.where(action == NEAR_DATA, nbr, diag)
-        comp_tgt = jnp.where(action == NEAR_COMPUTE, nbr,
-                             jnp.where(action == FAR_COMPUTE, diag,
-                                       jnp.asarray(C, jnp.int32)))
+    # --- apply action (no-ops unless an aimm lane at an invocation) ---
+    nbr = act_mod.random_neighbor(k_nbr, ccube_hot, cfg.mesh_x, cfg.mesh_y)
+    diag = act_mod.diagonal_opposite(ccube_hot, cfg.mesh_x, cfg.mesh_y)
+    is_data = (action == NEAR_DATA) | (action == FAR_DATA)
+    is_comp = ((action == NEAR_COMPUTE) | (action == FAR_COMPUTE)
+               | (action == SOURCE_COMPUTE))
+    data_tgt = jnp.where(action == NEAR_DATA, nbr, diag)
+    comp_tgt = jnp.where(action == NEAR_COMPUTE, nbr,
+                         jnp.where(action == FAR_COMPUTE, diag,
+                                   jnp.asarray(C, jnp.int32)))
 
-        old_cube = page_to_cube[hot_page]
-        mig_latency, mig_stall, mig_loads = migration_cost(
-            old_cube, data_tgt, rw_pages[hot_page], touches_hot, cfg)
-        moved = is_data & (data_tgt != old_cube) & invoke
-        migrated = moved.astype(jnp.float32)
-        page_to_cube = page_to_cube.at[hot_page].set(
-            jnp.where(moved, data_tgt, old_cube).astype(jnp.int32))
-        mig_latency = jnp.where(moved, mig_latency, 0.0)
-        mig_stall = jnp.where(moved, mig_stall, 0.0)
-        mig_loads = jnp.where(moved, mig_loads, 0.0)
+    old_cube = env.page_to_cube[hot_page]
+    mig_latency, mig_stall_aimm, mig_loads_aimm = migration_cost(
+        old_cube, data_tgt, rw_pages[hot_page], touches_hot, cfg)
+    moved = is_data & (data_tgt != old_cube) & invoke & is_aimm
+    migrated_aimm = moved.astype(jnp.float32)
+    page_to_cube = env.page_to_cube.at[hot_page].set(
+        jnp.where(moved, data_tgt, old_cube).astype(jnp.int32))
+    mig_latency = jnp.where(moved, mig_latency, 0.0)
+    mig_stall_aimm = jnp.where(moved, mig_stall_aimm, 0.0)
+    mig_loads_aimm = jnp.where(moved, mig_loads_aimm, 0.0)
 
-        # DEFAULT on the selected page restores its default mapping (clears the
-        # compute-remap entry) — gives the agent an undo for stale remaps.
-        entry = jnp.where(is_comp, comp_tgt,
-                          jnp.where(action == DEFAULT,
-                                    jnp.asarray(-1, jnp.int32),
-                                    compute_remap[hot_page]))
-        compute_remap = compute_remap.at[hot_page].set(
-            jnp.where(invoke, entry, compute_remap[hot_page]).astype(jnp.int32))
-        # Finite compute-remap table: entries expire after remap_ttl epochs
-        # (LRU-style eviction under table pressure) — bounds stale-remap damage.
-        remap_age = jnp.where(compute_remap >= 0, env.remap_age + 1, 0)
-        expired = remap_age > cfg.remap_ttl
-        compute_remap = jnp.where(expired, -1, compute_remap)
-        remap_age = jnp.where(expired, 0, remap_age)
-        interval_level = jnp.where(invoke,
-                                   act_mod.adjust_interval(interval_level, action),
-                                   interval_level)
+    # DEFAULT on the selected page restores its default mapping (clears the
+    # compute-remap entry) — gives the agent an undo for stale remaps.
+    entry = jnp.where(is_comp, comp_tgt,
+                      jnp.where(action == DEFAULT,
+                                jnp.asarray(-1, jnp.int32),
+                                env.compute_remap[hot_page]))
+    compute_remap = env.compute_remap.at[hot_page].set(
+        jnp.where(invoke & is_aimm, entry,
+                  env.compute_remap[hot_page]).astype(jnp.int32))
+    # Finite compute-remap table: entries expire after remap_ttl epochs
+    # (LRU-style eviction under table pressure) — bounds stale-remap damage.
+    remap_age = jnp.where(compute_remap >= 0, env.remap_age + 1, 0)
+    expired = remap_age > cfg.remap_ttl
+    compute_remap = jnp.where(expired, -1, compute_remap)
+    remap_age = jnp.where(expired, 0, remap_age)
+    interval_level = jnp.where(invoke & is_aimm,
+                               act_mod.adjust_interval(env.interval_level,
+                                                       action),
+                               env.interval_level)
 
-        cache = cache._replace(
-            migrations=cache.migrations.at[ent].add(migrated),
-            mig_hist=jnp.where(moved,
-                               push_hist(cache.mig_hist, ent, mig_latency),
-                               cache.mig_hist),
-            act_hist=jnp.where(invoke,
-                               push_hist(cache.act_hist, ent,
-                                         action.astype(jnp.float32)),
-                               cache.act_hist),
-        )
-        gah = jnp.where(invoke,
-                        jnp.concatenate([env.global_act_hist[1:], action[None]]),
-                        env.global_act_hist)
-    else:
-        svec = env.prev_state_vec
-        gah = env.global_act_hist
+    cache = cache._replace(
+        migrations=cache.migrations.at[ent].add(migrated_aimm),
+        mig_hist=jnp.where(moved,
+                           push_hist(cache.mig_hist, ent, mig_latency),
+                           cache.mig_hist),
+        act_hist=jnp.where(invoke & is_aimm,
+                           push_hist(cache.act_hist, ent,
+                                     action.astype(jnp.float32)),
+                           cache.act_hist),
+    )
+    gah = jnp.where(invoke & is_aimm,
+                    jnp.concatenate([env.global_act_hist[1:], action[None]]),
+                    env.global_act_hist)
 
-    if mapper == "tom":
-        K = tom_cands.shape[0]
-        period = K + 8                 # K profiling windows + 8 commit windows
-        phase = (env.epochs.astype(jnp.int32)) % period
-        # profiling: evaluate candidate `phase` on this window
-        def score_k(k):
-            return baselines.tom_colocation_score(tom_cands[k], dest, src1,
-                                                  src2, valid, C)
-        scores_all = jax.vmap(score_k)(jnp.arange(K))
-        tom_scores = jnp.where(phase < K,
-                               tom_scores.at[jnp.clip(phase, 0, K - 1)].set(
-                                   scores_all[jnp.clip(phase, 0, K - 1)]),
-                               tom_scores)
-        commit = phase == K
-        best = jnp.argmax(tom_scores).astype(jnp.int32)
-        prev_map = jnp.where(tom_active >= 0,
-                             tom_cands[jnp.maximum(tom_active, 0)],
-                             env.page_to_cube)
-        changed = jnp.sum((tom_cands[best] != prev_map).astype(jnp.float32))
-        tom_active = jnp.where(commit, best, tom_active)
-        # remap data movement: amortized one-time link traffic + stall
-        mig_stall = jnp.where(commit, changed * cfg.page_flits / (n_links(cfg) * 8.0),
+    # ---- TOM control (computed for every lane; applied where is_tom) ----
+    K = tom_cands.shape[0]
+    period = K + 8                 # K profiling windows + 8 commit windows
+    phase = (env.epochs.astype(jnp.int32)) % period
+    # profiling: evaluate candidate `phase` on this window
+    def score_k(k):
+        return baselines.tom_colocation_score(tom_cands[k], dest, src1,
+                                              src2, valid, C)
+    scores_all = jax.vmap(score_k)(jnp.arange(K))
+    tom_scores = jnp.where(is_tom & (phase < K),
+                           env.tom_scores.at[jnp.clip(phase, 0, K - 1)].set(
+                               scores_all[jnp.clip(phase, 0, K - 1)]),
+                           env.tom_scores)
+    commit = is_tom & (phase == K)
+    best = jnp.argmax(tom_scores).astype(jnp.int32)
+    prev_map = jnp.where(env.tom_active >= 0,
+                         tom_cands[jnp.maximum(env.tom_active, 0)],
+                         env.page_to_cube)
+    changed = jnp.sum((tom_cands[best] != prev_map).astype(jnp.float32)
+                      * page_live)
+    tom_active = jnp.where(commit, best, env.tom_active)
+    # remap data movement: amortized one-time link traffic + stall
+    mig_stall_tom = jnp.where(commit,
+                              changed * cfg.page_flits / (n_links(cfg) * 8.0),
                               0.0)
-        migrated = jnp.where(commit, changed, 0.0)
+    migrated_tom = jnp.where(commit, changed, 0.0)
+
+    # ---- combine mapper outputs ----
+    mig_stall = jnp.where(is_aimm, mig_stall_aimm,
+                          jnp.where(is_tom, mig_stall_tom, 0.0))
+    mig_loads = jnp.where(is_aimm, mig_loads_aimm,
+                          jnp.zeros_like(env.pending_mig_loads))
+    migrated = jnp.where(is_aimm, migrated_aimm,
+                         jnp.where(is_tom, migrated_tom, 0.0))
 
     # ---- accesses on migrated pages (Fig. 10 stat) ----
-    mig_mask = env.mig_page_mask
-    if mapper == "aimm":
-        mig_mask = mig_mask.at[hot_page].set(
-            jnp.maximum(mig_mask[hot_page], migrated))
+    mig_mask = jnp.where(is_aimm,
+                         env.mig_page_mask.at[hot_page].set(
+                             jnp.maximum(env.mig_page_mask[hot_page],
+                                         migrated_aimm)),
+                         env.mig_page_mask)
     acc_mig = (jnp.sum(mig_mask[dest] * valid) + jnp.sum(mig_mask[src1] * valid)
                + jnp.sum(mig_mask[src2] * valid))
 
     # ---- energy counters ----
+    aimm_f = is_aimm.astype(jnp.float32)
     en = env.energy
     en = en.at[EN_MEM_BITS].add(w_valid * 3 * cfg.packet_bytes * 8)
     en = en.at[EN_NET_BIT_HOPS].add(hops_total * cfg.packet_bytes * 8
                                     + migrated * cfg.page_bytes * 8 * 2)
     en = en.at[EN_PAGE_CACHE].add(2 * w_valid)
     en = en.at[EN_NMP_BUF].add(2 * w_valid)
-    if mapper == "aimm":
-        en = en.at[EN_MIG_Q].add(2 * migrated)
-        en = en.at[EN_MDMA].add(migrated * cfg.page_flits)
-        bs = agent_cfg.dqn.batch_size
-        inv = invoke.astype(jnp.float32)
-        en = en.at[EN_WEIGHT].add(inv + 3 * bs)  # inference + fwd/bwd batch
-        en = en.at[EN_REPLAY].add(inv + bs)
-        en = en.at[EN_STATE_BUF].add(2.0 * inv)
+    bs = agent_cfg.dqn.batch_size
+    inv = (invoke & is_aimm).astype(jnp.float32)
+    en = en.at[EN_MIG_Q].add(2 * migrated_aimm * aimm_f)
+    en = en.at[EN_MDMA].add(migrated_aimm * cfg.page_flits * aimm_f)
+    en = en.at[EN_WEIGHT].add((inv + 3 * bs) * aimm_f)  # inference + fwd/bwd batch
+    en = en.at[EN_REPLAY].add((inv + bs) * aimm_f)
+    en = en.at[EN_STATE_BUF].add(2.0 * inv)
 
-    new_env = EnvState(
+    cand_env = EnvState(
         page_to_cube=page_to_cube,
         compute_remap=compute_remap,
         op_ptr=env.op_ptr + window,
         interval_level=interval_level,
         since_invoke=jnp.where(invoke, 0,
-                               env.since_invoke
-                               + jnp.where(has_ops, 1, 0)).astype(jnp.int32),
+                               env.since_invoke + 1).astype(jnp.int32),
         span_sum=jnp.where(invoke, 0.0, span_sum),
         span_n=jnp.where(invoke, 0.0, span_n),
         prev_span_mean=jnp.where(invoke, cur_mean, env.prev_span_mean),
@@ -474,31 +549,36 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
         cache=cache,
         pending_mig_loads=mig_loads,
         pending_mig_stall=mig_stall,
-        prev_state_vec=jnp.where(invoke, svec, env.prev_state_vec),
+        prev_state_vec=jnp.where(invoke & is_aimm, svec, env.prev_state_vec),
         prev_action=jnp.where(invoke, action, env.prev_action).astype(jnp.int32),
-        recent_pages=(jnp.where(invoke,
-                                jnp.concatenate([env.recent_pages[1:],
-                                                 hot_page[None]]),
-                                env.recent_pages)
-                      if mapper == "aimm" else env.recent_pages),
-        remap_age=(remap_age if mapper == "aimm" else env.remap_age),
+        recent_pages=jnp.where(invoke & is_aimm,
+                               jnp.concatenate([env.recent_pages[1:],
+                                                hot_page[None]]),
+                               env.recent_pages),
+        remap_age=jnp.where(is_aimm, remap_age, env.remap_age),
         rng=env_rng,
         tom_scores=tom_scores,
         tom_active=tom_active,
         cycles=env.cycles + cycles,
         ops_done=env.ops_done + w_valid,
         hops_sum=env.hops_sum + hops_total,
-        util_sum=env.util_sum + jnp.where(has_ops, util, 0.0),
-        epochs=env.epochs + jnp.where(has_ops, 1.0, 0.0),
-        mig_count=env.mig_count + migrated * (1.0 if mapper == "aimm" else 0.0),
+        util_sum=env.util_sum + util,
+        epochs=env.epochs + 1.0,
+        mig_count=env.mig_count + jnp.where(is_aimm, migrated_aimm, 0.0),
         mig_page_mask=mig_mask,
         access_total=env.access_total + 3 * w_valid,
         access_on_migrated=env.access_on_migrated + acc_mig,
         energy=en,
     )
+    # Gate the entire state transition on has_ops: once the (possibly padded)
+    # trace is exhausted, every subsequent epoch is an exact no-op, so batched
+    # lanes of different lengths stay bit-identical to their serial runs.
+    new_env = jax.tree.map(lambda n, o: jnp.where(has_ops, n, o), cand_env, env)
     metrics = {
         "opc": opc, "cycles": cycles, "reward": reward,
-        "action": action, "mean_hops": mean_hops, "util": util,
+        "action": jnp.where(has_ops, action, jnp.zeros((), jnp.int32)),
+        "mean_hops": jnp.where(has_ops, mean_hops, 0.0),
+        "util": jnp.where(has_ops, util, 0.0),
         "invoke": invoke.astype(jnp.float32), "valid": w_valid,
     }
     return new_env, new_agent, metrics
@@ -508,21 +588,25 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
 # Episode runner
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("n_ops", "cfg", "spec", "technique",
-                                   "mapper", "agent_cfg", "n_epochs", "explore",
-                                   "forced_action"))
-def _run_scan(trace, rw_pages, env, agent, tom_cands, n_ops, cfg, spec,
-              technique, mapper, agent_cfg, n_epochs, explore,
-              forced_action=-1):
+def scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
+                agent_cfg, n_epochs, has_agent):
+    """Un-jitted epoch scan shared by the serial and batched runners."""
     def body(carry, _):
         env, agent = carry
-        env, agent, m = _epoch(env, agent, trace, rw_pages, n_ops, cfg, spec,
-                               technique, mapper, agent_cfg, tom_cands, explore,
-                               forced_action)
+        env, agent, m = _epoch(env, agent, trace, rw_pages, tom_cands, ctx,
+                               cfg, spec, agent_cfg, has_agent)
         return (env, agent), m
 
     (env, agent), ms = jax.lax.scan(body, (env, agent), None, length=n_epochs)
     return env, agent, ms
+
+
+@partial(jax.jit, static_argnames=("cfg", "spec", "agent_cfg", "n_epochs",
+                                   "has_agent"))
+def _run_scan(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
+              agent_cfg, n_epochs, has_agent):
+    return scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
+                       agent_cfg, n_epochs, has_agent)
 
 
 def state_spec_for(cfg: NMPConfig) -> StateSpec:
@@ -542,6 +626,13 @@ def default_agent_cfg(cfg: NMPConfig) -> AgentConfig:
                                      gamma=0.0))
 
 
+def pad_trace_ops(trace: Trace, n_total: int, cfg: NMPConfig) -> dict:
+    """Trace op arrays padded to `n_total + w_max` (dict of jnp arrays)."""
+    pad = n_total - trace.n_ops + cfg.w_max
+    return {k: jnp.asarray(np.concatenate([v, np.zeros(pad, v.dtype)]))
+            for k, v in trace.as_dict().items() if k != "program_id"}
+
+
 def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
                 technique: str = "bnmp", mapper: str = "none",
                 agent: AgentState | None = None,
@@ -556,26 +647,23 @@ def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
     """
     assert mapper in MAPPERS and technique in baselines.TECHNIQUES
     spec = state_spec_for(cfg)
-    if mapper == "aimm":
-        agent_cfg = agent_cfg or default_agent_cfg(cfg)
-        if agent is None and forced_action < 0:
-            agent = agent_mod.init_agent(jax.random.PRNGKey(seed + 1), agent_cfg)
-    n_ops = trace.n_ops
-    n_epochs = int(np.ceil(n_ops / cfg.epoch_ops)) + 1
+    agent_cfg = agent_cfg or default_agent_cfg(cfg)
+    has_agent = mapper == "aimm" and forced_action < 0
+    if has_agent and agent is None:
+        agent = agent_mod.init_agent(jax.random.PRNGKey(seed + 1), agent_cfg)
+    n_epochs = serial_epochs(trace.n_ops, cfg)
 
-    pad = cfg.w_max
-    tr = {k: jnp.asarray(np.concatenate([v, np.zeros(pad, v.dtype)]))
-          for k, v in trace.as_dict().items() if k != "program_id"}
+    tr = pad_trace_ops(trace, trace.n_ops, cfg)
     rw = jnp.asarray(trace.read_write)
-    iter_ops = trace.iter_ops or trace.n_ops
-    t_ring = int(np.clip(iter_ops // cfg.epoch_ops, 1, n_epochs + 1))
-    env = _init_env(tr, trace.n_pages, cfg, spec, seed, page_table, t_ring)
+    pt = page_table if page_table is not None else default_alloc(trace.n_pages, cfg)
+    env = _init_env(pt, cfg, spec, seed, phase_ring_len(trace, cfg))
     tom_cands = baselines.tom_candidates(trace.n_pages, cfg)
+    ctx = make_ctx(trace, cfg, technique, mapper, forced_action, explore)
 
-    env, agent, ms = _run_scan(tr, rw, env, agent, tom_cands, n_ops, cfg, spec,
-                               technique, mapper, agent_cfg, n_epochs, explore,
-                               forced_action)
-    return EpisodeResult(env, agent, ms)
+    env, agent_out, ms = _run_scan(tr, rw, env, agent if has_agent else None,
+                                   tom_cands, ctx, cfg, spec, agent_cfg,
+                                   n_epochs, has_agent)
+    return EpisodeResult(env, agent_out if has_agent else agent, ms)
 
 
 def run_program(trace: Trace, cfg: NMPConfig = NMPConfig(),
@@ -585,7 +673,11 @@ def run_program(trace: Trace, cfg: NMPConfig = NMPConfig(),
                 agent_cfg: AgentConfig | None = None,
                 agent: AgentState | None = None) -> list[EpisodeResult]:
     """Paper §6.1 protocol: run the application episode `episodes` times,
-    clearing simulation state between runs but keeping the DNN."""
+    clearing simulation state between runs but keeping the DNN.
+
+    This is the serial reference runner; `sweep.run_grid` executes the same
+    protocol (episode chaining inside one compiled scan) for whole grids.
+    """
     results = []
     for e in range(episodes):
         res = run_episode(trace, cfg, technique, mapper, agent=agent,

@@ -1,0 +1,126 @@
+"""Scenario registry: named grids of (trace, technique, mapper, seed) cells.
+
+A `Scenario` is one lane of a batched sweep — everything `sweep.run_grid`
+needs to simulate one (workload, technique, mapper) cell for some number of
+chained episodes. Grid builders cover the paper's experiment families:
+
+  single_program_grid : app x technique x mapper x seed (Figs. 6-10)
+  multi_program_grid  : merged co-running apps, optional HOARD allocation
+                        (Fig. 12 protocol)
+  forced_action_grid  : scripted-policy ablations, one lane per AIMM action
+                        (mechanism-ceiling studies)
+
+`GRIDS` maps names to builders so benchmarks/examples can request a standard
+grid by name (`build("single", apps=..., n_ops=...)`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.actions import N_ACTIONS
+from repro.nmp.config import NMPConfig
+from repro.nmp.paging import hoard_alloc
+from repro.nmp.traces import Trace, make_trace, merge_traces, program_of_page
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One lane of a sweep: a trace plus its technique/mapper/seed protocol."""
+    name: str
+    trace: Trace
+    technique: str = "bnmp"
+    mapper: str = "none"
+    seed: int = 0
+    episodes: int = 1
+    eval_episode: bool = False       # append a greedy (explore=False) episode
+    forced_action: int = -1          # >= 0: scripted policy, no DQN
+    page_table: np.ndarray | None = None
+
+    @property
+    def total_episodes(self) -> int:
+        return self.episodes + (1 if self.eval_episode else 0)
+
+
+def single_program_grid(apps: Sequence[str] = ("KM", "RBM", "SPMV"),
+                        techniques: Sequence[str] = ("bnmp",),
+                        mappers: Sequence[str] = ("none", "tom", "aimm"),
+                        n_ops: int = 4096, seeds: Sequence[int] = (0,),
+                        episodes: int = 1, aimm_episodes: int | None = None,
+                        eval_episode: bool = False) -> list[Scenario]:
+    """The paper's core grid. AIMM cells may train longer (`aimm_episodes`)
+    than the deterministic baselines, which need a single episode."""
+    out = []
+    for app in apps:
+        tr = make_trace(app, n_ops=n_ops)
+        for tech in techniques:
+            for mapper in mappers:
+                for seed in seeds:
+                    eps = (aimm_episodes if (mapper == "aimm"
+                                             and aimm_episodes is not None)
+                           else episodes)
+                    out.append(Scenario(
+                        name=f"{app}/{tech}/{mapper}/s{seed}",
+                        trace=tr, technique=tech, mapper=mapper, seed=seed,
+                        episodes=eps,
+                        eval_episode=eval_episode and mapper == "aimm"))
+    return out
+
+
+DEFAULT_COMBOS = (
+    ("SC-KM", ("SC", "KM")),
+    ("LUD-RBM-SPMV", ("LUD", "RBM", "SPMV")),
+    ("SC-KM-RD-MAC", ("SC", "KM", "RD", "MAC")),
+)
+
+
+def multi_program_grid(combos: Iterable[tuple[str, Sequence[str]]] = DEFAULT_COMBOS,
+                       n_ops_per_app: int = 4096,
+                       cfg: NMPConfig = NMPConfig(),
+                       technique: str = "bnmp",
+                       episodes: int = 1, aimm_episodes: int | None = None,
+                       seeds: Sequence[int] = (0,)) -> list[Scenario]:
+    """Fig. 12 protocol per combo: shared BNMP baseline, BNMP+HOARD, and
+    BNMP+HOARD+AIMM lanes."""
+    out = []
+    for name, combo in combos:
+        tr = merge_traces([make_trace(a, n_ops=n_ops_per_app) for a in combo])
+        hoard = hoard_alloc(tr.n_pages, cfg, program_of_page(tr))
+        for seed in seeds:
+            out.append(Scenario(name=f"{name}/shared/s{seed}", trace=tr,
+                                technique=technique, seed=seed,
+                                episodes=episodes))
+            out.append(Scenario(name=f"{name}/hoard/s{seed}", trace=tr,
+                                technique=technique, seed=seed,
+                                episodes=episodes, page_table=hoard))
+            out.append(Scenario(name=f"{name}/hoard+aimm/s{seed}", trace=tr,
+                                technique=technique, mapper="aimm", seed=seed,
+                                episodes=aimm_episodes or episodes,
+                                page_table=hoard))
+    return out
+
+
+def forced_action_grid(app: str = "SPMV", n_ops: int = 2048,
+                       technique: str = "bnmp",
+                       actions: Sequence[int] = tuple(range(N_ACTIONS)),
+                       seeds: Sequence[int] = (0,)) -> list[Scenario]:
+    """Scripted-policy ablation: one AIMM lane per forced action."""
+    tr = make_trace(app, n_ops=n_ops)
+    return [Scenario(name=f"{app}/{technique}/forced{a}/s{seed}", trace=tr,
+                     technique=technique, mapper="aimm", seed=seed,
+                     forced_action=a)
+            for a in actions for seed in seeds]
+
+
+GRIDS: dict[str, Callable[..., list[Scenario]]] = {
+    "single": single_program_grid,
+    "multi": multi_program_grid,
+    "ablation": forced_action_grid,
+}
+
+
+def build(name: str, **kw) -> list[Scenario]:
+    """Build a named grid (see GRIDS) with builder-specific overrides."""
+    return GRIDS[name](**kw)

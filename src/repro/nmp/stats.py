@@ -52,12 +52,17 @@ def energy_nj(counters: jnp.ndarray) -> float:
     return float(sum(energy_breakdown(counters).values()))
 
 
-def opc_timeline(res: EpisodeResult, samples: int = 64) -> np.ndarray:
-    """Fixed-size resampled OPC timeline (paper Fig. 9 preserves order)."""
-    opc = np.asarray(res.metrics["opc"])
-    valid = np.asarray(res.metrics["valid"]) > 0
-    opc = opc[valid]
+def resample_opc(opc: np.ndarray, valid: np.ndarray,
+                 samples: int = 64) -> np.ndarray:
+    """Order-preserving fixed-size resample of the valid-epoch OPC series
+    (the paper's Fig. 9 convention); shared by the serial and sweep paths."""
+    opc = np.asarray(opc)[np.asarray(valid) > 0]
     if opc.size == 0:
         return np.zeros(samples)
     idx = np.linspace(0, opc.size - 1, samples).astype(int)
     return opc[idx]
+
+
+def opc_timeline(res: EpisodeResult, samples: int = 64) -> np.ndarray:
+    """Fixed-size resampled OPC timeline (paper Fig. 9 preserves order)."""
+    return resample_opc(res.metrics["opc"], res.metrics["valid"], samples)

@@ -1,0 +1,262 @@
+"""Batched scenario-sweep engine: a whole experiment grid in one compile.
+
+`run_grid` takes a list of `scenarios.Scenario` lanes, pads every trace to a
+common (n_ops, n_pages) envelope, stacks per-lane `EnvState`s, and `jax.vmap`s
+the shared epoch scan (`engine.scan_epochs`) over the scenario axis. Episode
+chaining — the paper's continual-learning protocol where the DQN persists
+across episode resets — is a `jax.lax.scan` over episodes inside the same
+program, so an app x technique x mapper x seed grid that used to cost one
+XLA compile and one Python dispatch per (cell, episode) now costs one compile
+per agent-mode group and a single device dispatch.
+
+Exactness: technique/mapper/forced-action are traced `TraceCtx` selectors and
+every engine update is gated on `has_ops` (see engine._epoch), so each lane's
+`cycles` / `ops_done` / final OPC are bit-identical to a serial
+`run_episode` / `run_program` of the same scenario, including lanes whose
+traces are shorter than the batch envelope (tests/test_sweep_equivalence.py).
+
+Lanes are grouped only by whether they carry a live DQN (`mapper == "aimm"`
+with a learned policy): deterministic lanes skip the agent machinery instead
+of paying for it in lockstep, so a mixed grid compiles at most two programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agent as agent_mod
+from repro.nmp import baselines
+from repro.nmp.config import NMPConfig
+from repro.nmp.engine import (EN_N, TraceCtx, _init_env, default_agent_cfg,
+                              make_ctx, pad_trace_ops, phase_ring_len,
+                              scan_epochs, serial_epochs, state_spec_for)
+from repro.nmp.paging import default_alloc
+from repro.nmp.scenarios import Scenario
+from repro.nmp.stats import energy_breakdown, energy_nj, resample_opc
+
+
+@partial(jax.jit, static_argnames=("cfg", "spec", "agent_cfg", "n_epochs",
+                                   "n_episodes", "ring_len", "has_agent"))
+def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
+               ring_len, has_agent):
+    """vmap(lane) over the stacked grid; inside each lane, scan over episodes,
+    re-initializing the env per episode while chaining the agent through."""
+
+    def lane(b):
+        trace = {"dest": b["dest"], "src1": b["src1"], "src2": b["src2"]}
+        base_ctx = TraceCtx(
+            n_ops=b["n_ops"], n_pages=b["n_pages"], t_ring=b["t_ring"],
+            pei_idx=b["pei_idx"], technique=b["technique"], mapper=b["mapper"],
+            forced_action=b["forced_action"], explore=jnp.asarray(False))
+        agent0 = (agent_mod.init_agent(jax.random.PRNGKey(b["ep_seed"][0] + 1),
+                                       agent_cfg)
+                  if has_agent else None)
+        env0 = _init_env(b["page_table"], cfg, spec, b["ep_seed"][0], ring_len)
+
+        def episode(carry, x):
+            agent, _ = carry
+            seed, explore = x
+            ctx = base_ctx._replace(explore=explore)
+            env = _init_env(b["page_table"], cfg, spec, seed, ring_len)
+            env, agent2, ms = scan_epochs(trace, b["rw"], env, agent,
+                                          tom_cands, ctx, cfg, spec,
+                                          agent_cfg, n_epochs, has_agent)
+            out = {
+                "cycles": env.cycles, "ops": env.ops_done,
+                "hops_sum": env.hops_sum, "util_sum": env.util_sum,
+                "epochs": env.epochs, "migrations": env.mig_count,
+                "pages_migrated": env.mig_page_mask.sum(),
+                "access_total": env.access_total,
+                "access_on_migrated": env.access_on_migrated,
+                "energy": env.energy,
+                "opc_t": ms["opc"], "valid_t": ms["valid"],
+            }
+            return ((agent2 if has_agent else agent), env), out
+
+        xs = (b["ep_seed"], b["ep_explore"])
+        (agent_fin, env_fin), outs = jax.lax.scan(episode, (agent0, env0), xs,
+                                                  length=n_episodes)
+        return outs, env_fin
+
+    return jax.vmap(lane)(batch)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    scenarios: list[Scenario]
+    cfg: NMPConfig
+    metrics: dict[str, np.ndarray]   # (B, E) scalars; energy (B, E, EN_N);
+                                     # opc_t/valid_t (B, E, n_epochs)
+    final_env: Any                   # EnvState stacked over the lane axis
+    n_episodes: int                  # common (padded) episode count E
+    wall_s: float                    # build + compile + run wall time
+
+    def episode_summary(self, lane: int, episode: int | None = None) -> dict:
+        """Per-(lane, episode) summary with the same keys as stats.summarize.
+
+        `episode` defaults to the scenario's last real episode (its greedy
+        eval episode when `eval_episode` is set)."""
+        sc = self.scenarios[lane]
+        e = sc.total_episodes - 1 if episode is None else episode
+        m = self.metrics
+        cycles = max(float(m["cycles"][lane, e]), 1.0)
+        ops = float(m["ops"][lane, e])
+        return {
+            "cycles": cycles,
+            "ops": ops,
+            "opc": ops / cycles,
+            "mean_hops": float(m["hops_sum"][lane, e]) / max(ops, 1.0),
+            "compute_util": (float(m["util_sum"][lane, e])
+                             / max(float(m["epochs"][lane, e]), 1.0)),
+            "migrations": float(m["migrations"][lane, e]),
+            "frac_pages_migrated": (float(m["pages_migrated"][lane, e])
+                                    / sc.trace.n_pages),
+            "frac_access_migrated": (float(m["access_on_migrated"][lane, e])
+                                     / max(float(m["access_total"][lane, e]),
+                                           1.0)),
+            "energy_nj": energy_nj(m["energy"][lane, e]),
+            "energy_breakdown": energy_breakdown(m["energy"][lane, e]),
+        }
+
+    def summary(self, lane: int) -> dict:
+        return self.episode_summary(lane)
+
+    def opc_timeline(self, lane: int, episode: int | None = None,
+                     samples: int = 64) -> np.ndarray:
+        sc = self.scenarios[lane]
+        e = sc.total_episodes - 1 if episode is None else episode
+        return resample_opc(self.metrics["opc_t"][lane, e],
+                            self.metrics["valid_t"][lane, e], samples)
+
+
+def _episode_schedule(sc: Scenario, n_episodes: int) -> tuple[np.ndarray, np.ndarray]:
+    """(seeds, explore) per episode, padded to the batch episode count.
+
+    Training episodes use seed, seed+1, ... (the run_program protocol); the
+    optional eval episode replays the base seed with exploration off. Padding
+    episodes continue the seed sequence and are simply not reported."""
+    seeds = [sc.seed + e for e in range(sc.episodes)]
+    explore = [True] * sc.episodes
+    if sc.eval_episode:
+        seeds.append(sc.seed)
+        explore.append(False)
+    while len(seeds) < n_episodes:
+        seeds.append(sc.seed + len(seeds))
+        explore.append(True)
+    return (np.asarray(seeds, np.int32), np.asarray(explore, bool))
+
+
+def _build_batch(scenarios: Sequence[Scenario], cfg: NMPConfig,
+                 n_ops_max: int, n_pages_max: int, n_episodes: int) -> dict:
+    lanes = []
+    for sc in scenarios:
+        tr = sc.trace
+        ops = {k: np.asarray(v) for k, v in
+               pad_trace_ops(tr, n_ops_max, cfg).items()}
+        pt = (np.asarray(sc.page_table, np.int32) if sc.page_table is not None
+              else default_alloc(tr.n_pages, cfg))
+        # pad the page table/RW flags with never-referenced filler pages that
+        # follow the default interleave, so every entry is a legal cube id
+        pad_pages = np.arange(tr.n_pages, n_pages_max) % cfg.n_cubes
+        pt = np.concatenate([pt, pad_pages.astype(np.int32)])
+        rw = np.concatenate([tr.read_write,
+                             np.zeros(n_pages_max - tr.n_pages, bool)])
+        ctx = make_ctx(tr, cfg, sc.technique, sc.mapper, sc.forced_action)
+        seeds, explore = _episode_schedule(sc, n_episodes)
+        lanes.append({
+            **ops, "page_table": pt, "rw": rw,
+            "n_ops": np.int32(ctx.n_ops), "n_pages": np.int32(ctx.n_pages),
+            "t_ring": np.int32(ctx.t_ring), "pei_idx": np.int32(ctx.pei_idx),
+            "technique": np.int32(ctx.technique),
+            "mapper": np.int32(ctx.mapper),
+            "forced_action": np.int32(ctx.forced_action),
+            "ep_seed": seeds, "ep_explore": explore,
+        })
+    return {k: jnp.asarray(np.stack([ln[k] for ln in lanes]))
+            for k in lanes[0]}
+
+
+def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
+             agent_cfg=None) -> SweepResult:
+    """Run every scenario lane of a grid as one batched, jitted program.
+
+    Returns a SweepResult whose per-lane `cycles`/`ops`/`opc` match the serial
+    `run_episode`/`run_program` protocol bit-for-bit (see module docstring).
+    """
+    scenarios = list(scenarios)
+    assert scenarios, "empty scenario grid"
+    t0 = time.time()
+    spec = state_spec_for(cfg)
+    agent_cfg = agent_cfg or default_agent_cfg(cfg)
+
+    # The spatial envelope (ops/pages/epochs/ring) is shared across both
+    # agent-mode groups so the merged final_env and per-epoch timelines stack;
+    # the episode count is padded per group — deterministic lanes must not
+    # simulate the AIMM lanes' longer training schedules.
+    n_ops_max = max(sc.trace.n_ops for sc in scenarios)
+    n_pages_max = max(sc.trace.n_pages for sc in scenarios)
+    n_epochs = max(serial_epochs(sc.trace.n_ops, cfg) for sc in scenarios)
+    ring_len = max(phase_ring_len(sc.trace, cfg) for sc in scenarios)
+    n_episodes = max(sc.total_episodes for sc in scenarios)
+    tom_cands = baselines.tom_candidates(n_pages_max, cfg)
+
+    def needs_agent(sc: Scenario) -> bool:
+        return sc.mapper == "aimm" and sc.forced_action < 0
+
+    groups = [[i for i, sc in enumerate(scenarios) if needs_agent(sc)],
+              [i for i, sc in enumerate(scenarios) if not needs_agent(sc)]]
+    outs: list = [None] * len(scenarios)
+    envs: list = [None] * len(scenarios)
+    for has_agent, idxs in zip((True, False), groups):
+        if not idxs:
+            continue
+        ep_group = max(scenarios[i].total_episodes for i in idxs)
+        batch = _build_batch([scenarios[i] for i in idxs], cfg, n_ops_max,
+                             n_pages_max, ep_group)
+        out, env_fin = _run_sweep(batch, tom_cands, cfg, spec, agent_cfg,
+                                  n_epochs, ep_group, ring_len, has_agent)
+        out = jax.block_until_ready(out)
+        pad_e = n_episodes - ep_group
+        for j, i in enumerate(idxs):
+            outs[i] = {k: np.pad(np.asarray(v[j]),
+                                 [(0, pad_e)] + [(0, 0)] * (v[j].ndim - 1))
+                       for k, v in out.items()}
+            envs[i] = jax.tree.map(lambda a, j=j: np.asarray(a[j]), env_fin)
+
+    metrics = {k: np.stack([o[k] for o in outs]) for k in outs[0]}
+    final_env = jax.tree.map(lambda *xs: np.stack(xs), *envs)
+    return SweepResult(scenarios=scenarios, cfg=cfg, metrics=metrics,
+                       final_env=final_env, n_episodes=n_episodes,
+                       wall_s=time.time() - t0)
+
+
+def run_grid_serial(scenarios: Sequence[Scenario],
+                    cfg: NMPConfig = NMPConfig()) -> list[dict]:
+    """Reference serial loop over the same grid (one run_episode/run_program
+    per lane). Used by the equivalence tests and the benchmark comparison."""
+    from repro.nmp.engine import run_episode, run_program
+    from repro.nmp.stats import summarize
+    out = []
+    for sc in scenarios:
+        if sc.mapper == "aimm" and sc.forced_action < 0:
+            results = run_program(sc.trace, cfg, sc.technique, "aimm",
+                                  episodes=sc.episodes, seed=sc.seed,
+                                  page_table=sc.page_table)
+            if sc.eval_episode:
+                results.append(run_episode(
+                    sc.trace, cfg, sc.technique, "aimm",
+                    agent=results[-1].agent, seed=sc.seed, explore=False,
+                    page_table=sc.page_table))
+            out.append(summarize(results[-1]))
+        else:
+            res = run_episode(sc.trace, cfg, sc.technique, sc.mapper,
+                              seed=sc.seed, page_table=sc.page_table,
+                              forced_action=sc.forced_action)
+            out.append(summarize(res))
+    return out

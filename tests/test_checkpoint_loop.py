@@ -52,6 +52,7 @@ def test_data_determinism_and_sharding():
     assert a.min() >= 0 and a.max() < 97
 
 
+@pytest.mark.slow
 def test_loop_survives_failure(tmp_path):
     cfg = get_config("mamba2-370m", smoke=True)
     model = build_model(cfg)

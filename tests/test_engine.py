@@ -1,4 +1,8 @@
-"""Integration tests: the NMP epoch engine and its baselines/mappers."""
+"""Integration tests: the NMP epoch engine and its baselines/mappers.
+
+Traces come from the shared session-scoped fixtures in conftest.py (small
+sizes, one construction per session) so the suite stays fast.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,36 +12,35 @@ from repro.nmp.paging import default_alloc, hoard_alloc
 from repro.nmp.stats import opc_timeline, summarize
 
 CFG = NMPConfig()
-TR = make_trace("SPMV", n_ops=2048)
 
 
 @pytest.mark.parametrize("technique", ["bnmp", "ldb", "pei"])
-def test_baseline_techniques_run(technique):
-    res = run_episode(TR, CFG, technique=technique, mapper="none")
+def test_baseline_techniques_run(spmv_trace, technique):
+    res = run_episode(spmv_trace, CFG, technique=technique, mapper="none")
     s = summarize(res)
-    assert s["ops"] == TR.n_ops            # every op processed exactly once
+    assert s["ops"] == spmv_trace.n_ops   # every op processed exactly once
     assert s["cycles"] > 0
     assert 0 < s["opc"] < 10
     assert 0 <= s["compute_util"] <= 1
     assert s["migrations"] == 0
 
 
-def test_tom_mapper_commits():
-    res = run_episode(TR, CFG, technique="bnmp", mapper="tom")
+def test_tom_mapper_commits(spmv_trace):
+    res = run_episode(spmv_trace, CFG, technique="bnmp", mapper="tom")
     assert int(res.env.tom_active) >= 0    # a candidate was committed
-    assert summarize(res)["ops"] == TR.n_ops
+    assert summarize(res)["ops"] == spmv_trace.n_ops
 
 
-def test_aimm_scripted_source_compute():
-    res = run_episode(TR, CFG, technique="bnmp", mapper="aimm",
+def test_aimm_scripted_source_compute(spmv_trace):
+    res = run_episode(spmv_trace, CFG, technique="bnmp", mapper="aimm",
                       forced_action=5)
     # source-compute remaps fill the remap table with the sentinel C
     assert int((res.env.compute_remap == CFG.n_cubes).sum()) > 0
-    assert summarize(res)["ops"] == TR.n_ops
+    assert summarize(res)["ops"] == spmv_trace.n_ops
 
 
-def test_aimm_scripted_migration():
-    res = run_episode(TR, CFG, technique="bnmp", mapper="aimm",
+def test_aimm_scripted_migration(spmv_trace):
+    res = run_episode(spmv_trace, CFG, technique="bnmp", mapper="aimm",
                       forced_action=1)
     s = summarize(res)
     assert s["migrations"] > 0
@@ -47,14 +50,15 @@ def test_aimm_scripted_migration():
     assert (p2c >= 0).all() and (p2c < CFG.n_cubes).all()
 
 
-def test_aimm_learned_run_and_continual_agent():
-    results = run_program(TR, CFG, technique="bnmp", mapper="aimm",
+@pytest.mark.slow
+def test_aimm_learned_run_and_continual_agent(spmv_trace):
+    results = run_program(spmv_trace, CFG, technique="bnmp", mapper="aimm",
                           episodes=2, seed=0)
     a0, a1 = results[0].agent, results[1].agent
     assert int(a1.step) > int(a0.step)        # DNN persisted across episodes
     assert int(a1.replay.size) > 0
     for r in results:
-        assert summarize(r)["ops"] == TR.n_ops
+        assert summarize(r)["ops"] == spmv_trace.n_ops
 
 
 def test_hoard_alloc_colocates_programs():
@@ -73,15 +77,15 @@ def test_8x8_mesh_runs():
     assert summarize(res)["ops"] == 1024
 
 
-def test_opc_timeline_fixed_size():
-    res = run_episode(TR, CFG, "bnmp", "none")
+def test_opc_timeline_fixed_size(spmv_trace):
+    res = run_episode(spmv_trace, CFG, "bnmp", "none")
     t = opc_timeline(res, samples=32)
     assert t.shape == (32,)
     assert (t > 0).all()
 
 
-def test_interval_actions_change_invocation_rate():
-    res = run_episode(TR, CFG, technique="bnmp", mapper="aimm",
+def test_interval_actions_change_invocation_rate(spmv_trace):
+    res = run_episode(spmv_trace, CFG, technique="bnmp", mapper="aimm",
                       forced_action=6)   # INC_INTERVAL every invocation
     inv = np.asarray(res.metrics["invoke"])
     # interval rises to max stride 4 -> invocations sparse at the end

@@ -1,0 +1,54 @@
+"""Engine regression guards: seeded determinism, conservation invariants,
+and a scripted-policy smoke test per AIMM action."""
+import numpy as np
+import pytest
+
+from repro.core.actions import N_ACTIONS
+from repro.nmp import NMPConfig, run_episode
+from repro.nmp.stats import summarize
+
+CFG = NMPConfig()
+
+
+def test_seeded_determinism_aimm(spmv_trace):
+    """Same seed => identical EpisodeResult metrics (learned policy included)."""
+    a = run_episode(spmv_trace, CFG, "bnmp", "aimm", seed=3)
+    b = run_episode(spmv_trace, CFG, "bnmp", "aimm", seed=3)
+    assert float(a.env.cycles) == float(b.env.cycles)
+    np.testing.assert_array_equal(np.asarray(a.metrics["action"]),
+                                  np.asarray(b.metrics["action"]))
+    np.testing.assert_array_equal(np.asarray(a.metrics["opc"]),
+                                  np.asarray(b.metrics["opc"]))
+
+
+def test_different_seeds_may_diverge_but_conserve(spmv_trace):
+    s1 = summarize(run_episode(spmv_trace, CFG, "bnmp", "aimm", seed=0))
+    s2 = summarize(run_episode(spmv_trace, CFG, "bnmp", "aimm", seed=7))
+    assert s1["ops"] == s2["ops"] == spmv_trace.n_ops
+
+
+@pytest.mark.parametrize("mapper", ["none", "tom", "aimm"])
+def test_op_conservation_all_mappers(km_trace, mapper):
+    """Every trace op is processed exactly once regardless of mapper, and
+    accesses to migrated pages never exceed total accesses."""
+    s = summarize(run_episode(km_trace, CFG, "bnmp", mapper, seed=1))
+    assert s["ops"] == km_trace.n_ops
+    assert s["frac_access_migrated"] <= 1.0
+    assert 0.0 <= s["frac_pages_migrated"] <= 1.0
+
+
+@pytest.mark.parametrize("action", list(range(N_ACTIONS)))
+def test_forced_action_smoke(km_trace, action):
+    """Each scripted action runs, conserves ops, and keeps the page table and
+    compute-remap table inside their legal ranges.
+
+    forced_action is a traced value, so all eight cases share one compile."""
+    res = run_episode(km_trace, CFG, "bnmp", "aimm", forced_action=action,
+                      seed=action)
+    s = summarize(res)
+    assert s["ops"] == km_trace.n_ops
+    p2c = np.asarray(res.env.page_to_cube)
+    assert (p2c >= 0).all() and (p2c < CFG.n_cubes).all()
+    cr = np.asarray(res.env.compute_remap)
+    assert ((cr >= -1) & (cr <= CFG.n_cubes)).all()
+    assert float(res.env.access_on_migrated) <= float(res.env.access_total)

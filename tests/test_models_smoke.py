@@ -30,7 +30,13 @@ def _batch(cfg, B=2, S=64, key=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+_HEAVY_ARCHS = {"jamba-1.5-large-398b", "gemma3-12b", "llama-3.2-vision-11b",
+                "deepseek-moe-16b"}
+
+
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS
+             else a for a in ARCHS])
 def test_forward_and_train_step(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)

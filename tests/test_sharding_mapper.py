@@ -25,6 +25,7 @@ def test_tp_in_expert_penalty_measured():
     assert cm.collective_s(tp) > 3 * cm.collective_s(ep)
 
 
+@pytest.mark.slow
 def test_rl_search_beats_infeasible_start():
     cfg = get_config("jamba-1.5-large-398b")
     res = search(cfg, SHAPES["train_4k"], steps=150, seed=0)
@@ -33,6 +34,7 @@ def test_rl_search_beats_infeasible_start():
     assert res.best.fsdp and res.best.quant_opt
 
 
+@pytest.mark.slow
 def test_rl_search_near_optimal_dense():
     cfg = get_config("qwen3-32b")
     gt, gt_t = exhaustive_best(cfg, SHAPES["train_4k"])

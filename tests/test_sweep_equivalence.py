@@ -1,0 +1,85 @@
+"""Batched sweep vs serial engine: per-scenario metrics must match
+bit-for-bit, including lanes whose traces are shorter than the batch
+envelope (op-count and page-count padding).
+
+Grids are sized so related checks share one compiled sweep signature
+(same op/page envelope, episode count and agent mode => one XLA program).
+"""
+import numpy as np
+import pytest
+
+from repro.nmp import NMPConfig, make_trace
+from repro.nmp.engine import run_episode, run_program
+from repro.nmp.scenarios import (Scenario, forced_action_grid,
+                                 single_program_grid)
+from repro.nmp.stats import summarize
+from repro.nmp.sweep import run_grid
+
+CFG = NMPConfig()
+
+
+def _assert_exact(serial: dict, batched: dict, label: str):
+    for key in ("cycles", "ops", "opc"):
+        assert serial[key] == batched[key], (label, key, serial[key],
+                                             batched[key])
+
+
+def test_grid_matches_serial_deterministic_lanes():
+    """Mixed apps (different n_ops AND n_pages => padding exercised), mixed
+    mappers {none, tom} and mixed techniques, one batched program: every lane
+    reproduces its serial run_episode exactly."""
+    grid = []
+    for app, n_ops in (("KM", 384), ("RBM", 512), ("MAC", 640)):
+        tr = make_trace(app, n_ops=n_ops)
+        for mapper in ("none", "tom"):
+            grid.append(Scenario(name=f"{app}/{mapper}", trace=tr,
+                                 mapper=mapper))
+    for tech in ("ldb", "pei"):
+        grid.append(Scenario(name=f"KM/{tech}", trace=grid[0].trace,
+                             technique=tech))
+    res = run_grid(grid, CFG)
+    for i, sc in enumerate(grid):
+        serial = summarize(run_episode(sc.trace, CFG, sc.technique, sc.mapper,
+                                       seed=sc.seed))
+        _assert_exact(serial, res.episode_summary(i, 0), sc.name)
+        assert res.episode_summary(i, 0)["ops"] == sc.trace.n_ops
+
+
+@pytest.mark.slow
+def test_grid_matches_serial_aimm_chained_episodes():
+    """Multi-episode AIMM lanes (DQN persisted across the in-scan episode
+    chain) match run_program per episode, even with op-count padding; the
+    stacked final env stays physically valid."""
+    grid = []
+    for app, n_ops in (("KM", 384), ("SPMV", 768)):
+        grid.append(Scenario(name=app, trace=make_trace(app, n_ops=n_ops),
+                             mapper="aimm", episodes=2))
+    res = run_grid(grid, CFG)
+    for i, sc in enumerate(grid):
+        serial = run_program(sc.trace, CFG, sc.technique, "aimm",
+                             episodes=sc.episodes, seed=sc.seed)
+        for e in range(sc.episodes):
+            _assert_exact(summarize(serial[e]), res.episode_summary(i, e),
+                          f"{sc.name}/ep{e}")
+    p2c = np.asarray(res.final_env.page_to_cube)
+    assert (p2c >= 0).all() and (p2c < CFG.n_cubes).all()
+    assert res.metrics["cycles"].shape == (len(grid), res.n_episodes)
+
+
+def test_grid_matches_serial_forced_actions():
+    """Scripted-policy lanes (no DQN) match serial forced_action runs."""
+    grid = forced_action_grid(app="KM", n_ops=384, actions=(0, 1, 5))
+    res = run_grid(grid, CFG)
+    for i, sc in enumerate(grid):
+        serial = summarize(run_episode(sc.trace, CFG, sc.technique, "aimm",
+                                       forced_action=sc.forced_action,
+                                       seed=sc.seed))
+        _assert_exact(serial, res.episode_summary(i, 0), sc.name)
+
+
+def test_single_program_grid_builder_covers_cells():
+    grid = single_program_grid(apps=("KM", "RBM"), mappers=("none", "aimm"),
+                               n_ops=256, seeds=(0, 1))
+    assert len(grid) == 2 * 2 * 2
+    names = {sc.name for sc in grid}
+    assert len(names) == len(grid)          # unique lane names
