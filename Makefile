@@ -2,15 +2,17 @@
 #
 #   make test         tier-1 verify: the full suite (what the roadmap gates on)
 #   make test-fast    quick lane: skips tests marked `slow`
-#   make bench-smoke  smallest benchmark slice (fig5 + the sweep-engine timing)
+#   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record,
+#                     which also writes bench_out/BENCH_engine.json)
 #   make bench        every benchmark figure (BENCH_FULL=1 for paper scale)
+#   make profile      JAX profiler trace of one batched grid -> bench_out/profile
 
 PY ?= python
 # src for the repro package, repo root for the benchmarks package
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench
+.PHONY: test test-fast bench-smoke bench profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,7 +21,10 @@ test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	BENCH_ONLY=fig5 $(PY) benchmarks/run.py
+	BENCH_ONLY=fig5,engine $(PY) benchmarks/run.py
 
 bench:
 	$(PY) benchmarks/run.py
+
+profile:
+	$(PY) benchmarks/profile_grid.py

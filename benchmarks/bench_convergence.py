@@ -1,21 +1,26 @@
 """Fig. 9: OPC timeline (fixed-size resample, order preserved) showing the
-agent converging toward higher OPC across its episodes."""
+agent converging toward higher OPC across its episodes.  The per-episode
+timelines come straight out of the shared batched figure grid's stacked
+metrics (continual learning across the in-scan episode chain)."""
 import numpy as np
 
-from benchmarks.common import apps, cached_episode, emit
-from repro.nmp.stats import opc_timeline
+from benchmarks.common import apps, emit, figure_grid, grid_us
 
 
 def run():
+    cached = figure_grid()
+    res, grid = cached["res"], cached["grid"]
+    us = grid_us(cached)
+    lanes = {sc.name: i for i, sc in enumerate(grid)}
     for app in apps():
-        r = cached_episode(app, "bnmp", "aimm")
-        # concatenate episode timelines (continual learning across episodes)
-        tl = np.concatenate([opc_timeline(res, samples=16)
-                             for res in r["all"]])
+        i = lanes[f"{app}/bnmp/aimm/s0"]
+        eps = grid[i].total_episodes
+        tl = np.concatenate([res.opc_timeline(i, e, samples=16)
+                             for e in range(eps)])
         first, last = tl[:16].mean(), tl[-16:].mean()
-        emit(f"fig9/{app}/opc_start", r["us"], round(float(first), 4))
-        emit(f"fig9/{app}/opc_end", r["us"], round(float(last), 4))
-        emit(f"fig9/{app}/convergence_gain", r["us"],
+        emit(f"fig9/{app}/opc_start", us, round(float(first), 4))
+        emit(f"fig9/{app}/opc_end", us, round(float(last), 4))
+        emit(f"fig9/{app}/convergence_gain", us,
              round(float(last / max(first, 1e-9)), 4))
 
 

@@ -1,23 +1,21 @@
 """Fig. 14: dynamic energy — AIMM hardware vs network vs memory breakdown;
-the paper's claim: AIMM-module energy is insignificant vs network energy."""
-from benchmarks.common import apps, cached_episode, emit
-from repro.nmp.stats import summarize
+the paper's claim: AIMM-module energy is insignificant vs network energy.
+Served from the shared batched figure grid (common.figure_grid)."""
+from benchmarks.common import apps, emit, figure_grid, grid_us, lane_summary
 
 
 def run():
+    cached = figure_grid()
+    us = grid_us(cached)
     for app in apps():
-        base = summarize(cached_episode(app, "bnmp", "none")["res"])
-        r = cached_episode(app, "bnmp", "aimm")
-        s = summarize(r["res"])
+        base = lane_summary(cached, f"{app}/bnmp/none/s0")
+        s = lane_summary(cached, f"{app}/bnmp/aimm/s0")
         bd = s["energy_breakdown"]
         total = sum(bd.values())
-        emit(f"fig14/{app}/aimm_hw_frac", r["us"],
-             round(bd["aimm_hw"] / total, 4))
-        emit(f"fig14/{app}/network_frac", r["us"],
-             round(bd["network"] / total, 4))
-        emit(f"fig14/{app}/memory_frac", r["us"],
-             round(bd["memory"] / total, 4))
-        emit(f"fig14/{app}/energy_vs_baseline", r["us"],
+        emit(f"fig14/{app}/aimm_hw_frac", us, round(bd["aimm_hw"] / total, 4))
+        emit(f"fig14/{app}/network_frac", us, round(bd["network"] / total, 4))
+        emit(f"fig14/{app}/memory_frac", us, round(bd["memory"] / total, 4))
+        emit(f"fig14/{app}/energy_vs_baseline", us,
              round(s["energy_nj"] / max(base["energy_nj"], 1e-9), 4))
 
 

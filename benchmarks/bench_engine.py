@@ -1,0 +1,109 @@
+"""Engine hot-path benchmark: epoch-scan throughput + serial-vs-batched
+comparison on the standard 18-lane grid, emitted both as CSV rows and as a
+machine-readable ``bench_out/BENCH_engine.json`` so the perf trajectory is
+tracked across PRs (see benchmarks/README.md for the schema).
+
+The grid is the same app x mapper x seed sweep bench_workloads historically
+timed: {KM, PR, SPMV} x {none, tom, aimm} x seeds {0, 1}, AIMM lanes chained
+for 2 (FULL: 3) episodes.  Per-lane metrics are asserted identical between
+the batched and serial paths, so the speedup rows are apples-to-apples.
+
+``PRE_PR_BASELINE`` pins the PR 1 engine's wall time for the default grid,
+measured on the reference container under quiet conditions (interleaved A/B,
+min of 5 warm runs x 3 reps); ``improvement_vs_pre_pr`` is only reported when
+the grid matches that measurement's shape.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, N_OPS, Timer, emit
+
+JSON_PATH = os.environ.get("BENCH_JSON", "bench_out/BENCH_engine.json")
+
+# PR 1 engine, default grid (n_ops=2048, 18 lanes), quiet-machine min-warm.
+PRE_PR_BASELINE = {"warm_s": 0.894, "n_ops": 2048, "lanes": 18,
+                   "note": "PR 1 engine, same container, interleaved A/B"}
+
+
+def _grid():
+    from repro.nmp.scenarios import single_program_grid
+    n_ops = N_OPS // 2 if FULL else N_OPS // 8
+    return n_ops, single_program_grid(
+        apps=("KM", "PR", "SPMV"), mappers=("none", "tom", "aimm"),
+        n_ops=n_ops, seeds=(0, 1), aimm_episodes=3 if FULL else 2)
+
+
+def run():
+    from repro.nmp.sweep import run_grid, run_grid_serial
+
+    n_ops, grid = _grid()
+    res = run_grid(grid)                   # wall_s includes build + compile
+    cold_s = res.wall_s
+    warm = []
+    for _ in range(5):
+        t0 = time.time()
+        res = run_grid(grid)
+        warm.append(time.time() - t0)
+    warm_s = min(warm)
+
+    with Timer() as t_serial:
+        serial = run_grid_serial(grid)
+    serial_s = t_serial.us / 1e6
+
+    mismatches = sum(
+        1 for i in range(len(grid))
+        if serial[i]["cycles"] != res.episode_summary(i)["cycles"])
+
+    # scan steps actually executed: lanes x chained episodes x epoch steps
+    lane_epochs = float(np.sum(res.metrics["epochs"]))
+    steps_per_s = lane_epochs / warm_s
+
+    tag = f"engine/grid{len(grid)}"
+    emit(f"{tag}/batched_cold_s", cold_s * 1e6, round(cold_s, 2))
+    emit(f"{tag}/batched_warm_s", warm_s * 1e6, round(warm_s, 3))
+    emit(f"{tag}/serial_s", t_serial.us, round(serial_s, 2))
+    emit(f"{tag}/speedup_serial_vs_batched", warm_s * 1e6,
+         round(serial_s / warm_s, 2))
+    emit(f"{tag}/epoch_steps_per_s", warm_s * 1e6, round(steps_per_s, 1))
+    emit(f"{tag}/metric_mismatches", warm_s * 1e6, mismatches)
+    for i, sc in enumerate(grid):
+        if sc.seed == 0:
+            emit(f"engine/{sc.name}/opc", warm_s * 1e6 / len(grid),
+                 round(res.episode_summary(i)["opc"], 4))
+
+    record = {
+        "grid": {"lanes": len(grid), "n_ops": n_ops,
+                 "apps": ["KM", "PR", "SPMV"],
+                 "mappers": ["none", "tom", "aimm"], "seeds": [0, 1],
+                 "aimm_episodes": 3 if FULL else 2, "full": FULL},
+        "batched": {"cold_s": round(cold_s, 3),
+                    "warm_s": round(warm_s, 4),
+                    "warm_s_all": [round(w, 4) for w in warm],
+                    "lane_epochs": lane_epochs,
+                    "epoch_steps_per_s": round(steps_per_s, 1)},
+        "serial": {"wall_s": round(serial_s, 3)},
+        "speedup_serial_vs_batched": round(serial_s / warm_s, 3),
+        "metric_mismatches": mismatches,
+        "baseline_pre_pr": PRE_PR_BASELINE,
+    }
+    if (n_ops == PRE_PR_BASELINE["n_ops"]
+            and len(grid) == PRE_PR_BASELINE["lanes"]):
+        record["improvement_vs_pre_pr"] = round(
+            PRE_PR_BASELINE["warm_s"] / warm_s, 3)
+        emit(f"{tag}/improvement_vs_pre_pr", warm_s * 1e6,
+             record["improvement_vs_pre_pr"])
+
+    os.makedirs(os.path.dirname(JSON_PATH) or ".", exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

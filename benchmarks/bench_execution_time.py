@@ -1,19 +1,21 @@
 """Fig. 6: execution time per app, techniques {BNMP, LDB, PEI} x mappers
-{B(aseline), TOM, AIMM}, normalized to each technique's baseline."""
-from benchmarks.common import apps, cached_episode, emit
-from repro.nmp.stats import summarize
+{B(aseline), TOM, AIMM}, normalized to each technique's baseline.
+
+All cells come from the shared batched figure grid (one compiled sweep per
+agent mode, see common.figure_grid) instead of per-cell serial episodes."""
+from benchmarks.common import apps, emit, figure_grid, grid_us, lane_summary
 
 
 def run():
+    cached = figure_grid()
+    us = grid_us(cached)
     for app in apps():
         for tech in ("bnmp", "ldb", "pei"):
-            base = cached_episode(app, tech, "none")
-            bcyc = summarize(base["res"])["cycles"]
-            emit(f"fig6/{app}/{tech}/B", base["us"], 1.0)
+            bcyc = lane_summary(cached, f"{app}/{tech}/none/s0")["cycles"]
+            emit(f"fig6/{app}/{tech}/B", us, 1.0)
             for mapper in ("tom", "aimm"):
-                r = cached_episode(app, tech, mapper)
-                cyc = summarize(r["res"])["cycles"]
-                emit(f"fig6/{app}/{tech}/{mapper.upper()}", r["us"],
+                cyc = lane_summary(cached, f"{app}/{tech}/{mapper}/s0")["cycles"]
+                emit(f"fig6/{app}/{tech}/{mapper.upper()}", us,
                      round(cyc / bcyc, 4))
 
 

@@ -1,17 +1,17 @@
-"""Fig. 7: average hop count and computation utilization, TOM vs AIMM."""
-from benchmarks.common import apps, cached_episode, emit
-from repro.nmp.stats import summarize
+"""Fig. 7: average hop count and computation utilization, TOM vs AIMM,
+served from the shared batched figure grid (common.figure_grid)."""
+from benchmarks.common import apps, emit, figure_grid, grid_us, lane_summary
 
 
 def run():
+    cached = figure_grid()
+    us = grid_us(cached)
     for app in apps():
         for mapper in ("none", "tom", "aimm"):
-            r = cached_episode(app, "bnmp", mapper)
-            s = summarize(r["res"])
+            s = lane_summary(cached, f"{app}/bnmp/{mapper}/s0")
             tag = {"none": "B", "tom": "TOM", "aimm": "AIMM"}[mapper]
-            emit(f"fig7/{app}/{tag}/hops", r["us"], round(s["mean_hops"], 3))
-            emit(f"fig7/{app}/{tag}/util", r["us"],
-                 round(s["compute_util"], 4))
+            emit(f"fig7/{app}/{tag}/hops", us, round(s["mean_hops"], 3))
+            emit(f"fig7/{app}/{tag}/util", us, round(s["compute_util"], 4))
 
 
 if __name__ == "__main__":

@@ -1,20 +1,23 @@
 """Fig. 11: 8x8 memory-cube mesh — AIMM adapts to the larger network without
-retraining hyperparameters (execution time normalized to 8x8 BNMP)."""
-from benchmarks.common import apps, cached_episode, emit
+retraining hyperparameters (execution time normalized to 8x8 BNMP).  One
+batched sweep under the 8x8 config covers every app's baseline + AIMM lane."""
+from benchmarks.common import (EPISODES, N_OPS, apps, cached_grid, emit,
+                               grid_us, lane_summary)
 from repro.nmp import NMPConfig
-from repro.nmp.stats import summarize
 
 CFG8 = NMPConfig(mesh_x=8, mesh_y=8)
 
 
 def run():
+    cached = cached_grid("single", cfg=CFG8, apps=apps(),
+                         techniques=("bnmp",), mappers=("none", "aimm"),
+                         n_ops=N_OPS, aimm_episodes=EPISODES,
+                         eval_episode=True)
+    us = grid_us(cached)
     for app in apps():
-        base = cached_episode(app, "bnmp", "none", cfg=CFG8)
-        bcyc = summarize(base["res"])["cycles"]
-        r = cached_episode(app, "bnmp", "aimm", cfg=CFG8)
-        cyc = summarize(r["res"])["cycles"]
-        emit(f"fig11/{app}/8x8/AIMM_norm_time", r["us"],
-             round(cyc / bcyc, 4))
+        bcyc = lane_summary(cached, f"{app}/bnmp/none/s0")["cycles"]
+        cyc = lane_summary(cached, f"{app}/bnmp/aimm/s0")["cycles"]
+        emit(f"fig11/{app}/8x8/AIMM_norm_time", us, round(cyc / bcyc, 4))
 
 
 if __name__ == "__main__":

@@ -1,16 +1,17 @@
 """Fig. 10: migration stats — fraction of pages migrated and fraction of
-accesses landing on migrated pages (AIMM)."""
-from benchmarks.common import apps, cached_episode, emit
-from repro.nmp.stats import summarize
+accesses landing on migrated pages (AIMM).  Served from the shared batched
+figure grid (common.figure_grid)."""
+from benchmarks.common import apps, emit, figure_grid, grid_us, lane_summary
 
 
 def run():
+    cached = figure_grid()
+    us = grid_us(cached)
     for app in apps():
-        r = cached_episode(app, "bnmp", "aimm")
-        s = summarize(r["res"])
-        emit(f"fig10/{app}/frac_pages_migrated", r["us"],
+        s = lane_summary(cached, f"{app}/bnmp/aimm/s0")
+        emit(f"fig10/{app}/frac_pages_migrated", us,
              round(s["frac_pages_migrated"], 4))
-        emit(f"fig10/{app}/frac_access_on_migrated", r["us"],
+        emit(f"fig10/{app}/frac_access_on_migrated", us,
              round(s["frac_access_migrated"], 4))
 
 

@@ -1,16 +1,17 @@
-"""Fig. 8: normalized memory operations-per-cycle (OPC) per app/technique."""
-from benchmarks.common import apps, cached_episode, emit
-from repro.nmp.stats import summarize
+"""Fig. 8: normalized memory operations-per-cycle (OPC) per app/technique,
+served from the shared batched figure grid (common.figure_grid)."""
+from benchmarks.common import apps, emit, figure_grid, grid_us, lane_summary
 
 
 def run():
+    cached = figure_grid()
+    us = grid_us(cached)
     for app in apps():
         for tech in ("bnmp", "ldb", "pei"):
-            base = summarize(cached_episode(app, tech, "none")["res"])["opc"]
+            base = lane_summary(cached, f"{app}/{tech}/none/s0")["opc"]
             for mapper in ("tom", "aimm"):
-                r = cached_episode(app, tech, mapper)
-                opc = summarize(r["res"])["opc"]
-                emit(f"fig8/{app}/{tech}/{mapper.upper()}", r["us"],
+                opc = lane_summary(cached, f"{app}/{tech}/{mapper}/s0")["opc"]
+                emit(f"fig8/{app}/{tech}/{mapper.upper()}", us,
                      round(opc / max(base, 1e-9), 4))
 
 

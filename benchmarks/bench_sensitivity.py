@@ -1,29 +1,28 @@
 """Fig. 13: sensitivity to page-info-cache entries and NMP-op table size
-(representative apps PR, SPMV per the paper)."""
-import dataclasses
+(representative apps PR, SPMV per the paper).  Each config point runs both
+apps' AIMM lanes through one batched sweep (cfg is part of the grid cache
+key, so every point is exactly one compile + dispatch)."""
+from benchmarks.common import EPISODES, N_OPS, cached_grid, emit, grid_us, lane_summary
+from repro.nmp import NMPConfig
 
-from benchmarks.common import Timer, cached_episode, emit, EPISODES, N_OPS
-from repro.nmp import NMPConfig, make_trace, run_program
-from repro.nmp.stats import summarize
+SWEEP_APPS = ("PR", "SPMV")
+
+
+def _point(cfg, tag: str) -> None:
+    cached = cached_grid("single", cfg=cfg, apps=SWEEP_APPS,
+                         techniques=("bnmp",), mappers=("aimm",),
+                         n_ops=N_OPS, aimm_episodes=EPISODES)
+    us = grid_us(cached)
+    for app in SWEEP_APPS:
+        s = lane_summary(cached, f"{app}/bnmp/aimm/s0")
+        emit(f"fig13/{app}/{tag}", us, round(s["cycles"], 1))
 
 
 def run():
-    for app in ("PR", "SPMV"):
-        tr = make_trace(app, n_ops=N_OPS)
-        for entries in (32, 64, 128, 256):
-            cfg = NMPConfig(page_cache_entries=entries)
-            with Timer() as t:
-                results = run_program(tr, cfg, "bnmp", "aimm",
-                                      episodes=EPISODES, seed=0)
-            emit(f"fig13/{app}/page_cache_E{entries}", t.us,
-                 round(summarize(results[-1])["cycles"], 1))
-        for table in (32, 64, 128, 512):
-            cfg = NMPConfig(nmp_table_size=table)
-            with Timer() as t:
-                results = run_program(tr, cfg, "bnmp", "aimm",
-                                      episodes=EPISODES, seed=0)
-            emit(f"fig13/{app}/nmp_table_E{table}", t.us,
-                 round(summarize(results[-1])["cycles"], 1))
+    for entries in (32, 64, 128, 256):
+        _point(NMPConfig(page_cache_entries=entries), f"page_cache_E{entries}")
+    for table in (32, 64, 128, 512):
+        _point(NMPConfig(nmp_table_size=table), f"nmp_table_E{table}")
 
 
 if __name__ == "__main__":

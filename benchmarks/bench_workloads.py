@@ -1,12 +1,10 @@
 """Fig. 5: workload analysis — page-access classes, active pages, affinity.
 
-Plus the sweep-engine benchmark: the same app x mapper x seed grid run (a)
-through the batched `sweep.run_grid` (one compile + one dispatch per agent
-mode) and (b) through the serial per-cell loop, with wall-clock for both and
-their speedup. The per-lane metrics are asserted identical, so the speedup
-row is an apples-to-apples compile/dispatch amortization measurement.
+The sweep-engine timing rows that used to live here (batched vs serial wall
+clock on the 18-lane grid) moved to bench_engine.py, which also emits the
+machine-readable BENCH_engine.json perf record.
 """
-from benchmarks.common import FULL, N_OPS, Timer, emit
+from benchmarks.common import N_OPS, Timer, emit
 from repro.nmp.traces import APPS, analyze, make_trace
 
 
@@ -19,37 +17,6 @@ def run():
         emit(f"fig5/{app}/active_pages", t.us,
              round(a["active_pages_mean"], 1))
         emit(f"fig5/{app}/radix_mean", t.us, round(a["radix_mean"], 2))
-    run_sweep_comparison()
-
-
-def run_sweep_comparison():
-    from repro.nmp.scenarios import single_program_grid
-    from repro.nmp.sweep import run_grid, run_grid_serial
-
-    n_ops = N_OPS // 2 if FULL else N_OPS // 8
-    grid = single_program_grid(
-        apps=("KM", "PR", "SPMV"), mappers=("none", "tom", "aimm"),
-        n_ops=n_ops, seeds=(0, 1), aimm_episodes=3 if FULL else 2)
-
-    res = run_grid(grid)                      # wall_s includes build + compile
-    with Timer() as t_serial:
-        serial = run_grid_serial(grid)
-
-    mismatches = sum(
-        1 for i in range(len(grid))
-        if serial[i]["cycles"] != res.episode_summary(i)["cycles"])
-    batched_us = res.wall_s * 1e6
-    emit(f"sweep/grid{len(grid)}/batched_s", batched_us,
-         round(res.wall_s, 2))
-    emit(f"sweep/grid{len(grid)}/serial_s", t_serial.us,
-         round(t_serial.us / 1e6, 2))
-    emit(f"sweep/grid{len(grid)}/speedup", batched_us,
-         round(t_serial.us / batched_us, 2))
-    emit(f"sweep/grid{len(grid)}/metric_mismatches", batched_us, mismatches)
-    for i, sc in enumerate(grid):
-        if sc.seed == 0:
-            emit(f"sweep/{sc.name}/opc", batched_us / len(grid),
-                 round(res.episode_summary(i)["opc"], 4))
 
 
 if __name__ == "__main__":

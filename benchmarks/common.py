@@ -78,20 +78,41 @@ def cached_episode(app: str, technique: str, mapper: str, **kw):
 _GRID_CACHE: dict = {}
 
 
-def cached_grid(grid_name: str, **kw):
+def cached_grid(grid_name: str, cfg=None, **kw):
     """Memoized batched run of a named scenario grid (see repro.nmp.scenarios).
 
+    `cfg` overrides the NMPConfig the sweep runs under (it is part of the
+    memo key, so e.g. mesh-scaling and sensitivity points cache separately).
     Returns {"res": SweepResult, "grid": [Scenario], "us": wall_us}; lanes are
     addressed by `Scenario.name` via `lane_summary`."""
-    from repro.nmp import scenarios, sweep
-    key = (grid_name, tuple(sorted((k, str(v)) for k, v in kw.items())))
+    from repro.nmp import NMPConfig, scenarios, sweep
+    cfg = cfg or NMPConfig()
+    key = (grid_name, str(cfg),
+           tuple(sorted((k, str(v)) for k, v in kw.items())))
     if key in _GRID_CACHE:
         return _GRID_CACHE[key]
     grid = scenarios.build(grid_name, **kw)
-    res = sweep.run_grid(grid)
+    res = sweep.run_grid(grid, cfg)
     out = {"res": res, "grid": grid, "us": res.wall_s * 1e6}
     _GRID_CACHE[key] = out
     return out
+
+
+def figure_grid(cfg=None, techniques=("bnmp", "ldb", "pei"),
+                mappers=("none", "tom", "aimm"), apps_=None):
+    """The shared app x technique x mapper grid behind the single-program
+    figures (fig6-11, 14): every AIMM lane trains for EPISODES episodes and
+    appends a greedy eval episode (the paper's converged-behaviour protocol).
+    One `sweep.run_grid` call (memoized) covers all of them."""
+    return cached_grid("single", cfg=cfg, apps=apps_ or apps(),
+                       techniques=techniques, mappers=mappers, n_ops=N_OPS,
+                       aimm_episodes=EPISODES, eval_episode=True)
+
+
+def grid_us(cached: dict) -> float:
+    """Per-lane wall-time attribution for a cached grid's CSV rows: the whole
+    sweep's wall time split evenly over its lanes."""
+    return cached["us"] / len(cached["grid"])
 
 
 def lane_summary(cached: dict, name: str, episode: int | None = None) -> dict:

@@ -9,6 +9,7 @@ import sys
 import traceback
 
 MODULES = [
+    ("engine_sweep", "benchmarks.bench_engine"),
     ("fig5_workloads", "benchmarks.bench_workloads"),
     ("fig6_execution_time", "benchmarks.bench_execution_time"),
     ("fig7_hops_util", "benchmarks.bench_hopcount_util"),

@@ -8,6 +8,10 @@ The agent is a NamedTuple of arrays (scan-compatible). Per invocation:
 
 "Continual learning" per the paper: the DNN persists across episode resets —
 only the environment state is cleared between runs (see nmp.engine.run_program).
+The engine invokes the whole observe -> train -> act pipeline only on
+invocation epochs (under `jax.lax.cond`); epochs between invocations carry
+the agent through untouched.  Gradient-free inference (act, TD targets) can
+route through the fused Pallas dueling-qnet kernel (see core.dqn.q_values_infer).
 """
 from __future__ import annotations
 
@@ -75,7 +79,7 @@ def act(agent: AgentState, cfg: AgentConfig, state_vec: jnp.ndarray,
     way, so greedy evaluation stays reproducible against static calls.
     """
     rng, k_eps, k_act = jax.random.split(agent.rng, 3)
-    q = dqn.q_values(agent.params, state_vec, cfg.dqn)
+    q = dqn.q_values_infer(agent.params, state_vec, cfg.dqn)
     greedy = jnp.argmax(q).astype(jnp.int32)
     eps = epsilon(cfg, agent.step)
     rand_a = jax.random.randint(k_act, (), 0, cfg.dqn.n_actions)
@@ -88,11 +92,30 @@ def observe(agent: AgentState, s, a, r, s2, done=0.0) -> AgentState:
     return agent._replace(replay=push(agent.replay, s, a, r, s2, done))
 
 
+def replay_ready(agent: AgentState, cfg: AgentConfig) -> jnp.ndarray:
+    """True once the replay buffer holds enough samples for a real TD step.
+
+    Monotone in time; while False, `train_step` is an exact no-op (masked
+    batch, zero grads onto zero Adam moments, no step count), which is what
+    lets the engine skip the whole minibatch under `lax.cond` until some lane
+    is ready.
+    """
+    return agent.replay.size >= cfg.min_replay
+
+
 def train(agent: AgentState, cfg: AgentConfig) -> AgentState:
     """One TD minibatch step; no-op (via masking) until replay has min_replay."""
-    opt = adamw(cfg.dqn.lr, grad_clip=cfg.dqn.grad_clip)
     rng, k = jax.random.split(agent.rng)
-    batch = sample(agent.replay, k, cfg.dqn.batch_size)
+    return train_step(agent._replace(rng=rng), cfg, k)
+
+
+def train_step(agent: AgentState, cfg: AgentConfig,
+               rng: jax.Array) -> AgentState:
+    """`train` with the minibatch RNG drawn by the caller (`agent.rng` is not
+    consumed here, so the engine can advance the stream unconditionally and
+    gate the expensive TD step itself behind `lax.cond`)."""
+    opt = adamw(cfg.dqn.lr, grad_clip=cfg.dqn.grad_clip)
+    batch = sample(agent.replay, rng, cfg.dqn.batch_size)
     ready = (agent.replay.size >= cfg.min_replay).astype(jnp.float32)
     batch = dict(batch, w=batch["w"] * ready)
 
@@ -115,7 +138,6 @@ def train(agent: AgentState, cfg: AgentConfig) -> AgentState:
         target_params=new_target,
         opt_state=new_opt,
         train_steps=train_steps,
-        rng=rng,
         loss_ema=0.99 * agent.loss_ema + 0.01 * loss,
     )
 

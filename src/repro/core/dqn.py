@@ -10,6 +10,7 @@ inside a single `jax.lax.scan`.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax
@@ -69,18 +70,64 @@ def q_values(params: PyTree, state: jnp.ndarray, cfg: DQNConfig) -> jnp.ndarray:
     return q[0] if squeeze else q
 
 
+def _infer_backend() -> str:
+    """Backend for gradient-free Q inference.
+
+    `REPRO_QNET_BACKEND` ∈ {auto, pallas, jnp}: `auto` picks the fused Pallas
+    kernel on TPU (the paper's §5.2 RL-accelerator analogue) and plain jnp
+    elsewhere; `pallas` forces the kernel (interpret mode off-TPU — used by
+    the wiring tests, slow on CPU).  Read at trace time: flipping the env var
+    does not invalidate already-jitted programs.
+    """
+    mode = os.environ.get("REPRO_QNET_BACKEND", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
+def fused_kernel_compatible(params: PyTree) -> bool:
+    """The fused Pallas kernel covers the production shape: dueling head over
+    exactly two hidden layers."""
+    return "w_v" in params and "w1" in params and "w2" not in params
+
+
+def q_values_infer(params: PyTree, state: jnp.ndarray, cfg: DQNConfig,
+                   backend: str | None = None) -> jnp.ndarray:
+    """Q(s, .) for inference-only consumers (action selection, TD targets).
+
+    Numerically equivalent to `q_values` but free to route through the fused
+    Pallas dueling-qnet kernel (one launch for the whole batch, weights
+    resident in VMEM) since no gradient flows through it.
+    """
+    backend = backend or _infer_backend()
+    if backend == "pallas" and fused_kernel_compatible(params):
+        from repro.kernels.dueling_qnet.ops import qnet_forward
+        squeeze = state.ndim == 1
+        x = jnp.atleast_2d(state.astype(jnp.float32))
+        q = qnet_forward(params, x)
+        return q[0] if squeeze else q
+    return q_values(params, state, cfg)
+
+
 def td_loss(params: PyTree, target_params: PyTree, batch: dict, cfg: DQNConfig) -> jnp.ndarray:
-    """Squared TD error (paper eq. 3), double-DQN target if cfg.double."""
+    """Squared TD error (paper eq. 3), double-DQN target if cfg.double.
+
+    Only the Q(s, a) term carries gradients; the target-network values and the
+    double-DQN argmax selection are inference (stop_gradient) and go through
+    `q_values_infer`, i.e. the fused Pallas kernel where available.
+    """
     q = q_values(params, batch["s"], cfg)                          # (B, A)
     q_sa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
-    q_next_t = q_values(target_params, batch["s2"], cfg)           # (B, A)
+    q_next_t = jax.lax.stop_gradient(
+        q_values_infer(target_params, batch["s2"], cfg))           # (B, A)
     if cfg.double:
-        q_next_o = q_values(params, batch["s2"], cfg)
+        q_next_o = jax.lax.stop_gradient(
+            q_values_infer(params, batch["s2"], cfg))
         a_star = jnp.argmax(q_next_o, axis=-1)
         q_next = jnp.take_along_axis(q_next_t, a_star[:, None], axis=1)[:, 0]
     else:
         q_next = jnp.max(q_next_t, axis=-1)
-    y = batch["r"] + cfg.gamma * (1.0 - batch["done"]) * jax.lax.stop_gradient(q_next)
+    y = batch["r"] + cfg.gamma * (1.0 - batch["done"]) * q_next
     err = (y - q_sa) * batch["w"]          # `w` masks invalid (not-yet-filled) samples
     return jnp.sum(jnp.square(err)) / jnp.maximum(jnp.sum(batch["w"]), 1.0)
 

@@ -54,8 +54,10 @@ def sample(buf: ReplayBuffer, rng: jax.Array, batch_size: int) -> dict:
     """Uniform sample with validity weights; safe when buffer is near-empty."""
     hi = jnp.maximum(buf.size, 1)
     idx = jax.random.randint(rng, (batch_size,), 0, hi)
-    w = (jnp.arange(batch_size) < buf.size).astype(jnp.float32)  # all-valid once size>=B
-    w = jnp.where(buf.size > 0, jnp.ones_like(w), jnp.zeros_like(w))
+    # Every drawn index is < size, so all rows are valid as soon as the buffer
+    # is non-empty; an empty buffer masks the whole batch.
+    w = jnp.where(buf.size > 0, jnp.ones((batch_size,), jnp.float32),
+                  jnp.zeros((batch_size,), jnp.float32))
     return {
         "s": buf.s[idx],
         "a": buf.a[idx],

@@ -15,20 +15,45 @@ Epoch model (documented cost model; see DESIGN.md §2):
   feedback : OPC = ops/cycles; reward = sign(dOPC); state vector from
              system EMAs + hot-page info cache entry (paper Fig. 3)
 
+Hot-path structure (this is the optimized cost model the benchmarks measure;
+see benchmarks/README.md "The engine hot path"):
+
+  * Every epoch is split into `_epoch_sim` (cost model, reward, state vector
+    -- everything that does not depend on the agent's action) and
+    `_epoch_apply` (action application + state commit).  Between the two, the
+    full agent invocation -- replay push, minibatch TD step, Adam update,
+    target sync, eps-greedy act -- runs under `jax.lax.cond` on "any lane
+    invokes this epoch", so epochs between invocations (stride 2..4 at higher
+    interval levels) skip the DQN machinery entirely instead of computing it
+    and masking the result.
+  * The PEI hot-page threshold is a `lax.top_k` order statistic over a static
+    envelope of the hottest pages (`BodyFlags.pei_k`), not an O(P log P) sort
+    of every page's access EMA; it is compiled in only when the program/grid
+    actually contains PEI lanes.
+  * The row-buffer distinct-page count is an O(W) scatter-stamp: each access
+    stamps its page with the epoch tag (`at[].max`), a page is "distinct"
+    exactly when its stamp equals the current tag.  No per-epoch sort.
+  * `BodyFlags` records which features (AIMM action machinery, TOM candidate
+    scoring, PEI thresholding, a live DQN) any lane of the compiled program
+    uses; unused features are statically skipped, which keeps a plain
+    technique-comparison grid close to baseline cost.
+
 Batching model (sweep.py): every per-trace quantity that used to be a Python
-static — op count, OPC-ring length, PEI hot-page sort index, technique,
-mapper, forced action, exploration flag — is carried as a traced `TraceCtx`
+static -- op count, OPC-ring length, PEI hot-page sort index, technique,
+mapper, forced action, exploration flag -- is carried as a traced `TraceCtx`
 scalar instead, and every state update is gated on `has_ops`, so epochs past
-the end of a (padded) trace are exact no-ops. That makes one compiled
-program valid for a whole stacked grid of scenarios: `sweep.run_grid` pads
-traces to a common envelope and `jax.vmap`s the same epoch body over a
-scenario axis, with episode chaining expressed as a `lax.scan`.
+the end of a (padded) trace are exact no-ops.  The epoch body itself is
+written per-lane and `jax.vmap`ed over a scenario axis (the serial runner is
+the same body at batch size 1), with the epoch scan *outside* the vmap so the
+any-lane-invokes `lax.cond` is a genuine scalar branch.  That makes one
+compiled program valid for a whole stacked grid of scenarios and keeps the
+batched engine bit-identical to serial runs (tests/test_sweep_equivalence.py,
+tests/test_engine_golden.py).
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +99,22 @@ class TraceCtx(NamedTuple):
     explore: jnp.ndarray        # () bool ε-greedy exploration on/off
 
 
+class BodyFlags(NamedTuple):
+    """Static feature flags of one compiled epoch body.
+
+    Derived from what the lanes of a program actually use (serial runs: the
+    single lane; sweeps: the OR over a group's lanes).  A feature that no lane
+    uses is skipped at trace time, not masked at run time, so e.g. a pure
+    technique-comparison grid never builds the AIMM action machinery and a
+    grid without PEI lanes never computes the hot-page threshold.  `pei_k` is
+    the top_k envelope for the PEI threshold order statistic (0 = no PEI
+    lanes)."""
+    has_agent: bool = False     # a live DQN (aimm lanes with a learned policy)
+    any_aimm: bool = False      # hot-page selection / action application
+    any_tom: bool = False       # TOM candidate scoring + commit
+    pei_k: int = 0              # static top_k width for the PEI threshold
+
+
 def pei_hot_index(n_pages: int, cfg: NMPConfig) -> int:
     """Sort index of the PEI hot-page threshold among the real pages.
 
@@ -83,8 +124,26 @@ def pei_hot_index(n_pages: int, cfg: NMPConfig) -> int:
     return (int(n_pages * (1 - cfg.pei_hot_frac)) - 1) % n_pages
 
 
+def pei_top_k(n_pages: int, cfg: NMPConfig) -> int:
+    """top_k width needed to read the PEI threshold as the m-th largest EMA."""
+    return n_pages - pei_hot_index(n_pages, cfg)
+
+
+def episode_flags(trace: Trace, cfg: NMPConfig, technique: str, mapper: str,
+                  forced_action: int = -1) -> BodyFlags:
+    """Static body flags for one serial episode."""
+    return BodyFlags(
+        has_agent=mapper == "aimm" and forced_action < 0,
+        any_aimm=mapper == "aimm",
+        any_tom=mapper == "tom",
+        pei_k=pei_top_k(trace.n_pages, cfg) if technique == "pei" else 0,
+    )
+
+
 def serial_epochs(n_ops: int, cfg: NMPConfig) -> int:
-    return int(np.ceil(n_ops / cfg.epoch_ops)) + 1
+    """Number of epoch-scan steps needed to consume `n_ops` (exactly; the
+    historical +1 all-padding epoch was a no-op by construction)."""
+    return int(np.ceil(n_ops / cfg.epoch_ops))
 
 
 def phase_ring_len(trace: Trace, cfg: NMPConfig) -> int:
@@ -122,6 +181,9 @@ class EnvState(NamedTuple):
     ref_sum: jnp.ndarray           # () f32 same-phase reference sum for tenure
     ref_n: jnp.ndarray             # () f32
     page_access_ema: jnp.ndarray   # (P,) f32
+    rb_stamp: jnp.ndarray          # (P+1,) i32 epoch tag of the page's last
+                                   #  access (row-buffer distinct-count stamp;
+                                   #  row P is the invalid-access sink)
     nmp_occ: jnp.ndarray           # (C,) f32
     rb_hit: jnp.ndarray            # (C,) f32
     mc_queue: jnp.ndarray          # (M,) f32
@@ -178,6 +240,7 @@ def _init_env(page_table: jnp.ndarray, cfg: NMPConfig, spec: StateSpec,
         ref_sum=jnp.zeros(()),
         ref_n=jnp.zeros(()),
         page_access_ema=jnp.zeros((P,)),
+        rb_stamp=jnp.zeros((P + 1,), jnp.int32),
         nmp_occ=jnp.zeros((C,)),
         rb_hit=jnp.full((C,), 0.5),
         mc_queue=jnp.zeros((M,)),
@@ -206,29 +269,65 @@ def _init_env(page_table: jnp.ndarray, cfg: NMPConfig, spec: StateSpec,
     )
 
 
+class EpochMid(NamedTuple):
+    """Intermediate results handed from `_epoch_sim` to `_epoch_apply` (and to
+    the agent invocation in between).  Everything here is per-lane; the epoch
+    driver vmaps the halves and keeps the agent `lax.cond` un-vmapped."""
+    valid: jnp.ndarray         # (W,) f32
+    w_valid: jnp.ndarray       # () f32
+    has_ops: jnp.ndarray       # () bool
+    invoke: jnp.ndarray        # () bool
+    dest: jnp.ndarray          # (W,) i32
+    src1: jnp.ndarray          # (W,) i32
+    src2: jnp.ndarray          # (W,) i32
+    cycles: jnp.ndarray        # () f32
+    opc: jnp.ndarray           # () f32
+    span_sum: jnp.ndarray
+    span_n: jnp.ndarray
+    cur_mean: jnp.ndarray
+    ref_sum: jnp.ndarray
+    ref_n: jnp.ndarray
+    opc_ring: jnp.ndarray
+    reward: jnp.ndarray
+    hops_total: jnp.ndarray
+    mean_hops: jnp.ndarray
+    util: jnp.ndarray
+    nmp_occ: jnp.ndarray
+    rb_hit: jnp.ndarray
+    mc_queue: jnp.ndarray
+    page_ema: jnp.ndarray
+    rb_stamp: jnp.ndarray
+    cache: PageInfoCache
+    ent: jnp.ndarray
+    hot_page: jnp.ndarray
+    touches_hot: jnp.ndarray
+    ccube_hot: jnp.ndarray
+    svec: jnp.ndarray
+    k_nbr: jax.Array
+    env_rng: jax.Array
+    tom_scores: jnp.ndarray
+    tom_active: jnp.ndarray
+    mig_stall_tom: jnp.ndarray
+    migrated_tom: jnp.ndarray
+    energy: jnp.ndarray        # action-independent counters already added
+
+
 # ---------------------------------------------------------------------------
-# One epoch
+# One epoch: cost model (action-independent half)
 # ---------------------------------------------------------------------------
 
-def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
-           rw_pages: jnp.ndarray, tom_cands: jnp.ndarray, ctx: TraceCtx,
-           cfg: NMPConfig, spec: StateSpec, agent_cfg: AgentConfig,
-           has_agent: bool):
-    """One epoch of the unified engine.
-
-    Technique and mapper are runtime selectors (all paths are computed, the
-    lane's path is picked with `where`), so the same compiled body serves any
-    scenario lane. Every update is gated on `has_ops` at the end: epochs after
-    the trace runs out leave env, agent and metrics untouched, which makes
-    op-count padding across a batch exact.
-    """
+def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
+               ctx: TraceCtx, cfg: NMPConfig, spec: StateSpec,
+               agent_cfg: AgentConfig, flags: BodyFlags) -> EpochMid:
+    """Everything up to (but excluding) the agent's action: window fetch,
+    scheduling, routing, timing, reward bookkeeping, hot-page selection and
+    the state vector.  Runs per-lane (vmapped by the epoch driver)."""
     P = env.page_to_cube.shape[0]
     C = cfg.n_cubes
     W = cfg.w_max
     window = jnp.asarray(cfg.epoch_ops, jnp.int32)
     is_tom = ctx.mapper == MAPPER_ID["tom"]
     is_aimm = ctx.mapper == MAPPER_ID["aimm"]
-    page_live = (jnp.arange(P) < ctx.n_pages).astype(jnp.float32)
 
     # ---- window fetch (trace arrays pre-padded by W) ----
     sl = lambda a: jax.lax.dynamic_slice(a, (env.op_ptr,), (W,))
@@ -239,29 +338,41 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
     has_ops = w_valid > 0
 
     # ---- data mapping (TOM may override the page table) ----
-    eff_table = jnp.where(is_tom & (env.tom_active >= 0),
-                          tom_cands[jnp.maximum(env.tom_active, 0)],
-                          env.page_to_cube)
+    if flags.any_tom:
+        eff_table = jnp.where(is_tom & (env.tom_active >= 0),
+                              tom_cands[jnp.maximum(env.tom_active, 0)],
+                              env.page_to_cube)
+    else:
+        eff_table = env.page_to_cube
     dcube = eff_table[dest]
     s1cube = eff_table[src1]
     s2cube = eff_table[src2]
 
     # ---- schedule compute cube ----
-    # PEI hot threshold: padded pages have EMA 0 and sort to the front, so the
-    # real-page quantile lives at offset (P - n_pages) + pei_idx.
-    sorted_ema = jnp.sort(env.page_access_ema)
-    thresh = sorted_ema[(P - ctx.n_pages) + ctx.pei_idx]
-    hot1 = env.page_access_ema[src1] >= jnp.maximum(thresh, 1e-6)
-    hot2 = env.page_access_ema[src2] >= jnp.maximum(thresh, 1e-6)
-    ccube = baselines.schedule_by_id(ctx.technique, dcube, s1cube, s2cube,
-                                     hot1, hot2)
-    # compute-remap table: -1 none, 0..C-1 fixed cube, C = "source mode"
-    # (schedule at the op's own first-source cube, paper action (vi)).
-    cr = env.compute_remap[dest]
-    cr = jnp.where(cr >= 0, cr, env.compute_remap[src1])
-    cr = jnp.where(cr >= 0, cr, env.compute_remap[src2])
-    aimm_cc = jnp.where(cr == C, s1cube, jnp.where(cr >= 0, cr, ccube))
-    ccube = jnp.where(is_aimm, aimm_cc, ccube)
+    if flags.pei_k > 0:
+        # PEI hot threshold = the m-th largest access EMA among the real pages
+        # (m = n_pages - pei_idx), read from a static top_k envelope instead of
+        # a full O(P log P) sort.  Identical value: padded pages have EMA 0 and
+        # sort to the front, so ascending index (P - n_pages) + pei_idx is the
+        # m-th largest overall.
+        top = jax.lax.top_k(env.page_access_ema, flags.pei_k)[0]
+        m = ctx.n_pages - ctx.pei_idx
+        thresh = top[jnp.clip(m - 1, 0, flags.pei_k - 1)]
+        hot1 = env.page_access_ema[src1] >= jnp.maximum(thresh, 1e-6)
+        hot2 = env.page_access_ema[src2] >= jnp.maximum(thresh, 1e-6)
+        ccube = baselines.schedule_by_id(ctx.technique, dcube, s1cube, s2cube,
+                                         hot1, hot2)
+    else:
+        # No PEI lane in this program: schedule_by_id collapses to LDB/BNMP.
+        ccube = jnp.where(ctx.technique == TECH_ID["ldb"], s1cube, dcube)
+    if flags.any_aimm:
+        # compute-remap table: -1 none, 0..C-1 fixed cube, C = "source mode"
+        # (schedule at the op's own first-source cube, paper action (vi)).
+        cr = env.compute_remap[dest]
+        cr = jnp.where(cr >= 0, cr, env.compute_remap[src1])
+        cr = jnp.where(cr >= 0, cr, env.compute_remap[src2])
+        aimm_cc = jnp.where(cr == C, s1cube, jnp.where(cr >= 0, cr, ccube))
+        ccube = jnp.where(is_aimm, aimm_cc, ccube)
 
     # ---- route: flows s1->c, s2->c, c->d (skip zero-hop flows implicitly) ----
     fsrc = jnp.concatenate([s1cube, s2cube, ccube])
@@ -283,17 +394,24 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
     util = eff_cubes / C
 
     # ---- row-buffer model: distinct (cube,page) pairs accessed per cube ----
+    # A page maps to exactly one cube, so distinct pairs == distinct pages.
+    # O(W) scatter-stamp: stamp each accessed page with this epoch's tag; a
+    # page was touched iff its stamp equals the tag.  Invalid accesses land in
+    # the sink row P.  Counts are small integers, so the scatter-adds below
+    # are bit-exact regardless of accumulation order.
     acc_cube = jnp.concatenate([dcube, s1cube, s2cube])
     acc_page = jnp.concatenate([dest, src1, src2])
     acc_valid = jnp.concatenate([valid, valid, valid])
-    key = jnp.where(acc_valid > 0, acc_cube.astype(jnp.int32) * P + acc_page,
-                    jnp.int32(C * P + 7))
-    skey = jnp.sort(key)
-    newrow = jnp.concatenate([jnp.ones((1,), bool), skey[1:] != skey[:-1]])
-    newrow = newrow & (skey < C * P)
-    sort_cube = (skey // P).astype(jnp.int32)
-    distinct_c = jnp.zeros((C,)).at[jnp.clip(sort_cube, 0, C - 1)].add(
-        newrow.astype(jnp.float32) * (sort_cube < C))
+    tag_base = (env.epochs.astype(jnp.int32) + 1) * (3 * W)
+    stamp_val = jnp.where(acc_valid > 0,
+                          tag_base + jnp.arange(3 * W, dtype=jnp.int32), 0)
+    stamp_idx = jnp.where(acc_valid > 0, acc_page, jnp.int32(P))
+    rb_stamp = env.rb_stamp.at[stamp_idx].max(stamp_val)
+    # An access is its page's first touch of the epoch iff it won the stamp
+    # race (holds the page's max access tag), so "distinct pages per cube" is
+    # one O(W) gather + scatter-add of winner indicators.
+    winner = (rb_stamp[stamp_idx] == stamp_val) & (acc_valid > 0)
+    distinct_c = jnp.zeros((C,)).at[acc_cube].add(winner.astype(jnp.float32))
     acc_c = jnp.zeros((C,)).at[acc_cube].add(acc_valid)
     hit_c = jnp.where(acc_c > 0, 1.0 - distinct_c / jnp.maximum(acc_c, 1.0), 0.5)
     lat_c = hit_c * cfg.t_dram_hit + (1 - hit_c) * cfg.t_dram_miss
@@ -349,184 +467,250 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
     nmp_occ = d * env.nmp_occ + (1 - d) * ops_c
     rb_hit = d * env.rb_hit + (1 - d) * hit_c
     mc_queue = d * env.mc_queue + (1 - d) * mcq
-    page_ema = 0.9 * env.page_access_ema
-    page_ema = page_ema.at[dest].add(valid).at[src1].add(valid).at[src2].add(valid)
+    if flags.pei_k > 0:
+        page_ema = 0.9 * env.page_access_ema
+        page_ema = page_ema.at[dest].add(valid).at[src1].add(valid).at[src2].add(valid)
+    else:
+        # Only the PEI threshold reads the access EMA; without PEI lanes the
+        # decay + triple scatter is dead weight.
+        page_ema = env.page_access_ema
 
-    # ---- hot page + page-info cache update ----
+    # ---- hot page + page-info cache update (AIMM lanes only) ----
     # The MCs take turns feeding the agent page info (§5.1 round-robin); pages
     # acted on in the last few invocations are skipped so invocations cover the
     # hot set instead of hammering one page.
-    touch_cnt = jnp.zeros((P,)).at[dest].add(valid).at[src1].add(valid).at[src2].add(valid)
-    recently = jnp.zeros((P,)).at[env.recent_pages].set(
-        (env.recent_pages >= 0).astype(jnp.float32))
-    hot_page = jnp.argmax(touch_cnt * (1.0 - recently)).astype(jnp.int32)
-    touches_hot = touch_cnt[hot_page]
-    is_hot_op = ((dest == hot_page) | (src1 == hot_page) | (src2 == hot_page)) & (valid > 0)
-    first_hot = jnp.argmax(is_hot_op)
-    ccube_hot = ccube[first_hot]
-    s1cube_hot = s1cube[first_hot]
-    hops_hot = hops_op[first_hot]
+    if flags.any_aimm:
+        touch_cnt = jnp.zeros((P,)).at[acc_page].add(acc_valid)
+        recently = jnp.zeros((P,)).at[env.recent_pages].set(
+            (env.recent_pages >= 0).astype(jnp.float32))
+        hot_page = jnp.argmax(touch_cnt * (1.0 - recently)).astype(jnp.int32)
+        touches_hot = touch_cnt[hot_page]
+        is_hot_op = ((dest == hot_page) | (src1 == hot_page)
+                     | (src2 == hot_page)) & (valid > 0)
+        first_hot = jnp.argmax(is_hot_op)
+        ccube_hot = ccube[first_hot]
+        hops_hot = hops_op[first_hot]
 
-    cache, ent = lookup_or_insert(env.cache, hot_page)
-    cache = cache._replace(
-        freq=cache.freq.at[ent].add(1.0),
-        accesses=cache.accesses.at[ent].add(touches_hot),
-        hop_hist=push_hist(cache.hop_hist, ent, hops_hot),
-        lat_hist=push_hist(cache.lat_hist, ent, mean_lat),
+        cache, ent = lookup_or_insert(env.cache, hot_page)
+        cache = cache._replace(
+            freq=cache.freq.at[ent].add(1.0),
+            accesses=cache.accesses.at[ent].add(touches_hot),
+            hop_hist=push_hist(cache.hop_hist, ent, hops_hot),
+            lat_hist=push_hist(cache.lat_hist, ent, mean_lat),
+        )
+        env_rng, _k_agent, k_nbr = jax.random.split(env.rng, 3)
+
+        # state vector (paper Fig. 3)
+        page_rate = touches_hot / jnp.maximum(3.0 * w_valid, 1.0)
+        mig_per_acc = cache.migrations[ent] / jnp.maximum(cache.accesses[ent],
+                                                          1.0)
+        svec = build_state(
+            spec, nmp_occ, rb_hit, mc_queue, env.global_act_hist,
+            env.interval_level, page_rate, mig_per_acc,
+            cache.hop_hist[ent], cache.lat_hist[ent], cache.mig_hist[ent],
+            cache.act_hist[ent], eff_table[hot_page], ccube_hot,
+            occ_norm=float(cfg.nmp_table_size),
+        )
+    else:
+        cache, ent = env.cache, jnp.zeros((), jnp.int32)
+        hot_page = jnp.zeros((), jnp.int32)
+        touches_hot = jnp.zeros(())
+        ccube_hot = jnp.zeros((), jnp.int32)
+        svec = jnp.zeros((spec.dim,))
+        env_rng, k_nbr = env.rng, env.rng
+
+    # ---- TOM control (profiling + commit are action-independent) ----
+    if flags.any_tom:
+        K = tom_cands.shape[0]
+        period = K + 8                 # K profiling windows + 8 commit windows
+        phase = (env.epochs.astype(jnp.int32)) % period
+        page_live = (jnp.arange(P) < ctx.n_pages).astype(jnp.float32)
+
+        # profiling: evaluate candidate `phase` on this window
+        def score_k(k):
+            return baselines.tom_colocation_score(tom_cands[k], dest, src1,
+                                                  src2, valid, C)
+        scores_all = jax.vmap(score_k)(jnp.arange(K))
+        tom_scores = jnp.where(is_tom & (phase < K),
+                               env.tom_scores.at[jnp.clip(phase, 0, K - 1)].set(
+                                   scores_all[jnp.clip(phase, 0, K - 1)]),
+                               env.tom_scores)
+        commit = is_tom & (phase == K)
+        best = jnp.argmax(tom_scores).astype(jnp.int32)
+        prev_map = jnp.where(env.tom_active >= 0,
+                             tom_cands[jnp.maximum(env.tom_active, 0)],
+                             env.page_to_cube)
+        changed = jnp.sum((tom_cands[best] != prev_map).astype(jnp.float32)
+                          * page_live)
+        tom_active = jnp.where(commit, best, env.tom_active)
+        # remap data movement: amortized one-time link traffic + stall
+        mig_stall_tom = jnp.where(commit,
+                                  changed * cfg.page_flits / (n_links(cfg) * 8.0),
+                                  0.0)
+        migrated_tom = jnp.where(commit, changed, 0.0)
+    else:
+        tom_scores, tom_active = env.tom_scores, env.tom_active
+        mig_stall_tom = jnp.zeros(())
+        migrated_tom = jnp.zeros(())
+
+    # ---- energy counters (action-independent part) ----
+    en = env.energy
+    en = en.at[EN_MEM_BITS].add(w_valid * 3 * cfg.packet_bytes * 8)
+    en = en.at[EN_PAGE_CACHE].add(2 * w_valid)
+    en = en.at[EN_NMP_BUF].add(2 * w_valid)
+    if flags.any_aimm:
+        inv = (invoke & is_aimm).astype(jnp.float32)
+        if flags.has_agent:
+            # One inference + one minibatch (fwd/bwd) per *invocation*: the
+            # DQN machinery is invocation-gated, so weight/replay traffic is
+            # charged only when the agent actually fires.
+            bs = agent_cfg.dqn.batch_size
+            en = en.at[EN_WEIGHT].add((1 + 3 * bs) * inv)
+            en = en.at[EN_REPLAY].add((1 + bs) * inv)
+        en = en.at[EN_STATE_BUF].add(2.0 * inv)
+
+    return EpochMid(
+        valid=valid, w_valid=w_valid, has_ops=has_ops, invoke=invoke,
+        dest=dest, src1=src1, src2=src2,
+        cycles=cycles, opc=opc,
+        span_sum=span_sum, span_n=span_n, cur_mean=cur_mean,
+        ref_sum=ref_sum, ref_n=ref_n, opc_ring=opc_ring, reward=reward,
+        hops_total=hops_total, mean_hops=mean_hops, util=util,
+        nmp_occ=nmp_occ, rb_hit=rb_hit, mc_queue=mc_queue,
+        page_ema=page_ema, rb_stamp=rb_stamp,
+        cache=cache, ent=ent,
+        hot_page=hot_page, touches_hot=touches_hot, ccube_hot=ccube_hot,
+        svec=svec, k_nbr=k_nbr, env_rng=env_rng,
+        tom_scores=tom_scores, tom_active=tom_active,
+        mig_stall_tom=mig_stall_tom, migrated_tom=migrated_tom,
+        energy=en,
     )
 
-    # ---- AIMM control (computed for every lane; applied where is_aimm) ----
-    env_rng, k_agent, k_nbr = jax.random.split(env.rng, 3)
-    new_agent = agent
 
-    # state vector (paper Fig. 3)
-    page_rate = touches_hot / jnp.maximum(3.0 * w_valid, 1.0)
-    mig_per_acc = cache.migrations[ent] / jnp.maximum(cache.accesses[ent], 1.0)
-    svec = build_state(
-        spec, nmp_occ, rb_hit, mc_queue, env.global_act_hist,
-        env.interval_level, page_rate, mig_per_acc,
-        cache.hop_hist[ent], cache.lat_hist[ent], cache.mig_hist[ent],
-        cache.act_hist[ent], eff_table[hot_page], ccube_hot,
-        occ_norm=float(cfg.nmp_table_size),
-    )
-    # scripted policy (ablations / mechanism-ceiling studies): when
-    # ctx.forced_action >= 0, bypass the DQN at every invocation.
-    action = jnp.where(invoke, ctx.forced_action, DEFAULT).astype(jnp.int32)
-    if has_agent:
-        # Fig. 4-2 flow: at an invocation, the completed transition
-        # (s_{t-1}, a_{t-1}, r_{t-1}, s_t) enters the replay buffer; the
-        # DNN trains continually (every epoch) off the replay buffer.
-        sel = lambda new, old: jax.tree.map(
-            lambda n, o: jnp.where(invoke & (env.prev_span_mean >= 0), n, o),
-            new, old)
-        agent_obs = agent_mod.observe(agent, env.prev_state_vec,
-                                      env.prev_action, reward, svec)
-        agent_full = sel(agent_obs, agent)
-        agent_full = agent_mod.train(agent_full, agent_cfg)
-        action_g, agent_full = agent_mod.act(agent_full, agent_cfg, svec,
-                                             ctx.explore)
-        action = jnp.where(ctx.forced_action >= 0, action,
-                           jnp.where(invoke, action_g, DEFAULT)).astype(jnp.int32)
-        upd = has_ops & is_aimm & (ctx.forced_action < 0)
-        new_agent = jax.tree.map(lambda n, o: jnp.where(upd, n, o),
-                                 agent_full, agent)
-    action = jnp.where(is_aimm, action, jnp.zeros((), jnp.int32))
+# ---------------------------------------------------------------------------
+# One epoch: action application + state commit
+# ---------------------------------------------------------------------------
 
-    # --- apply action (no-ops unless an aimm lane at an invocation) ---
-    nbr = act_mod.random_neighbor(k_nbr, ccube_hot, cfg.mesh_x, cfg.mesh_y)
-    diag = act_mod.diagonal_opposite(ccube_hot, cfg.mesh_x, cfg.mesh_y)
-    is_data = (action == NEAR_DATA) | (action == FAR_DATA)
-    is_comp = ((action == NEAR_COMPUTE) | (action == FAR_COMPUTE)
-               | (action == SOURCE_COMPUTE))
-    data_tgt = jnp.where(action == NEAR_DATA, nbr, diag)
-    comp_tgt = jnp.where(action == NEAR_COMPUTE, nbr,
-                         jnp.where(action == FAR_COMPUTE, diag,
-                                   jnp.asarray(C, jnp.int32)))
+def _epoch_apply(env: EnvState, mid: EpochMid, action: jnp.ndarray,
+                 rw_pages: jnp.ndarray, ctx: TraceCtx, cfg: NMPConfig,
+                 flags: BodyFlags):
+    """Apply the chosen action and assemble the next env state + metrics.
+    Runs per-lane (vmapped by the epoch driver)."""
+    C = cfg.n_cubes
+    is_tom = ctx.mapper == MAPPER_ID["tom"]
+    is_aimm = ctx.mapper == MAPPER_ID["aimm"]
+    invoke, has_ops = mid.invoke, mid.has_ops
+    window = jnp.asarray(cfg.epoch_ops, jnp.int32)
+    cache = mid.cache
+    en = mid.energy
 
-    old_cube = env.page_to_cube[hot_page]
-    mig_latency, mig_stall_aimm, mig_loads_aimm = migration_cost(
-        old_cube, data_tgt, rw_pages[hot_page], touches_hot, cfg)
-    moved = is_data & (data_tgt != old_cube) & invoke & is_aimm
-    migrated_aimm = moved.astype(jnp.float32)
-    page_to_cube = env.page_to_cube.at[hot_page].set(
-        jnp.where(moved, data_tgt, old_cube).astype(jnp.int32))
-    mig_latency = jnp.where(moved, mig_latency, 0.0)
-    mig_stall_aimm = jnp.where(moved, mig_stall_aimm, 0.0)
-    mig_loads_aimm = jnp.where(moved, mig_loads_aimm, 0.0)
+    if flags.any_aimm:
+        # --- apply action (no-ops unless an aimm lane at an invocation) ---
+        hot_page = mid.hot_page
+        nbr = act_mod.random_neighbor(mid.k_nbr, mid.ccube_hot, cfg.mesh_x,
+                                      cfg.mesh_y)
+        diag = act_mod.diagonal_opposite(mid.ccube_hot, cfg.mesh_x, cfg.mesh_y)
+        is_data = (action == NEAR_DATA) | (action == FAR_DATA)
+        is_comp = ((action == NEAR_COMPUTE) | (action == FAR_COMPUTE)
+                   | (action == SOURCE_COMPUTE))
+        data_tgt = jnp.where(action == NEAR_DATA, nbr, diag)
+        comp_tgt = jnp.where(action == NEAR_COMPUTE, nbr,
+                             jnp.where(action == FAR_COMPUTE, diag,
+                                       jnp.asarray(C, jnp.int32)))
 
-    # DEFAULT on the selected page restores its default mapping (clears the
-    # compute-remap entry) — gives the agent an undo for stale remaps.
-    entry = jnp.where(is_comp, comp_tgt,
-                      jnp.where(action == DEFAULT,
-                                jnp.asarray(-1, jnp.int32),
-                                env.compute_remap[hot_page]))
-    compute_remap = env.compute_remap.at[hot_page].set(
-        jnp.where(invoke & is_aimm, entry,
-                  env.compute_remap[hot_page]).astype(jnp.int32))
-    # Finite compute-remap table: entries expire after remap_ttl epochs
-    # (LRU-style eviction under table pressure) — bounds stale-remap damage.
-    remap_age = jnp.where(compute_remap >= 0, env.remap_age + 1, 0)
-    expired = remap_age > cfg.remap_ttl
-    compute_remap = jnp.where(expired, -1, compute_remap)
-    remap_age = jnp.where(expired, 0, remap_age)
-    interval_level = jnp.where(invoke & is_aimm,
-                               act_mod.adjust_interval(env.interval_level,
-                                                       action),
-                               env.interval_level)
+        old_cube = env.page_to_cube[hot_page]
+        mig_latency, mig_stall_aimm, mig_loads_aimm = migration_cost(
+            old_cube, data_tgt, rw_pages[hot_page], mid.touches_hot, cfg)
+        moved = is_data & (data_tgt != old_cube) & invoke & is_aimm
+        migrated_aimm = moved.astype(jnp.float32)
+        page_to_cube = env.page_to_cube.at[hot_page].set(
+            jnp.where(moved, data_tgt, old_cube).astype(jnp.int32))
+        mig_latency = jnp.where(moved, mig_latency, 0.0)
+        mig_stall_aimm = jnp.where(moved, mig_stall_aimm, 0.0)
+        mig_loads_aimm = jnp.where(moved, mig_loads_aimm, 0.0)
 
-    cache = cache._replace(
-        migrations=cache.migrations.at[ent].add(migrated_aimm),
-        mig_hist=jnp.where(moved,
-                           push_hist(cache.mig_hist, ent, mig_latency),
-                           cache.mig_hist),
-        act_hist=jnp.where(invoke & is_aimm,
-                           push_hist(cache.act_hist, ent,
-                                     action.astype(jnp.float32)),
-                           cache.act_hist),
-    )
-    gah = jnp.where(invoke & is_aimm,
-                    jnp.concatenate([env.global_act_hist[1:], action[None]]),
-                    env.global_act_hist)
+        # DEFAULT on the selected page restores its default mapping (clears the
+        # compute-remap entry) — gives the agent an undo for stale remaps.
+        entry = jnp.where(is_comp, comp_tgt,
+                          jnp.where(action == DEFAULT,
+                                    jnp.asarray(-1, jnp.int32),
+                                    env.compute_remap[hot_page]))
+        compute_remap = env.compute_remap.at[hot_page].set(
+            jnp.where(invoke & is_aimm, entry,
+                      env.compute_remap[hot_page]).astype(jnp.int32))
+        # Finite compute-remap table: entries expire after remap_ttl epochs
+        # (LRU-style eviction under table pressure) — bounds stale-remap damage.
+        remap_age = jnp.where(compute_remap >= 0, env.remap_age + 1, 0)
+        expired = remap_age > cfg.remap_ttl
+        compute_remap = jnp.where(expired, -1, compute_remap)
+        remap_age = jnp.where(expired, 0, remap_age)
+        remap_age = jnp.where(is_aimm, remap_age, env.remap_age)
+        interval_level = jnp.where(invoke & is_aimm,
+                                   act_mod.adjust_interval(env.interval_level,
+                                                           action),
+                                   env.interval_level)
 
-    # ---- TOM control (computed for every lane; applied where is_tom) ----
-    K = tom_cands.shape[0]
-    period = K + 8                 # K profiling windows + 8 commit windows
-    phase = (env.epochs.astype(jnp.int32)) % period
-    # profiling: evaluate candidate `phase` on this window
-    def score_k(k):
-        return baselines.tom_colocation_score(tom_cands[k], dest, src1,
-                                              src2, valid, C)
-    scores_all = jax.vmap(score_k)(jnp.arange(K))
-    tom_scores = jnp.where(is_tom & (phase < K),
-                           env.tom_scores.at[jnp.clip(phase, 0, K - 1)].set(
-                               scores_all[jnp.clip(phase, 0, K - 1)]),
-                           env.tom_scores)
-    commit = is_tom & (phase == K)
-    best = jnp.argmax(tom_scores).astype(jnp.int32)
-    prev_map = jnp.where(env.tom_active >= 0,
-                         tom_cands[jnp.maximum(env.tom_active, 0)],
-                         env.page_to_cube)
-    changed = jnp.sum((tom_cands[best] != prev_map).astype(jnp.float32)
-                      * page_live)
-    tom_active = jnp.where(commit, best, env.tom_active)
-    # remap data movement: amortized one-time link traffic + stall
-    mig_stall_tom = jnp.where(commit,
-                              changed * cfg.page_flits / (n_links(cfg) * 8.0),
-                              0.0)
-    migrated_tom = jnp.where(commit, changed, 0.0)
+        cache = cache._replace(
+            migrations=cache.migrations.at[mid.ent].add(migrated_aimm),
+            mig_hist=jnp.where(moved,
+                               push_hist(cache.mig_hist, mid.ent, mig_latency),
+                               cache.mig_hist),
+            act_hist=jnp.where(invoke & is_aimm,
+                               push_hist(cache.act_hist, mid.ent,
+                                         action.astype(jnp.float32)),
+                               cache.act_hist),
+        )
+        gah = jnp.where(invoke & is_aimm,
+                        jnp.concatenate([env.global_act_hist[1:],
+                                         action[None]]),
+                        env.global_act_hist)
+        recent_pages = jnp.where(invoke & is_aimm,
+                                 jnp.concatenate([env.recent_pages[1:],
+                                                  hot_page[None]]),
+                                 env.recent_pages)
+        prev_state_vec = jnp.where(invoke & is_aimm, mid.svec,
+                                   env.prev_state_vec)
+        prev_action = jnp.where(invoke, action,
+                                env.prev_action).astype(jnp.int32)
+
+        # ---- accesses on migrated pages (Fig. 10 stat) ----
+        mig_mask = jnp.where(is_aimm,
+                             env.mig_page_mask.at[hot_page].set(
+                                 jnp.maximum(env.mig_page_mask[hot_page],
+                                             migrated_aimm)),
+                             env.mig_page_mask)
+        acc_mig = (jnp.sum(mig_mask[mid.dest] * mid.valid)
+                   + jnp.sum(mig_mask[mid.src1] * mid.valid)
+                   + jnp.sum(mig_mask[mid.src2] * mid.valid))
+
+        aimm_f = is_aimm.astype(jnp.float32)
+        en = en.at[EN_MIG_Q].add(2 * migrated_aimm * aimm_f)
+        en = en.at[EN_MDMA].add(migrated_aimm * cfg.page_flits * aimm_f)
+    else:
+        page_to_cube = env.page_to_cube
+        compute_remap = env.compute_remap
+        remap_age = env.remap_age
+        interval_level = env.interval_level
+        gah = env.global_act_hist
+        recent_pages = env.recent_pages
+        prev_state_vec = env.prev_state_vec
+        prev_action = env.prev_action
+        mig_mask = env.mig_page_mask
+        acc_mig = jnp.zeros(())
+        migrated_aimm = jnp.zeros(())
+        mig_stall_aimm = jnp.zeros(())
+        mig_loads_aimm = jnp.zeros_like(env.pending_mig_loads)
 
     # ---- combine mapper outputs ----
     mig_stall = jnp.where(is_aimm, mig_stall_aimm,
-                          jnp.where(is_tom, mig_stall_tom, 0.0))
+                          jnp.where(is_tom, mid.mig_stall_tom, 0.0))
     mig_loads = jnp.where(is_aimm, mig_loads_aimm,
                           jnp.zeros_like(env.pending_mig_loads))
     migrated = jnp.where(is_aimm, migrated_aimm,
-                         jnp.where(is_tom, migrated_tom, 0.0))
+                         jnp.where(is_tom, mid.migrated_tom, 0.0))
 
-    # ---- accesses on migrated pages (Fig. 10 stat) ----
-    mig_mask = jnp.where(is_aimm,
-                         env.mig_page_mask.at[hot_page].set(
-                             jnp.maximum(env.mig_page_mask[hot_page],
-                                         migrated_aimm)),
-                         env.mig_page_mask)
-    acc_mig = (jnp.sum(mig_mask[dest] * valid) + jnp.sum(mig_mask[src1] * valid)
-               + jnp.sum(mig_mask[src2] * valid))
-
-    # ---- energy counters ----
-    aimm_f = is_aimm.astype(jnp.float32)
-    en = env.energy
-    en = en.at[EN_MEM_BITS].add(w_valid * 3 * cfg.packet_bytes * 8)
-    en = en.at[EN_NET_BIT_HOPS].add(hops_total * cfg.packet_bytes * 8
+    en = en.at[EN_NET_BIT_HOPS].add(mid.hops_total * cfg.packet_bytes * 8
                                     + migrated * cfg.page_bytes * 8 * 2)
-    en = en.at[EN_PAGE_CACHE].add(2 * w_valid)
-    en = en.at[EN_NMP_BUF].add(2 * w_valid)
-    bs = agent_cfg.dqn.batch_size
-    inv = (invoke & is_aimm).astype(jnp.float32)
-    en = en.at[EN_MIG_Q].add(2 * migrated_aimm * aimm_f)
-    en = en.at[EN_MDMA].add(migrated_aimm * cfg.page_flits * aimm_f)
-    en = en.at[EN_WEIGHT].add((inv + 3 * bs) * aimm_f)  # inference + fwd/bwd batch
-    en = en.at[EN_REPLAY].add((inv + bs) * aimm_f)
-    en = en.at[EN_STATE_BUF].add(2.0 * inv)
 
     cand_env = EnvState(
         page_to_cube=page_to_cube,
@@ -535,38 +719,36 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
         interval_level=interval_level,
         since_invoke=jnp.where(invoke, 0,
                                env.since_invoke + 1).astype(jnp.int32),
-        span_sum=jnp.where(invoke, 0.0, span_sum),
-        span_n=jnp.where(invoke, 0.0, span_n),
-        prev_span_mean=jnp.where(invoke, cur_mean, env.prev_span_mean),
-        opc_ring=opc_ring,
-        ref_sum=jnp.where(invoke, 0.0, ref_sum),
-        ref_n=jnp.where(invoke, 0.0, ref_n),
-        page_access_ema=page_ema,
-        nmp_occ=nmp_occ,
-        rb_hit=rb_hit,
-        mc_queue=mc_queue,
+        span_sum=jnp.where(invoke, 0.0, mid.span_sum),
+        span_n=jnp.where(invoke, 0.0, mid.span_n),
+        prev_span_mean=jnp.where(invoke, mid.cur_mean, env.prev_span_mean),
+        opc_ring=mid.opc_ring,
+        ref_sum=jnp.where(invoke, 0.0, mid.ref_sum),
+        ref_n=jnp.where(invoke, 0.0, mid.ref_n),
+        page_access_ema=mid.page_ema,
+        rb_stamp=mid.rb_stamp,
+        nmp_occ=mid.nmp_occ,
+        rb_hit=mid.rb_hit,
+        mc_queue=mid.mc_queue,
         global_act_hist=gah,
         cache=cache,
         pending_mig_loads=mig_loads,
         pending_mig_stall=mig_stall,
-        prev_state_vec=jnp.where(invoke & is_aimm, svec, env.prev_state_vec),
-        prev_action=jnp.where(invoke, action, env.prev_action).astype(jnp.int32),
-        recent_pages=jnp.where(invoke & is_aimm,
-                               jnp.concatenate([env.recent_pages[1:],
-                                                hot_page[None]]),
-                               env.recent_pages),
-        remap_age=jnp.where(is_aimm, remap_age, env.remap_age),
-        rng=env_rng,
-        tom_scores=tom_scores,
-        tom_active=tom_active,
-        cycles=env.cycles + cycles,
-        ops_done=env.ops_done + w_valid,
-        hops_sum=env.hops_sum + hops_total,
-        util_sum=env.util_sum + util,
+        prev_state_vec=prev_state_vec,
+        prev_action=prev_action,
+        recent_pages=recent_pages,
+        remap_age=remap_age,
+        rng=mid.env_rng,
+        tom_scores=mid.tom_scores,
+        tom_active=mid.tom_active,
+        cycles=env.cycles + mid.cycles,
+        ops_done=env.ops_done + mid.w_valid,
+        hops_sum=env.hops_sum + mid.hops_total,
+        util_sum=env.util_sum + mid.util,
         epochs=env.epochs + 1.0,
         mig_count=env.mig_count + jnp.where(is_aimm, migrated_aimm, 0.0),
         mig_page_mask=mig_mask,
-        access_total=env.access_total + 3 * w_valid,
+        access_total=env.access_total + 3 * mid.w_valid,
         access_on_migrated=env.access_on_migrated + acc_mig,
         energy=en,
     )
@@ -575,26 +757,131 @@ def _epoch(env: EnvState, agent: AgentState | None, trace: dict,
     # lanes of different lengths stay bit-identical to their serial runs.
     new_env = jax.tree.map(lambda n, o: jnp.where(has_ops, n, o), cand_env, env)
     metrics = {
-        "opc": opc, "cycles": cycles, "reward": reward,
+        "opc": mid.opc, "cycles": mid.cycles, "reward": mid.reward,
         "action": jnp.where(has_ops, action, jnp.zeros((), jnp.int32)),
-        "mean_hops": jnp.where(has_ops, mean_hops, 0.0),
-        "util": jnp.where(has_ops, util, 0.0),
-        "invoke": invoke.astype(jnp.float32), "valid": w_valid,
+        "mean_hops": jnp.where(has_ops, mid.mean_hops, 0.0),
+        "util": jnp.where(has_ops, mid.util, 0.0),
+        "invoke": invoke.astype(jnp.float32), "valid": mid.w_valid,
     }
-    return new_env, new_agent, metrics
+    return new_env, metrics
 
 
 # ---------------------------------------------------------------------------
-# Episode runner
+# One epoch: invocation-gated agent step
 # ---------------------------------------------------------------------------
+
+def _sel(mask: jnp.ndarray, new, old):
+    """Per-lane select over an agent pytree (mask: (B,) bool)."""
+    def one(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(one, new, old)
+
+
+def _invoke_agent(agent: AgentState, sim: EpochMid, env: EnvState,
+                  explore: jnp.ndarray, commit: jnp.ndarray,
+                  prev_ok: jnp.ndarray, agent_cfg: AgentConfig,
+                  agent_gate: str):
+    """Batched continual-learning invocation (Fig. 4-2 flow): the completed
+    transition (s_{t-1}, a_{t-1}, r_{t-1}, s_t) enters the replay buffer, the
+    DNN takes one minibatch TD step, and ε-greedy inference picks the next
+    action.
+
+    The TD step sits behind its own nested `lax.cond` on "any committing lane
+    has a ready replay buffer": until `min_replay` transitions have
+    accumulated, a train step is an exact no-op (masked batch, zero grads
+    onto zero Adam moments), so skipping it is bit-identical and the warm-up
+    episodes never pay for the minibatch.  The sample RNG is drawn *outside*
+    that cond (committing lanes always advance their stream), which is what
+    makes the skip exact.  Lanes not committing keep their old agent
+    bit-for-bit, so running this under the driver's any-lane-invokes cond
+    equals the compute-then-mask reference path (tests/test_engine_golden.py).
+    """
+    pushed = jax.vmap(agent_mod.observe)(agent, env.prev_state_vec,
+                                         env.prev_action, sim.reward,
+                                         sim.svec)
+    ag = _sel(commit & prev_ok, pushed, agent)
+    keys = jax.vmap(jax.random.split)(ag.rng)          # (B, 2, key)
+    ag = ag._replace(rng=jnp.where(commit[:, None], keys[:, 0], ag.rng))
+    k_train = keys[:, 1]
+
+    def do_train(a):
+        trained = jax.vmap(lambda al, k: agent_mod.train_step(al, agent_cfg,
+                                                              k))(a, k_train)
+        return _sel(commit, trained, a)
+
+    ready = agent_mod.replay_ready(ag, agent_cfg)
+    if agent_gate == "cond":
+        ag = jax.lax.cond(jnp.any(commit & ready), do_train, lambda a: a, ag)
+    else:
+        ag = do_train(ag)
+    action_g, acted = jax.vmap(
+        lambda al, s, e: agent_mod.act(al, agent_cfg, s, e))(ag, sim.svec,
+                                                             explore)
+    ag = _sel(commit, acted, ag)
+    action = jnp.where(sim.invoke, action_g,
+                       jnp.int32(DEFAULT)).astype(jnp.int32)
+    return ag, action
+
+
+# ---------------------------------------------------------------------------
+# Epoch driver + episode runner
+# ---------------------------------------------------------------------------
+
+def _epoch_batched(env: EnvState, agent: AgentState | None, trace: dict,
+                   rw_pages: jnp.ndarray, tom_cands: jnp.ndarray,
+                   ctx: TraceCtx, cfg: NMPConfig, spec: StateSpec,
+                   agent_cfg: AgentConfig, flags: BodyFlags,
+                   agent_gate: str = "cond"):
+    """One epoch over a (B, ...) batch of lanes.
+
+    The cost-model halves are vmapped per lane; the agent invocation between
+    them is an un-vmapped `lax.cond` on "any lane invokes this epoch"
+    (`agent_gate="masked"` forces the compute-every-epoch reference path used
+    by the equality test)."""
+    sim = jax.vmap(
+        lambda e, t, c: _epoch_sim(e, t, tom_cands, c, cfg, spec, agent_cfg,
+                                   flags))(env, trace, ctx)
+    is_aimm = ctx.mapper == MAPPER_ID["aimm"]
+    scripted = jnp.where(sim.invoke, ctx.forced_action,
+                         jnp.int32(DEFAULT)).astype(jnp.int32)
+    if flags.has_agent:
+        prev_ok = env.prev_span_mean >= 0.0
+        commit = sim.invoke & is_aimm & (ctx.forced_action < 0)
+
+        def fire(ag):
+            return _invoke_agent(ag, sim, env, ctx.explore, commit, prev_ok,
+                                 agent_cfg, agent_gate)
+
+        def hold(ag):
+            return ag, jnp.full_like(scripted, DEFAULT)
+
+        if agent_gate == "cond":
+            agent, learned = jax.lax.cond(jnp.any(sim.invoke), fire, hold,
+                                          agent)
+        else:
+            agent, learned = fire(agent)
+        action = jnp.where(ctx.forced_action >= 0, scripted, learned)
+    else:
+        action = scripted
+    action = jnp.where(is_aimm, action, jnp.zeros_like(action))
+
+    env, metrics = jax.vmap(
+        lambda e, m, a, r, c: _epoch_apply(e, m, a, r, c, cfg, flags))(
+            env, sim, action, rw_pages, ctx)
+    return env, agent, metrics
+
 
 def scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
-                agent_cfg, n_epochs, has_agent):
-    """Un-jitted epoch scan shared by the serial and batched runners."""
+                agent_cfg, n_epochs, flags, agent_gate="cond"):
+    """Un-jitted batched epoch scan shared by the serial and sweep runners.
+    All lane-shaped arguments carry a leading (B,) axis; metrics come back as
+    (n_epochs, B)."""
     def body(carry, _):
         env, agent = carry
-        env, agent, m = _epoch(env, agent, trace, rw_pages, tom_cands, ctx,
-                               cfg, spec, agent_cfg, has_agent)
+        env, agent, m = _epoch_batched(env, agent, trace, rw_pages, tom_cands,
+                                       ctx, cfg, spec, agent_cfg, flags,
+                                       agent_gate)
         return (env, agent), m
 
     (env, agent), ms = jax.lax.scan(body, (env, agent), None, length=n_epochs)
@@ -602,11 +889,11 @@ def scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
 
 
 @partial(jax.jit, static_argnames=("cfg", "spec", "agent_cfg", "n_epochs",
-                                   "has_agent"))
+                                   "flags", "agent_gate"))
 def _run_scan(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
-              agent_cfg, n_epochs, has_agent):
+              agent_cfg, n_epochs, flags, agent_gate):
     return scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
-                       agent_cfg, n_epochs, has_agent)
+                       agent_cfg, n_epochs, flags, agent_gate)
 
 
 def state_spec_for(cfg: NMPConfig) -> StateSpec:
@@ -633,37 +920,55 @@ def pad_trace_ops(trace: Trace, n_total: int, cfg: NMPConfig) -> dict:
             for k, v in trace.as_dict().items() if k != "program_id"}
 
 
+def _batch1(tree):
+    """Add a leading batch axis of 1 to every leaf."""
+    return jax.tree.map(lambda a: jnp.asarray(a)[None], tree)
+
+
 def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
                 technique: str = "bnmp", mapper: str = "none",
                 agent: AgentState | None = None,
                 agent_cfg: AgentConfig | None = None,
                 seed: int = 0, page_table: np.ndarray | None = None,
-                explore: bool = True, forced_action: int = -1) -> EpisodeResult:
+                explore: bool = True, forced_action: int = -1,
+                agent_gate: str = "cond") -> EpisodeResult:
     """Run one episode (= one pass over the trace) and return final stats.
 
     `agent` persists across episodes (continual learning); pass the returned
     agent back in to keep training. Env state is reset each episode, matching
     the paper's protocol ("simulation states are cleared except the DNN").
+
+    This serial runner is the batched engine at batch size 1 (one vmapped
+    lane), so its numbers are bit-identical to the same lane inside a
+    `sweep.run_grid` batch by construction.
     """
     assert mapper in MAPPERS and technique in baselines.TECHNIQUES
     spec = state_spec_for(cfg)
     agent_cfg = agent_cfg or default_agent_cfg(cfg)
-    has_agent = mapper == "aimm" and forced_action < 0
-    if has_agent and agent is None:
+    flags = episode_flags(trace, cfg, technique, mapper, forced_action)
+    if flags.has_agent and agent is None:
         agent = agent_mod.init_agent(jax.random.PRNGKey(seed + 1), agent_cfg)
     n_epochs = serial_epochs(trace.n_ops, cfg)
 
-    tr = pad_trace_ops(trace, trace.n_ops, cfg)
-    rw = jnp.asarray(trace.read_write)
+    tr = _batch1(pad_trace_ops(trace, trace.n_ops, cfg))
+    rw = _batch1(jnp.asarray(trace.read_write))
     pt = page_table if page_table is not None else default_alloc(trace.n_pages, cfg)
-    env = _init_env(pt, cfg, spec, seed, phase_ring_len(trace, cfg))
+    env = _batch1(_init_env(pt, cfg, spec, seed, phase_ring_len(trace, cfg)))
     tom_cands = baselines.tom_candidates(trace.n_pages, cfg)
-    ctx = make_ctx(trace, cfg, technique, mapper, forced_action, explore)
+    ctx = _batch1(make_ctx(trace, cfg, technique, mapper, forced_action,
+                           explore))
 
-    env, agent_out, ms = _run_scan(tr, rw, env, agent if has_agent else None,
+    env, agent_out, ms = _run_scan(tr, rw, env,
+                                   _batch1(agent) if flags.has_agent else None,
                                    tom_cands, ctx, cfg, spec, agent_cfg,
-                                   n_epochs, has_agent)
-    return EpisodeResult(env, agent_out if has_agent else agent, ms)
+                                   n_epochs, flags, agent_gate)
+    env = jax.tree.map(lambda a: a[0], env)
+    ms = {k: v[:, 0] for k, v in ms.items()}
+    if flags.has_agent:
+        agent_out = jax.tree.map(lambda a: a[0], agent_out)
+    else:
+        agent_out = agent
+    return EpisodeResult(env, agent_out, ms)
 
 
 def run_program(trace: Trace, cfg: NMPConfig = NMPConfig(),

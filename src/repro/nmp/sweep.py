@@ -1,28 +1,38 @@
 """Batched scenario-sweep engine: a whole experiment grid in one compile.
 
 `run_grid` takes a list of `scenarios.Scenario` lanes, pads every trace to a
-common (n_ops, n_pages) envelope, stacks per-lane `EnvState`s, and `jax.vmap`s
-the shared epoch scan (`engine.scan_epochs`) over the scenario axis. Episode
-chaining — the paper's continual-learning protocol where the DQN persists
-across episode resets — is a `jax.lax.scan` over episodes inside the same
-program, so an app x technique x mapper x seed grid that used to cost one
-XLA compile and one Python dispatch per (cell, episode) now costs one compile
-per agent-mode group and a single device dispatch.
+common (n_ops, n_pages) envelope, stacks per-lane `EnvState`s, and runs the
+shared epoch body (`engine._epoch_batched`) `jax.vmap`ed over the scenario
+axis.  Episode chaining — the paper's continual-learning protocol where the
+DQN persists across episode resets — is a `jax.lax.scan` over episodes inside
+the same program, so an app x technique x mapper x seed grid that used to
+cost one XLA compile and one Python dispatch per (cell, episode) now costs
+one compile per lane group and a single device dispatch.
+
+Hot-path layout: the epoch `lax.scan` sits *outside* the lane vmap
+(scan-of-vmap, not vmap-of-scan), so the agent invocation inside one epoch is
+a genuine scalar `lax.cond` on "any lane invokes" — epochs where every AIMM
+lane is between invocations skip the whole DQN machinery at run time.  The
+input batch is donated to the compiled sweep (`donate_argnames`) and the
+per-epoch metric timelines are stored at slim dtypes (`valid_t` as uint16),
+which cuts the stacked-grid memory high-water mark.
 
 Exactness: technique/mapper/forced-action are traced `TraceCtx` selectors and
-every engine update is gated on `has_ops` (see engine._epoch), so each lane's
-`cycles` / `ops_done` / final OPC are bit-identical to a serial
+every engine update is gated on `has_ops` (see engine._epoch_sim/_epoch_apply),
+so each lane's `cycles` / `ops_done` / final OPC are bit-identical to a serial
 `run_episode` / `run_program` of the same scenario, including lanes whose
 traces are shorter than the batch envelope (tests/test_sweep_equivalence.py).
 
-Lanes are grouped only by whether they carry a live DQN (`mapper == "aimm"`
-with a learned policy): deterministic lanes skip the agent machinery instead
-of paying for it in lockstep, so a mixed grid compiles at most two programs.
+Lanes are grouped by whether they carry a live DQN (`mapper == "aimm"` with a
+learned policy); within a group, `engine.BodyFlags` records which features
+(AIMM actions, TOM scoring, PEI thresholding) any lane uses so unused
+machinery is compiled out.  A mixed grid compiles at most two programs.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import Any, Sequence
 
@@ -33,58 +43,66 @@ import numpy as np
 from repro.core import agent as agent_mod
 from repro.nmp import baselines
 from repro.nmp.config import NMPConfig
-from repro.nmp.engine import (EN_N, TraceCtx, _init_env, default_agent_cfg,
-                              make_ctx, pad_trace_ops, phase_ring_len,
-                              scan_epochs, serial_epochs, state_spec_for)
+from repro.nmp.engine import (EN_N, BodyFlags, TraceCtx, _init_env,
+                              default_agent_cfg, make_ctx, pad_trace_ops,
+                              pei_top_k, phase_ring_len, scan_epochs,
+                              serial_epochs, state_spec_for)
 from repro.nmp.paging import default_alloc
 from repro.nmp.scenarios import Scenario
 from repro.nmp.stats import energy_breakdown, energy_nj, resample_opc
 
 
-@partial(jax.jit, static_argnames=("cfg", "spec", "agent_cfg", "n_epochs",
-                                   "n_episodes", "ring_len", "has_agent"))
+@partial(jax.jit,
+         static_argnames=("cfg", "spec", "agent_cfg", "n_epochs", "n_episodes",
+                          "ring_len", "flags"),
+         donate_argnames=("batch",))
 def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
-               ring_len, has_agent):
-    """vmap(lane) over the stacked grid; inside each lane, scan over episodes,
-    re-initializing the env per episode while chaining the agent through."""
+               ring_len, flags):
+    """Scan over episodes; inside, the batched epoch scan runs every lane in
+    lockstep (vmapped epoch body, scalar any-lane-invokes agent cond).  The
+    env is re-initialized per episode while the agent chains through."""
+    trace = {k: batch[k] for k in ("dest", "src1", "src2")}
+    base_ctx = TraceCtx(
+        n_ops=batch["n_ops"], n_pages=batch["n_pages"],
+        t_ring=batch["t_ring"], pei_idx=batch["pei_idx"],
+        technique=batch["technique"], mapper=batch["mapper"],
+        forced_action=batch["forced_action"],
+        explore=jnp.zeros_like(batch["ep_explore"][:, 0]))
+    init_envs = jax.vmap(
+        lambda pt, s: _init_env(pt, cfg, spec, s, ring_len))
+    agent0 = (jax.vmap(lambda s: agent_mod.init_agent(
+        jax.random.PRNGKey(s + 1), agent_cfg))(batch["ep_seed"][:, 0])
+        if flags.has_agent else None)
+    env0 = init_envs(batch["page_table"], batch["ep_seed"][:, 0])
 
-    def lane(b):
-        trace = {"dest": b["dest"], "src1": b["src1"], "src2": b["src2"]}
-        base_ctx = TraceCtx(
-            n_ops=b["n_ops"], n_pages=b["n_pages"], t_ring=b["t_ring"],
-            pei_idx=b["pei_idx"], technique=b["technique"], mapper=b["mapper"],
-            forced_action=b["forced_action"], explore=jnp.asarray(False))
-        agent0 = (agent_mod.init_agent(jax.random.PRNGKey(b["ep_seed"][0] + 1),
-                                       agent_cfg)
-                  if has_agent else None)
-        env0 = _init_env(b["page_table"], cfg, spec, b["ep_seed"][0], ring_len)
+    def episode(carry, x):
+        agent, _ = carry
+        seeds, explore = x                        # (B,) each
+        ctx = base_ctx._replace(explore=explore)
+        env = init_envs(batch["page_table"], seeds)
+        env, agent2, ms = scan_epochs(trace, batch["rw"], env, agent,
+                                      tom_cands, ctx, cfg, spec, agent_cfg,
+                                      n_epochs, flags)
+        out = {
+            "cycles": env.cycles, "ops": env.ops_done,
+            "hops_sum": env.hops_sum, "util_sum": env.util_sum,
+            "epochs": env.epochs, "migrations": env.mig_count,
+            "pages_migrated": env.mig_page_mask.sum(axis=-1),
+            "access_total": env.access_total,
+            "access_on_migrated": env.access_on_migrated,
+            "energy": env.energy,
+            # per-epoch timelines, stored slim: ms leaves are (n_epochs, B)
+            "opc_t": ms["opc"].T,
+            "valid_t": ms["valid"].astype(jnp.uint16).T,
+        }
+        return ((agent2 if flags.has_agent else agent), env), out
 
-        def episode(carry, x):
-            agent, _ = carry
-            seed, explore = x
-            ctx = base_ctx._replace(explore=explore)
-            env = _init_env(b["page_table"], cfg, spec, seed, ring_len)
-            env, agent2, ms = scan_epochs(trace, b["rw"], env, agent,
-                                          tom_cands, ctx, cfg, spec,
-                                          agent_cfg, n_epochs, has_agent)
-            out = {
-                "cycles": env.cycles, "ops": env.ops_done,
-                "hops_sum": env.hops_sum, "util_sum": env.util_sum,
-                "epochs": env.epochs, "migrations": env.mig_count,
-                "pages_migrated": env.mig_page_mask.sum(),
-                "access_total": env.access_total,
-                "access_on_migrated": env.access_on_migrated,
-                "energy": env.energy,
-                "opc_t": ms["opc"], "valid_t": ms["valid"],
-            }
-            return ((agent2 if has_agent else agent), env), out
-
-        xs = (b["ep_seed"], b["ep_explore"])
-        (agent_fin, env_fin), outs = jax.lax.scan(episode, (agent0, env0), xs,
-                                                  length=n_episodes)
-        return outs, env_fin
-
-    return jax.vmap(lane)(batch)
+    xs = (batch["ep_seed"].T, batch["ep_explore"].T)   # (E, B)
+    (agent_fin, env_fin), outs = jax.lax.scan(episode, (agent0, env0), xs,
+                                              length=n_episodes)
+    # outs leaves are (E, B, ...); present them lane-major like the metrics.
+    outs = {k: jnp.moveaxis(v, 0, 1) for k, v in outs.items()}
+    return outs, env_fin
 
 
 @dataclasses.dataclass
@@ -182,6 +200,23 @@ def _build_batch(scenarios: Sequence[Scenario], cfg: NMPConfig,
             for k in lanes[0]}
 
 
+def needs_agent(sc: Scenario) -> bool:
+    return sc.mapper == "aimm" and sc.forced_action < 0
+
+
+def group_flags(scenarios: Sequence[Scenario], cfg: NMPConfig,
+                has_agent: bool) -> BodyFlags:
+    """Static body flags for one sweep group: the OR over its lanes' needs."""
+    pei_k = max((pei_top_k(sc.trace.n_pages, cfg) for sc in scenarios
+                 if sc.technique == "pei"), default=0)
+    return BodyFlags(
+        has_agent=has_agent,
+        any_aimm=any(sc.mapper == "aimm" for sc in scenarios),
+        any_tom=any(sc.mapper == "tom" for sc in scenarios),
+        pei_k=pei_k,
+    )
+
+
 def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
              agent_cfg=None) -> SweepResult:
     """Run every scenario lane of a grid as one batched, jitted program.
@@ -206,9 +241,6 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
     n_episodes = max(sc.total_episodes for sc in scenarios)
     tom_cands = baselines.tom_candidates(n_pages_max, cfg)
 
-    def needs_agent(sc: Scenario) -> bool:
-        return sc.mapper == "aimm" and sc.forced_action < 0
-
     groups = [[i for i, sc in enumerate(scenarios) if needs_agent(sc)],
               [i for i, sc in enumerate(scenarios) if not needs_agent(sc)]]
     outs: list = [None] * len(scenarios)
@@ -216,11 +248,17 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
     for has_agent, idxs in zip((True, False), groups):
         if not idxs:
             continue
-        ep_group = max(scenarios[i].total_episodes for i in idxs)
-        batch = _build_batch([scenarios[i] for i in idxs], cfg, n_ops_max,
-                             n_pages_max, ep_group)
-        out, env_fin = _run_sweep(batch, tom_cands, cfg, spec, agent_cfg,
-                                  n_epochs, ep_group, ring_len, has_agent)
+        group = [scenarios[i] for i in idxs]
+        flags = group_flags(group, cfg, has_agent)
+        ep_group = max(sc.total_episodes for sc in group)
+        batch = _build_batch(group, cfg, n_ops_max, n_pages_max, ep_group)
+        with warnings.catch_warnings():
+            # int trace/ctx buffers have no same-shaped outputs to reuse;
+            # their donation being unusable is expected, not a leak.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            out, env_fin = _run_sweep(batch, tom_cands, cfg, spec, agent_cfg,
+                                      n_epochs, ep_group, ring_len, flags)
         out = jax.block_until_ready(out)
         pad_e = n_episodes - ep_group
         for j, i in enumerate(idxs):
@@ -244,7 +282,7 @@ def run_grid_serial(scenarios: Sequence[Scenario],
     from repro.nmp.stats import summarize
     out = []
     for sc in scenarios:
-        if sc.mapper == "aimm" and sc.forced_action < 0:
+        if needs_agent(sc):
             results = run_program(sc.trace, cfg, sc.technique, "aimm",
                                   episodes=sc.episodes, seed=sc.seed,
                                   page_table=sc.page_table)

@@ -75,6 +75,48 @@ def test_agent_learns_contextual_bandit():
     assert late.mean() > 0.7, late.mean()
 
 
+def test_q_values_infer_backends_agree():
+    """The fused Pallas dueling kernel (interpret mode on CPU) and the plain
+    jnp path must agree for both the single-state (act) and batched (TD
+    target) shapes the engine uses."""
+    cfg = DQNConfig(state_dim=106, n_actions=8)
+    params = dqn.init_params(jax.random.PRNGKey(0), cfg)
+    for shape in ((106,), (64, 106)):
+        s = jax.random.normal(jax.random.PRNGKey(1), shape)
+        ref = dqn.q_values_infer(params, s, cfg, backend="jnp")
+        pal = dqn.q_values_infer(params, s, cfg, backend="pallas")
+        assert pal.shape == ref.shape
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(dqn.q_values_infer(params, s, cfg, backend="jnp")),
+        np.asarray(dqn.q_values(params, s, cfg)))
+
+
+def test_q_values_infer_falls_back_off_fused_shape():
+    """Non-dueling or deeper nets are outside the fused kernel's shape family
+    and must silently use the jnp path."""
+    cfg = DQNConfig(state_dim=12, n_actions=4, hidden=(32, 32, 32))
+    params = dqn.init_params(jax.random.PRNGKey(0), cfg)
+    assert not dqn.fused_kernel_compatible(params)
+    s = jax.random.normal(jax.random.PRNGKey(1), (5, 12))
+    np.testing.assert_array_equal(
+        np.asarray(dqn.q_values_infer(params, s, cfg, backend="pallas")),
+        np.asarray(dqn.q_values(params, s, cfg)))
+
+
+def test_train_step_noop_until_replay_ready():
+    """Pre-`min_replay` the TD step must be an exact no-op (this is what lets
+    the engine skip it under lax.cond)."""
+    cfg = AgentConfig(dqn=DQNConfig(state_dim=4, n_actions=2), min_replay=8)
+    ag = init_agent(jax.random.PRNGKey(0), cfg)
+    ag = A.observe(ag, jnp.ones(4), 0, 1.0, jnp.ones(4))
+    assert not bool(A.replay_ready(ag, cfg))
+    out = A.train_step(ag, cfg, jax.random.PRNGKey(9))
+    for a, b in zip(jax.tree.leaves(ag), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_target_sync_periodic():
     cfg = AgentConfig(dqn=DQNConfig(state_dim=4, n_actions=2, target_sync=4),
                       min_replay=1)
