@@ -2,6 +2,8 @@
 #
 #   make test         tier-1 verify: the full suite (what the roadmap gates on)
 #   make test-fast    quick lane: skips tests marked `slow`
+#   make test-4dev    test-fast on a forced 4-device host platform (the sweep
+#                     partition layer shards every grid over a 4-wide mesh)
 #   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record,
 #                     which also writes bench_out/BENCH_engine.json)
 #   make bench        every benchmark figure (BENCH_FULL=1 for paper scale)
@@ -12,13 +14,17 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench profile
+.PHONY: test test-fast test-4dev bench-smoke bench profile
 
 test:
 	$(PY) -m pytest -x -q
 
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+test-4dev:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4 $$XLA_FLAGS" \
+	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
 	BENCH_ONLY=fig5,engine $(PY) benchmarks/run.py

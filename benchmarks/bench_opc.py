@@ -1,6 +1,9 @@
 """Fig. 8: normalized memory operations-per-cycle (OPC) per app/technique,
-served from the shared batched figure grid (common.figure_grid)."""
-from benchmarks.common import apps, emit, figure_grid, grid_us, lane_summary
+served from the shared batched figure grid (common.figure_grid).  With
+BENCH_SEEDS > 1 every AIMM point also emits its mean±std variance band over
+the folded seed axis (`common.lane_band`)."""
+from benchmarks.common import (SEEDS, apps, emit, figure_grid, grid_us,
+                               lane_band, lane_summary)
 
 
 def run():
@@ -13,6 +16,12 @@ def run():
                 opc = lane_summary(cached, f"{app}/{tech}/{mapper}/s0")["opc"]
                 emit(f"fig8/{app}/{tech}/{mapper.upper()}", us,
                      round(opc / max(base, 1e-9), 4))
+            if len(SEEDS) > 1:
+                band = lane_band(cached, f"{app}/{tech}/aimm/s0")
+                emit(f"fig8/{app}/{tech}/AIMM_band", us,
+                     f"{band['opc_mean'] / max(base, 1e-9):.4f}"
+                     f"±{band['opc_std'] / max(base, 1e-9):.4f}"
+                     f"(n={band['n']})")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,17 @@ FULL = os.environ.get("BENCH_FULL", "0") == "1"
 N_OPS = 16384
 EPISODES = 5
 APPS_FAST = ("BP", "KM", "PR", "RBM", "SPMV") if not FULL else None
+# seed replicas per figure cell: the sweep folds them into a vmapped seed
+# axis (variance bands come back per lane); BENCH_SEEDS widens the axis.
+_raw_seeds = os.environ.get("BENCH_SEEDS", "3" if FULL else "1")
+try:
+    _n_seeds = int(_raw_seeds)
+except ValueError:
+    raise ValueError(f"BENCH_SEEDS={_raw_seeds!r}: expected a positive "
+                     "integer") from None
+if _n_seeds < 1:
+    raise ValueError(f"BENCH_SEEDS={_n_seeds} must be >= 1")
+SEEDS = tuple(range(_n_seeds))
 
 
 def apps():
@@ -82,12 +93,17 @@ def cached_grid(grid_name: str, cfg=None, **kw):
     """Memoized batched run of a named scenario grid (see repro.nmp.scenarios).
 
     `cfg` overrides the NMPConfig the sweep runs under (it is part of the
-    memo key, so e.g. mesh-scaling and sensitivity points cache separately).
+    memo key, so e.g. mesh-scaling and sensitivity points cache separately;
+    the device-mesh signature is part of the key too, so cached results
+    never cross a REPRO_SWEEP_DEVICES change, and builder kwargs — including
+    figure_grid's seeds=SEEDS — key as before).
     Returns {"res": SweepResult, "grid": [Scenario], "us": wall_us}; lanes are
     addressed by `Scenario.name` via `lane_summary`."""
-    from repro.nmp import NMPConfig, scenarios, sweep
+    from repro.nmp import NMPConfig, partition, scenarios, sweep
     cfg = cfg or NMPConfig()
-    key = (grid_name, str(cfg),
+    # seeds (when a builder takes them, e.g. figure_grid's seeds=SEEDS) are
+    # part of kw and therefore of the key already.
+    key = (grid_name, str(cfg), partition.mesh_signature(),
            tuple(sorted((k, str(v)) for k, v in kw.items())))
     if key in _GRID_CACHE:
         return _GRID_CACHE[key]
@@ -103,10 +119,13 @@ def figure_grid(cfg=None, techniques=("bnmp", "ldb", "pei"),
     """The shared app x technique x mapper grid behind the single-program
     figures (fig6-11, 14): every AIMM lane trains for EPISODES episodes and
     appends a greedy eval episode (the paper's converged-behaviour protocol).
-    One `sweep.run_grid` call (memoized) covers all of them."""
+    One `sweep.run_grid` call (memoized) covers all of them; with
+    BENCH_SEEDS > 1 every cell carries a folded seed axis and figures can
+    report mean±std bands via `lane_band`."""
     return cached_grid("single", cfg=cfg, apps=apps_ or apps(),
                        techniques=techniques, mappers=mappers, n_ops=N_OPS,
-                       aimm_episodes=EPISODES, eval_episode=True)
+                       seeds=SEEDS, aimm_episodes=EPISODES,
+                       eval_episode=True)
 
 
 def grid_us(cached: dict) -> float:
@@ -115,9 +134,19 @@ def grid_us(cached: dict) -> float:
     return cached["us"] / len(cached["grid"])
 
 
-def lane_summary(cached: dict, name: str, episode: int | None = None) -> dict:
-    """Summary dict for the lane whose Scenario.name == `name`."""
+def lane_index(cached: dict, name: str) -> int:
     for i, sc in enumerate(cached["grid"]):
         if sc.name == name:
-            return cached["res"].episode_summary(i, episode)
+            return i
     raise KeyError(name)
+
+
+def lane_summary(cached: dict, name: str, episode: int | None = None) -> dict:
+    """Summary dict for the lane whose Scenario.name == `name`."""
+    return cached["res"].episode_summary(lane_index(cached, name), episode)
+
+
+def lane_band(cached: dict, name: str, episode: int | None = None) -> dict:
+    """Variance band (mean±std across the folded seed axis) for the seed
+    group containing the lane named `name` — see SweepResult.variance_band."""
+    return cached["res"].variance_band(lane_index(cached, name), episode)

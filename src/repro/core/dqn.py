@@ -70,19 +70,46 @@ def q_values(params: PyTree, state: jnp.ndarray, cfg: DQNConfig) -> jnp.ndarray:
     return q[0] if squeeze else q
 
 
+QNET_BACKENDS = ("auto", "pallas", "jnp")
+
+
+def _validate_backend(mode: str, source: str) -> str:
+    if mode not in QNET_BACKENDS:
+        raise ValueError(
+            f"{source}={mode!r} is not a valid qnet backend; expected one of "
+            f"{QNET_BACKENDS}. 'auto' picks the fused Pallas kernel on TPU "
+            "and jnp elsewhere; 'pallas' forces the kernel (interpret mode "
+            "off-TPU); 'jnp' forces the plain XLA path.")
+    return mode
+
+
+def _resolve_auto(mode: str) -> str:
+    """The `auto` policy: the fused Pallas kernel on TPU, plain jnp elsewhere
+    (single definition shared by the env-var default and explicit args)."""
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
 def _infer_backend() -> str:
     """Backend for gradient-free Q inference.
 
     `REPRO_QNET_BACKEND` ∈ {auto, pallas, jnp}: `auto` picks the fused Pallas
     kernel on TPU (the paper's §5.2 RL-accelerator analogue) and plain jnp
     elsewhere; `pallas` forces the kernel (interpret mode off-TPU — used by
-    the wiring tests, slow on CPU).  Read at trace time: flipping the env var
-    does not invalidate already-jitted programs.
+    the wiring tests, slow on CPU).  Unknown values raise (validated here and
+    eagerly at import below) rather than silently falling back to jnp.  Read
+    at trace time: flipping the env var does not invalidate already-jitted
+    programs.
     """
-    mode = os.environ.get("REPRO_QNET_BACKEND", "auto")
-    if mode == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    return mode
+    return _resolve_auto(_validate_backend(
+        os.environ.get("REPRO_QNET_BACKEND", "auto"), "REPRO_QNET_BACKEND"))
+
+
+# Fail fast on a typo'd override: a bad REPRO_QNET_BACKEND should abort at
+# import, not silently run the wrong backend deep inside a jitted sweep.
+_validate_backend(os.environ.get("REPRO_QNET_BACKEND", "auto"),
+                  "REPRO_QNET_BACKEND")
 
 
 def fused_kernel_compatible(params: PyTree) -> bool:
@@ -99,7 +126,8 @@ def q_values_infer(params: PyTree, state: jnp.ndarray, cfg: DQNConfig,
     Pallas dueling-qnet kernel (one launch for the whole batch, weights
     resident in VMEM) since no gradient flows through it.
     """
-    backend = backend or _infer_backend()
+    backend = (_infer_backend() if backend is None
+               else _resolve_auto(_validate_backend(backend, "backend")))
     if backend == "pallas" and fused_kernel_compatible(params):
         from repro.kernels.dueling_qnet.ops import qnet_forward
         squeeze = state.ndim == 1

@@ -1,6 +1,8 @@
 """Simulated NMP system: the environment AIMM optimizes (paper §5-§6)."""
+from repro.nmp import partition  # noqa: F401
 from repro.nmp.config import NMPConfig  # noqa: F401
 from repro.nmp.engine import EpisodeResult, run_episode, run_program  # noqa: F401
-from repro.nmp.scenarios import Scenario  # noqa: F401
+from repro.nmp.plan import GridPlan, plan_grid  # noqa: F401
+from repro.nmp.scenarios import Scenario, seed_variants  # noqa: F401
 from repro.nmp.sweep import SweepResult, run_grid  # noqa: F401
 from repro.nmp.traces import APPS, Trace, make_trace, merge_traces  # noqa: F401

@@ -25,7 +25,10 @@ see benchmarks/README.md "The engine hot path"):
     target sync, eps-greedy act -- runs under `jax.lax.cond` on "any lane
     invokes this epoch", so epochs between invocations (stride 2..4 at higher
     interval levels) skip the DQN machinery entirely instead of computing it
-    and masking the result.
+    and masking the result.  TOM's profiling-phase candidate scoring is gated
+    the same way (`lax.cond` on "any lane is in a profiling phase", see
+    `_tom_window_scores`), so the 8 commit-phase windows of every TOM period
+    skip the K-candidate scoring.
   * The PEI hot-page threshold is a `lax.top_k` order statistic over a static
     envelope of the hottest pages (`BodyFlags.pei_k`), not an O(P log P) sort
     of every page's access EMA; it is compiled in only when the program/grid
@@ -38,17 +41,21 @@ see benchmarks/README.md "The engine hot path"):
     uses; unused features are statically skipped, which keeps a plain
     technique-comparison grid close to baseline cost.
 
-Batching model (sweep.py): every per-trace quantity that used to be a Python
-static -- op count, OPC-ring length, PEI hot-page sort index, technique,
-mapper, forced action, exploration flag -- is carried as a traced `TraceCtx`
-scalar instead, and every state update is gated on `has_ops`, so epochs past
-the end of a (padded) trace are exact no-ops.  The epoch body itself is
-written per-lane and `jax.vmap`ed over a scenario axis (the serial runner is
-the same body at batch size 1), with the epoch scan *outside* the vmap so the
-any-lane-invokes `lax.cond` is a genuine scalar branch.  That makes one
-compiled program valid for a whole stacked grid of scenarios and keeps the
-batched engine bit-identical to serial runs (tests/test_sweep_equivalence.py,
-tests/test_engine_golden.py).
+Batching model (plan/partition/execute pipeline, see nmp.plan / nmp.partition
+/ nmp.sweep): every per-trace quantity that used to be a Python static -- op
+count, OPC-ring length, PEI hot-page sort index, technique, mapper, forced
+action, exploration flag -- is carried as a traced `TraceCtx` scalar instead,
+and every state update is gated on `has_ops`, so epochs past the end of a
+(padded) trace are exact no-ops.  The epoch body itself is written per-lane
+and `jax.vmap`ed over a scenario axis (the serial runner is the same body at
+batch size 1), with the epoch scan *outside* the vmap so the
+any-lane-invokes `lax.cond` is a genuine scalar branch; seed replicas of a
+lane ride an inner seed-axis vmap that shares the lane's trace arrays
+(`seed_axis=True` in `_epoch_batched`).  That makes one compiled program
+valid for a whole stacked grid of scenarios -- shardable over a device mesh
+along the lane axis -- and keeps the batched engine bit-identical to serial
+runs (tests/test_sweep_equivalence.py, tests/test_engine_golden.py,
+tests/test_plan_partition.py).
 """
 from __future__ import annotations
 
@@ -83,6 +90,11 @@ TECH_ID = {t: i for i, t in enumerate(baselines.TECHNIQUES)}
 # Energy counter layout (see stats.py).
 EN_PAGE_CACHE, EN_NMP_BUF, EN_MIG_Q, EN_MDMA, EN_WEIGHT, EN_REPLAY, \
     EN_STATE_BUF, EN_NET_BIT_HOPS, EN_MEM_BITS, EN_N = range(10)
+
+# TOM control period: K profiling windows (one per candidate) + this many
+# commit windows running the winner (shared by _epoch_sim's phase arithmetic
+# and the driver's profiling-phase cond gate).
+TOM_COMMIT_WINDOWS = 8
 
 
 class TraceCtx(NamedTuple):
@@ -316,24 +328,42 @@ class EpochMid(NamedTuple):
 # One epoch: cost model (action-independent half)
 # ---------------------------------------------------------------------------
 
+def _fetch_window(env: EnvState, trace: dict, ctx: TraceCtx,
+                  cfg: NMPConfig):
+    """This epoch's op window: (dest, src1, src2, valid) sliced at `op_ptr`
+    from the (pre-padded) trace arrays.  The single definition of the window
+    fetch + validity mask, shared by `_epoch_sim` and the TOM profiling
+    scorer so the two can never drift apart."""
+    W = cfg.w_max
+    window = jnp.asarray(cfg.epoch_ops, jnp.int32)
+    sl = lambda a: jax.lax.dynamic_slice(a, (env.op_ptr,), (W,))
+    dest, src1, src2 = sl(trace["dest"]), sl(trace["src1"]), sl(trace["src2"])
+    idx = jnp.arange(W)
+    valid = ((idx < window)
+             & (env.op_ptr + idx < ctx.n_ops)).astype(jnp.float32)
+    return dest, src1, src2, valid
+
+
 def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
                ctx: TraceCtx, cfg: NMPConfig, spec: StateSpec,
-               agent_cfg: AgentConfig, flags: BodyFlags) -> EpochMid:
+               agent_cfg: AgentConfig, flags: BodyFlags,
+               tom_scores_all: jnp.ndarray | None = None) -> EpochMid:
     """Everything up to (but excluding) the agent's action: window fetch,
     scheduling, routing, timing, reward bookkeeping, hot-page selection and
-    the state vector.  Runs per-lane (vmapped by the epoch driver)."""
+    the state vector.  Runs per-lane (vmapped by the epoch driver).
+
+    `tom_scores_all` is the (K,) candidate-score vector for this lane's
+    window, computed by the epoch driver under its profiling-phase `lax.cond`
+    (zeros when no lane is profiling — the per-lane select below never reads
+    them in that case)."""
     P = env.page_to_cube.shape[0]
     C = cfg.n_cubes
     W = cfg.w_max
-    window = jnp.asarray(cfg.epoch_ops, jnp.int32)
     is_tom = ctx.mapper == MAPPER_ID["tom"]
     is_aimm = ctx.mapper == MAPPER_ID["aimm"]
 
     # ---- window fetch (trace arrays pre-padded by W) ----
-    sl = lambda a: jax.lax.dynamic_slice(a, (env.op_ptr,), (W,))
-    dest, src1, src2 = sl(trace["dest"]), sl(trace["src1"]), sl(trace["src2"])
-    idx = jnp.arange(W)
-    valid = ((idx < window) & (env.op_ptr + idx < ctx.n_ops)).astype(jnp.float32)
+    dest, src1, src2, valid = _fetch_window(env, trace, ctx, cfg)
     w_valid = valid.sum()
     has_ops = w_valid > 0
 
@@ -522,15 +552,14 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     # ---- TOM control (profiling + commit are action-independent) ----
     if flags.any_tom:
         K = tom_cands.shape[0]
-        period = K + 8                 # K profiling windows + 8 commit windows
+        period = K + TOM_COMMIT_WINDOWS
         phase = (env.epochs.astype(jnp.int32)) % period
         page_live = (jnp.arange(P) < ctx.n_pages).astype(jnp.float32)
 
-        # profiling: evaluate candidate `phase` on this window
-        def score_k(k):
-            return baselines.tom_colocation_score(tom_cands[k], dest, src1,
-                                                  src2, valid, C)
-        scores_all = jax.vmap(score_k)(jnp.arange(K))
+        # profiling: candidate `phase` was scored on this window by the epoch
+        # driver (under lax.cond on "any lane profiles" — see _epoch_batched);
+        # outside profiling phases the scores are unused and may be zeros.
+        scores_all = tom_scores_all
         tom_scores = jnp.where(is_tom & (phase < K),
                                env.tom_scores.at[jnp.clip(phase, 0, K - 1)].set(
                                    scores_all[jnp.clip(phase, 0, K - 1)]),
@@ -585,6 +614,23 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
         mig_stall_tom=mig_stall_tom, migrated_tom=migrated_tom,
         energy=en,
     )
+
+
+def _tom_window_scores(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
+                       ctx: TraceCtx, cfg: NMPConfig) -> jnp.ndarray:
+    """Co-location scores of every TOM candidate mapping on this lane's
+    current window: the expensive profiling-phase work, split out of
+    `_epoch_sim` so the epoch driver can gate it under `lax.cond` on "any
+    lane is in a profiling phase" (the same shape as the DQN invocation
+    gate).  Recomputes the window fetch (`_fetch_window`, three slices + the
+    mask) — cheap next to scoring K candidates — and is bit-identical to the
+    historical inline computation."""
+    dest, src1, src2, valid = _fetch_window(env, trace, ctx, cfg)
+
+    def score_k(k):
+        return baselines.tom_colocation_score(tom_cands[k], dest, src1, src2,
+                                              valid, cfg.n_cubes)
+    return jax.vmap(score_k)(jnp.arange(tom_cands.shape[0]))
 
 
 # ---------------------------------------------------------------------------
@@ -778,14 +824,17 @@ def _sel(mask: jnp.ndarray, new, old):
     return jax.tree.map(one, new, old)
 
 
-def _invoke_agent(agent: AgentState, sim: EpochMid, env: EnvState,
-                  explore: jnp.ndarray, commit: jnp.ndarray,
-                  prev_ok: jnp.ndarray, agent_cfg: AgentConfig,
-                  agent_gate: str):
+def _invoke_agent(agent: AgentState, svec: jnp.ndarray, reward: jnp.ndarray,
+                  invoke: jnp.ndarray, prev_svec: jnp.ndarray,
+                  prev_action: jnp.ndarray, explore: jnp.ndarray,
+                  commit: jnp.ndarray, prev_ok: jnp.ndarray,
+                  agent_cfg: AgentConfig, agent_gate: str):
     """Batched continual-learning invocation (Fig. 4-2 flow): the completed
     transition (s_{t-1}, a_{t-1}, r_{t-1}, s_t) enters the replay buffer, the
     DNN takes one minibatch TD step, and ε-greedy inference picks the next
-    action.
+    action.  Every argument carries one flat leading cell axis — the epoch
+    driver flattens (lane, seed) grids down to it, so the agent machinery is
+    written once for both layouts.
 
     The TD step sits behind its own nested `lax.cond` on "any committing lane
     has a ready replay buffer": until `min_replay` transitions have
@@ -797,9 +846,8 @@ def _invoke_agent(agent: AgentState, sim: EpochMid, env: EnvState,
     bit-for-bit, so running this under the driver's any-lane-invokes cond
     equals the compute-then-mask reference path (tests/test_engine_golden.py).
     """
-    pushed = jax.vmap(agent_mod.observe)(agent, env.prev_state_vec,
-                                         env.prev_action, sim.reward,
-                                         sim.svec)
+    pushed = jax.vmap(agent_mod.observe)(agent, prev_svec, prev_action,
+                                         reward, svec)
     ag = _sel(commit & prev_ok, pushed, agent)
     keys = jax.vmap(jax.random.split)(ag.rng)          # (B, 2, key)
     ag = ag._replace(rng=jnp.where(commit[:, None], keys[:, 0], ag.rng))
@@ -816,10 +864,10 @@ def _invoke_agent(agent: AgentState, sim: EpochMid, env: EnvState,
     else:
         ag = do_train(ag)
     action_g, acted = jax.vmap(
-        lambda al, s, e: agent_mod.act(al, agent_cfg, s, e))(ag, sim.svec,
+        lambda al, s, e: agent_mod.act(al, agent_cfg, s, e))(ag, svec,
                                                              explore)
     ag = _sel(commit, acted, ag)
-    action = jnp.where(sim.invoke, action_g,
+    action = jnp.where(invoke, action_g,
                        jnp.int32(DEFAULT)).astype(jnp.int32)
     return ag, action
 
@@ -832,26 +880,75 @@ def _epoch_batched(env: EnvState, agent: AgentState | None, trace: dict,
                    rw_pages: jnp.ndarray, tom_cands: jnp.ndarray,
                    ctx: TraceCtx, cfg: NMPConfig, spec: StateSpec,
                    agent_cfg: AgentConfig, flags: BodyFlags,
-                   agent_gate: str = "cond"):
+                   agent_gate: str = "cond", tom_gate: str = "cond",
+                   seed_axis: bool = False):
     """One epoch over a (B, ...) batch of lanes.
 
-    The cost-model halves are vmapped per lane; the agent invocation between
+    With `seed_axis=True` the env (and per-cell EpochMid/metrics) carry a
+    (B, S) (lane, seed) grid while the trace / rw_pages / TraceCtx stay
+    per-lane (B, ...): the cost-model halves are nested-vmapped with the
+    trace axis unmapped over seeds, so S seed replicas of a lane share one
+    copy of its (big) trace arrays.  The agent state is kept *flat* over
+    B*S cells throughout — only the two cost-model halves need the 2-D view.
+
+    The cost-model halves are vmapped per cell; the agent invocation between
     them is an un-vmapped `lax.cond` on "any lane invokes this epoch"
     (`agent_gate="masked"` forces the compute-every-epoch reference path used
-    by the equality test)."""
-    sim = jax.vmap(
-        lambda e, t, c: _epoch_sim(e, t, tom_cands, c, cfg, spec, agent_cfg,
-                                   flags))(env, trace, ctx)
-    is_aimm = ctx.mapper == MAPPER_ID["aimm"]
-    scripted = jnp.where(sim.invoke, ctx.forced_action,
-                         jnp.int32(DEFAULT)).astype(jnp.int32)
+    by the equality test).  TOM's profiling-phase candidate scoring is gated
+    the same way: scored only under `lax.cond` on "any lane is in a
+    profiling phase" (`tom_gate="masked"` forces the score-every-epoch
+    reference path)."""
+    if flags.any_tom:
+        K = tom_cands.shape[0]
+
+        def scores_fn(e, t, c):
+            return _tom_window_scores(e, t, tom_cands, c, cfg)
+
+        vscores = (jax.vmap(jax.vmap(scores_fn, in_axes=(0, None, None)))
+                   if seed_axis else jax.vmap(scores_fn))
+        phase = (env.epochs.astype(jnp.int32)
+                 % (K + TOM_COMMIT_WINDOWS))             # (B,) / (B, S)
+        is_tom_b = ctx.mapper == MAPPER_ID["tom"]
+        n_ops_b = ctx.n_ops
+        if seed_axis:
+            is_tom_b, n_ops_b = is_tom_b[:, None], n_ops_b[:, None]
+        profiling = is_tom_b & (phase < K) & (env.op_ptr < n_ops_b)
+        if tom_gate == "cond":
+            tom_scores_all = jax.lax.cond(
+                jnp.any(profiling),
+                lambda: vscores(env, trace, ctx),
+                lambda: jnp.zeros(phase.shape + (K,)))
+        else:
+            tom_scores_all = vscores(env, trace, ctx)
+    else:
+        tom_scores_all = None
+
+    def sim_fn(e, t, c, ts):
+        return _epoch_sim(e, t, tom_cands, c, cfg, spec, agent_cfg, flags, ts)
+
+    if seed_axis:
+        sim = jax.vmap(jax.vmap(sim_fn, in_axes=(0, None, None, 0)))(
+            env, trace, ctx, tom_scores_all)
+        B, S = sim.invoke.shape
+        flat = lambda a: a.reshape((B * S,) + a.shape[2:])
+        rep = lambda a: jnp.repeat(a, S, axis=0)         # per-lane -> per-cell
+    else:
+        sim = jax.vmap(sim_fn)(env, trace, ctx, tom_scores_all)
+        flat = rep = lambda a: a
+
+    is_aimm = rep(ctx.mapper == MAPPER_ID["aimm"])       # flat (B*S,)
+    forced = rep(ctx.forced_action)
+    invoke_f = flat(sim.invoke)
+    scripted = jnp.where(invoke_f, forced, jnp.int32(DEFAULT)).astype(jnp.int32)
     if flags.has_agent:
-        prev_ok = env.prev_span_mean >= 0.0
-        commit = sim.invoke & is_aimm & (ctx.forced_action < 0)
+        prev_ok = flat(env.prev_span_mean) >= 0.0
+        commit = invoke_f & is_aimm & (forced < 0)
 
         def fire(ag):
-            return _invoke_agent(ag, sim, env, ctx.explore, commit, prev_ok,
-                                 agent_cfg, agent_gate)
+            return _invoke_agent(ag, flat(sim.svec), flat(sim.reward),
+                                 invoke_f, flat(env.prev_state_vec),
+                                 flat(env.prev_action), rep(ctx.explore),
+                                 commit, prev_ok, agent_cfg, agent_gate)
 
         def hold(ag):
             return ag, jnp.full_like(scripted, DEFAULT)
@@ -861,27 +958,35 @@ def _epoch_batched(env: EnvState, agent: AgentState | None, trace: dict,
                                           agent)
         else:
             agent, learned = fire(agent)
-        action = jnp.where(ctx.forced_action >= 0, scripted, learned)
+        action = jnp.where(forced >= 0, scripted, learned)
     else:
         action = scripted
     action = jnp.where(is_aimm, action, jnp.zeros_like(action))
 
-    env, metrics = jax.vmap(
-        lambda e, m, a, r, c: _epoch_apply(e, m, a, r, c, cfg, flags))(
-            env, sim, action, rw_pages, ctx)
+    def apply_fn(e, m, a, r, c):
+        return _epoch_apply(e, m, a, r, c, cfg, flags)
+
+    if seed_axis:
+        env, metrics = jax.vmap(
+            jax.vmap(apply_fn, in_axes=(0, 0, 0, None, None)))(
+                env, sim, action.reshape(B, S), rw_pages, ctx)
+    else:
+        env, metrics = jax.vmap(apply_fn)(env, sim, action, rw_pages, ctx)
     return env, agent, metrics
 
 
 def scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
-                agent_cfg, n_epochs, flags, agent_gate="cond"):
+                agent_cfg, n_epochs, flags, agent_gate="cond",
+                tom_gate="cond", seed_axis=False):
     """Un-jitted batched epoch scan shared by the serial and sweep runners.
-    All lane-shaped arguments carry a leading (B,) axis; metrics come back as
-    (n_epochs, B)."""
+    All lane-shaped arguments carry a leading (B,) axis (env/agent a (B, S)
+    seed grid when `seed_axis` — see _epoch_batched); metrics come back as
+    (n_epochs, B[, S])."""
     def body(carry, _):
         env, agent = carry
         env, agent, m = _epoch_batched(env, agent, trace, rw_pages, tom_cands,
                                        ctx, cfg, spec, agent_cfg, flags,
-                                       agent_gate)
+                                       agent_gate, tom_gate, seed_axis)
         return (env, agent), m
 
     (env, agent), ms = jax.lax.scan(body, (env, agent), None, length=n_epochs)
@@ -889,11 +994,15 @@ def scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
 
 
 @partial(jax.jit, static_argnames=("cfg", "spec", "agent_cfg", "n_epochs",
-                                   "flags", "agent_gate"))
+                                   "flags", "agent_gate", "tom_gate"),
+         donate_argnames=("env", "agent"))
 def _run_scan(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
-              agent_cfg, n_epochs, flags, agent_gate):
+              agent_cfg, n_epochs, flags, agent_gate, tom_gate="cond"):
+    # env/agent are donated: the scan carry is the same pytree of shapes, so
+    # XLA reuses the input buffers for the carry instead of allocating a
+    # second stacked-env footprint (the callers build both args fresh).
     return scan_epochs(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
-                       agent_cfg, n_epochs, flags, agent_gate)
+                       agent_cfg, n_epochs, flags, agent_gate, tom_gate)
 
 
 def state_spec_for(cfg: NMPConfig) -> StateSpec:
@@ -931,7 +1040,8 @@ def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
                 agent_cfg: AgentConfig | None = None,
                 seed: int = 0, page_table: np.ndarray | None = None,
                 explore: bool = True, forced_action: int = -1,
-                agent_gate: str = "cond") -> EpisodeResult:
+                agent_gate: str = "cond",
+                tom_gate: str = "cond") -> EpisodeResult:
     """Run one episode (= one pass over the trace) and return final stats.
 
     `agent` persists across episodes (continual learning); pass the returned
@@ -961,7 +1071,7 @@ def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
     env, agent_out, ms = _run_scan(tr, rw, env,
                                    _batch1(agent) if flags.has_agent else None,
                                    tom_cands, ctx, cfg, spec, agent_cfg,
-                                   n_epochs, flags, agent_gate)
+                                   n_epochs, flags, agent_gate, tom_gate)
     env = jax.tree.map(lambda a: a[0], env)
     ms = {k: v[:, 0] for k, v in ms.items()}
     if flags.has_agent:

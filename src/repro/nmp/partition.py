@@ -1,0 +1,120 @@
+"""Partition layer of the sweep pipeline: device meshes + lane sharding.
+
+Builds a 1-D `jax.sharding.Mesh` over the available devices and places a
+group batch (see `nmp.plan.build_group_batch`) on it with the lane axis
+sharded (`NamedSharding(P("lanes"))`) and everything lane-independent
+replicated.  The execute layer's jitted program then runs SPMD across the
+mesh: per-lane work never crosses a device, the only collectives are the
+scalar "any lane invokes / profiles" reductions that feed the engine's
+`lax.cond` gates, so sharded per-lane metrics are bit-identical to the
+single-device run.
+
+Lane counts are padded up to a device-divisible size by repeating the first
+lane (padding lanes are simulated and dropped by the execute layer).
+
+Degrades gracefully: with a single device (plain CPU CI) `build_mesh`
+returns None and the execute layer skips placement entirely.  Multi-device
+CPU testing is forced with `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+(set before importing jax).
+
+Env knobs:
+
+  REPRO_SWEEP_DEVICES   how many devices the sweep mesh uses: an integer,
+                        or "all" (default).  Values outside 1..len(devices)
+                        raise.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LANE_AXIS = "lanes"
+_ENV_DEVICES = "REPRO_SWEEP_DEVICES"
+
+
+def sweep_devices() -> list:
+    """Devices the sweep mesh spans, honoring REPRO_SWEEP_DEVICES."""
+    devices = jax.devices()
+    raw = os.environ.get(_ENV_DEVICES, "all").strip().lower()
+    if raw in ("", "all"):
+        return devices
+    try:
+        n = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{_ENV_DEVICES}={raw!r}: expected an integer or 'all'") from None
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"{_ENV_DEVICES}={n} outside 1..{len(devices)} "
+                         f"({len(devices)} {devices[0].platform} devices "
+                         "visible)")
+    return devices[:n]
+
+
+def build_mesh(devices=None) -> Mesh | None:
+    """1-D lane mesh over `devices` (default: `sweep_devices()`).
+
+    Returns None on a single device — the degraded path runs exactly the
+    PR 2 single-device program with no placement or padding."""
+    devices = sweep_devices() if devices is None else list(devices)
+    if len(devices) <= 1:
+        return None
+    return Mesh(np.asarray(devices), (LANE_AXIS,))
+
+
+def mesh_desc(mesh: Mesh | None) -> dict:
+    """JSON-friendly mesh description (benchmark records, memo keys)."""
+    if mesh is None:
+        return {"n_devices": 1, "shape": [1], "axis_names": [LANE_AXIS]}
+    return {"n_devices": int(mesh.devices.size),
+            "shape": [int(s) for s in mesh.devices.shape],
+            "axis_names": list(mesh.axis_names)}
+
+
+def mesh_signature() -> str:
+    """Stable signature of the mesh the next sweep would run on — part of
+    grid memo keys so cached results never cross a mesh change."""
+    devices = sweep_devices()
+    return f"{devices[0].platform}:{len(devices)}"
+
+
+def padded_lane_count(n_lanes: int, mesh: Mesh | None) -> int:
+    """Smallest device-divisible lane count >= n_lanes."""
+    if mesh is None:
+        return n_lanes
+    n_dev = int(mesh.devices.size)
+    return ((n_lanes + n_dev - 1) // n_dev) * n_dev
+
+
+def pad_group_batch(batch: dict[str, np.ndarray],
+                    n_to: int) -> dict[str, np.ndarray]:
+    """Pad every lane-axis array to `n_to` lanes by repeating lane 0.
+
+    Padding lanes are real, legal simulations (copies of lane 0) so the
+    SPMD program needs no masking; the execute layer simply never reads
+    their outputs."""
+    n = next(iter(batch.values())).shape[0]
+    if n_to == n:
+        return batch
+    assert n_to > n
+    return {k: np.concatenate([v, np.repeat(v[:1], n_to - n, axis=0)])
+            for k, v in batch.items()}
+
+
+def shard_group_batch(batch: dict[str, np.ndarray], mesh: Mesh | None) -> dict:
+    """Place a (padded) group batch: lane axis sharded, trailing axes
+    replicated.  Without a mesh this is a plain host->device transfer."""
+    import jax.numpy as jnp
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    lane_sh = NamedSharding(mesh, P(LANE_AXIS))
+    return {k: jax.device_put(v, lane_sh) for k, v in batch.items()}
+
+
+def replicate(x, mesh: Mesh | None):
+    """Replicate a lane-independent array (e.g. TOM candidate tables)."""
+    if mesh is None:
+        return x
+    return jax.device_put(x, NamedSharding(mesh, P()))

@@ -1,0 +1,262 @@
+"""Plan layer of the sweep pipeline: declarative normalization of a grid.
+
+`plan_grid` turns a flat list of `scenarios.Scenario` cells into a
+`GridPlan` — the complete, backend-agnostic description of how the grid will
+execute:
+
+  * **envelope**: the shared spatial envelope (op count, page count, epoch
+    count, OPC-ring length) every lane is padded to, so per-lane metrics and
+    the stacked final env have one shape;
+  * **seed folding**: scenarios identical up to their `seed` collapse into
+    one `LanePlan` with a seed axis — the execute layer vmaps that axis
+    inside the lane, so S seed replicas share a single copy of the trace
+    arrays and every lane gets mean±std variance bands for free.  Lanes
+    whose results provably cannot depend on the seed (deterministic
+    mappers, see `seed_invariant`) collapse to a width-1 seed axis: one
+    simulated cell serves every replica;
+  * **lane grouping**: lanes are grouped by DQN-liveness (`needs_agent`),
+    with per-group `engine.BodyFlags` recording which machinery (AIMM
+    actions, TOM scoring, PEI thresholding) any lane of the group uses, so
+    unused features compile out.  A mixed grid compiles at most two
+    programs — one per group.
+
+`build_group_batch` materializes one group's numpy input batch (trace arrays
+per lane, episode seed schedules per (lane, seed)); the partition layer
+(`nmp.partition`) then pads + shards it over a device mesh and the execute
+layer (`nmp.sweep`) runs it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.nmp import baselines
+from repro.nmp.config import NMPConfig
+from repro.nmp.engine import (BodyFlags, make_ctx, pad_trace_ops, pei_top_k,
+                              phase_ring_len, serial_epochs)
+from repro.nmp.paging import default_alloc
+from repro.nmp.scenarios import Scenario
+
+
+def needs_agent(sc: Scenario) -> bool:
+    """A lane carries a live DQN iff it is a learned-policy AIMM cell."""
+    return sc.mapper == "aimm" and sc.forced_action < 0
+
+
+def seed_invariant(sc: Scenario) -> bool:
+    """True when the scenario's results cannot depend on its seed.
+
+    The seed enters the engine only through the env RNG (and the DQN init),
+    and the env RNG is consumed exclusively by AIMM lanes (random-neighbor
+    action targets, ε-greedy exploration).  Deterministic mappers therefore
+    produce bit-identical metrics for every seed, and the plan collapses
+    their folded seed axis to width 1 — one simulated cell serves all seed
+    replicas instead of re-simulating identical work per seed."""
+    return sc.mapper != "aimm"
+
+
+
+
+@dataclasses.dataclass(frozen=True)
+class LanePlan:
+    """One folded lane: a representative scenario plus its seed axis.
+
+    `seeds` holds the simulated seed-axis values, padded to the group's
+    common width S by repeating the first seed (padding slots are simulated
+    and dropped).  `indices[k]` is the original grid index of the lane's
+    k-th folded scenario and `slots[k]` the seed-axis slot its results come
+    from — for a seed-invariant lane every scenario reads slot 0 of a
+    width-1 axis."""
+    scenario: Scenario
+    seeds: tuple[int, ...]
+    indices: tuple[int, ...]
+    slots: tuple[int, ...]
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """One compiled program: lanes sharing an agent mode, a seed-axis width
+    and an episode count."""
+    lanes: tuple[LanePlan, ...]
+    has_agent: bool
+    flags: BodyFlags
+    n_episodes: int              # per-group padded episode count
+    n_seeds: int                 # common (padded) seed-axis width S
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """Declarative execution plan for a scenario grid (see module docstring)."""
+    scenarios: tuple[Scenario, ...]
+    groups: tuple[GroupPlan, ...]
+    n_ops_max: int
+    n_pages_max: int
+    n_epochs: int
+    ring_len: int
+    n_episodes: int              # global padded episode count (presentation)
+
+    @property
+    def n_lanes(self) -> int:
+        return sum(g.n_lanes for g in self.groups)
+
+    def seed_group(self, index: int) -> tuple[int, ...]:
+        """Original grid indices of every seed replica folded into the same
+        lane as scenario `index` (always contains `index`)."""
+        for g in self.groups:
+            for lane in g.lanes:
+                if index in lane.indices:
+                    return lane.indices
+        raise IndexError(index)
+
+
+def _fold_lanes(scenarios: Sequence[Scenario],
+                idxs: Sequence[int]) -> list[LanePlan]:
+    """Fold one group's scenarios by `fold_key`, preserving first-seen order.
+
+    Seed-invariant lanes (deterministic mappers — see `seed_invariant`)
+    collapse their replicas onto a single simulated seed slot."""
+    by_key: dict[tuple, list[int]] = {}
+    for i in idxs:
+        by_key.setdefault(scenarios[i].fold_key(), []).append(i)
+    lanes = []
+    for members in by_key.values():
+        sc = scenarios[members[0]]
+        if seed_invariant(sc):
+            seeds = (sc.seed,)
+            slots = (0,) * len(members)
+        else:
+            seeds = tuple(scenarios[i].seed for i in members)
+            slots = tuple(range(len(members)))
+        lanes.append(LanePlan(scenario=sc, seeds=seeds,
+                              indices=tuple(members), slots=slots))
+    return lanes
+
+
+def _pad_seed_axis(lanes: list[LanePlan]) -> tuple[list[LanePlan], int]:
+    """Pad every lane's seed axis to the group max by repeating its first
+    seed (padding slots re-simulate seeds[0]; their outputs are dropped)."""
+    S = max(lane.n_seeds for lane in lanes)
+    return [dataclasses.replace(
+        lane, seeds=lane.seeds + (lane.seeds[0],) * (S - lane.n_seeds))
+        for lane in lanes], S
+
+
+def group_flags(group: Sequence[Scenario], cfg: NMPConfig,
+                has_agent: bool) -> BodyFlags:
+    """Static body flags for one sweep group: the OR over its lanes' needs."""
+    pei_k = max((pei_top_k(sc.trace.n_pages, cfg) for sc in group
+                 if sc.technique == "pei"), default=0)
+    return BodyFlags(
+        has_agent=has_agent,
+        any_aimm=any(sc.mapper == "aimm" for sc in group),
+        any_tom=any(sc.mapper == "tom" for sc in group),
+        pei_k=pei_k,
+    )
+
+
+def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
+    scenarios = tuple(scenarios)
+    assert scenarios, "empty scenario grid"
+
+    # The spatial envelope (ops/pages/epochs/ring) is shared across both
+    # agent-mode groups so the merged final_env and per-epoch timelines
+    # stack; episode counts and seed widths are padded per group —
+    # deterministic lanes must not simulate the AIMM lanes' longer training
+    # schedules.
+    n_ops_max = max(sc.trace.n_ops for sc in scenarios)
+    n_pages_max = max(sc.trace.n_pages for sc in scenarios)
+    n_epochs = max(serial_epochs(sc.trace.n_ops, cfg) for sc in scenarios)
+    ring_len = max(phase_ring_len(sc.trace, cfg) for sc in scenarios)
+    n_episodes = max(sc.total_episodes for sc in scenarios)
+
+    groups = []
+    for has_agent in (True, False):
+        idxs = [i for i, sc in enumerate(scenarios)
+                if needs_agent(sc) == has_agent]
+        if not idxs:
+            continue
+        lanes, n_seeds = _pad_seed_axis(_fold_lanes(scenarios, idxs))
+        members = [scenarios[i] for i in idxs]
+        groups.append(GroupPlan(
+            lanes=tuple(lanes), has_agent=has_agent,
+            flags=group_flags(members, cfg, has_agent),
+            n_episodes=max(sc.total_episodes for sc in members),
+            n_seeds=n_seeds))
+    return GridPlan(scenarios=scenarios, groups=tuple(groups),
+                    n_ops_max=n_ops_max, n_pages_max=n_pages_max,
+                    n_epochs=n_epochs, ring_len=ring_len,
+                    n_episodes=n_episodes)
+
+
+def episode_schedule(sc: Scenario, seed: int,
+                     n_episodes: int) -> tuple[np.ndarray, np.ndarray]:
+    """(seeds, explore) per episode for one (lane, seed) cell, padded to the
+    group episode count.
+
+    Training episodes use seed, seed+1, ... (the run_program protocol); the
+    optional eval episode replays the base seed with exploration off. Padding
+    episodes continue the seed sequence and are simply not reported."""
+    seeds = [seed + e for e in range(sc.episodes)]
+    explore = [True] * sc.episodes
+    if sc.eval_episode:
+        seeds.append(seed)
+        explore.append(False)
+    while len(seeds) < n_episodes:
+        seeds.append(seed + len(seeds))
+        explore.append(True)
+    return (np.asarray(seeds, np.int32), np.asarray(explore, bool))
+
+
+def build_group_batch(plan: GridPlan, group: GroupPlan,
+                      cfg: NMPConfig) -> dict[str, np.ndarray]:
+    """Materialize one group's input batch as numpy arrays.
+
+    Trace/ctx/page-table entries carry the lane axis (L, ...); the episode
+    seed schedule carries the folded seed axis as (L, S, E) with the
+    per-lane exploration schedule at (L, E) — seed replicas of a lane share
+    the schedule *shape* by construction (fold_key includes episodes and
+    eval_episode)."""
+    lanes = []
+    for lane in group.lanes:
+        sc = lane.scenario
+        tr = sc.trace
+        ops = {k: np.asarray(v) for k, v in
+               pad_trace_ops(tr, plan.n_ops_max, cfg).items()}
+        pt = (np.asarray(sc.page_table, np.int32) if sc.page_table is not None
+              else default_alloc(tr.n_pages, cfg))
+        # pad the page table/RW flags with never-referenced filler pages that
+        # follow the default interleave, so every entry is a legal cube id
+        pad_pages = np.arange(tr.n_pages, plan.n_pages_max) % cfg.n_cubes
+        pt = np.concatenate([pt, pad_pages.astype(np.int32)])
+        rw = np.concatenate([tr.read_write,
+                             np.zeros(plan.n_pages_max - tr.n_pages, bool)])
+        ctx = make_ctx(tr, cfg, sc.technique, sc.mapper, sc.forced_action)
+        scheds = [episode_schedule(sc, seed, group.n_episodes)
+                  for seed in lane.seeds]
+        lanes.append({
+            **ops, "page_table": pt, "rw": rw,
+            "n_ops": np.int32(ctx.n_ops), "n_pages": np.int32(ctx.n_pages),
+            "t_ring": np.int32(ctx.t_ring), "pei_idx": np.int32(ctx.pei_idx),
+            "technique": np.int32(ctx.technique),
+            "mapper": np.int32(ctx.mapper),
+            "forced_action": np.int32(ctx.forced_action),
+            "ep_seed": np.stack([s for s, _ in scheds]),       # (S, E)
+            "ep_explore": scheds[0][1],                        # (E,)
+        })
+    return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
+
+
+def plan_tom_candidates(plan: GridPlan, cfg: NMPConfig):
+    """TOM candidate tables for the plan's page envelope (shared, replicated
+    across devices by the partition layer)."""
+    return baselines.tom_candidates(plan.n_pages_max, cfg)

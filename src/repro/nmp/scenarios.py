@@ -43,6 +43,27 @@ class Scenario:
     def total_episodes(self) -> int:
         return self.episodes + (1 if self.eval_episode else 0)
 
+    def fold_key(self) -> tuple:
+        """Identity of this scenario modulo its seed (and seed-derived name).
+
+        Scenarios sharing a fold key are replicas of one experiment cell at
+        different seeds: the sweep plan layer folds them into a single lane
+        with a vmapped seed axis (`nmp.plan.plan_grid`), so they share one
+        copy of the trace arrays and report variance bands together.  Traces
+        fold by object identity — the grid builders below reuse one Trace
+        across the seeds of a cell, which is what makes folding effective."""
+        pt = self.page_table.tobytes() if self.page_table is not None else None
+        return (id(self.trace), self.technique, self.mapper, self.episodes,
+                self.eval_episode, self.forced_action, pt)
+
+
+def seed_variants(sc: Scenario, seeds: Sequence[int]) -> list[Scenario]:
+    """Grid-spec constructor: replicate one cell across `seeds` so the plan
+    layer folds them into a single seed-vmapped lane (the scenarios share
+    `sc`'s Trace object by construction)."""
+    return [dataclasses.replace(sc, name=f"{sc.name}/s{seed}", seed=seed)
+            for seed in seeds]
+
 
 def single_program_grid(apps: Sequence[str] = ("KM", "RBM", "SPMV"),
                         techniques: Sequence[str] = ("bnmp",),

@@ -1,32 +1,36 @@
-"""Batched scenario-sweep engine: a whole experiment grid in one compile.
+"""Execute layer of the sweep pipeline: one compiled program per lane group.
 
-`run_grid` takes a list of `scenarios.Scenario` lanes, pads every trace to a
-common (n_ops, n_pages) envelope, stacks per-lane `EnvState`s, and runs the
-shared epoch body (`engine._epoch_batched`) `jax.vmap`ed over the scenario
-axis.  Episode chaining — the paper's continual-learning protocol where the
-DQN persists across episode resets — is a `jax.lax.scan` over episodes inside
-the same program, so an app x technique x mapper x seed grid that used to
-cost one XLA compile and one Python dispatch per (cell, episode) now costs
-one compile per lane group and a single device dispatch.
+`run_grid` is a three-layer pipeline:
 
-Hot-path layout: the epoch `lax.scan` sits *outside* the lane vmap
+  plan      (nmp.plan)      : normalize scenarios into a declarative
+                              `GridPlan` — shared padding envelope, lanes
+                              grouped by DQN-liveness, seeds folded into a
+                              per-lane seed axis;
+  partition (nmp.partition) : build a device mesh, pad each group to a
+                              device-divisible lane count and shard the lane
+                              axis (`NamedSharding`); degrades to a plain
+                              transfer on one device;
+  execute   (this module)   : jit one program per lane group — episode
+                              chaining as `lax.scan`, the epoch scan outside
+                              the lane vmap, and the folded seed axis as an
+                              inner vmap, so S seed replicas of a lane share
+                              one copy of its trace arrays and every lane
+                              reports mean±std variance bands for free.
+
+Hot-path layout: the epoch `lax.scan` sits *outside* the (lane, seed) vmaps
 (scan-of-vmap, not vmap-of-scan), so the agent invocation inside one epoch is
 a genuine scalar `lax.cond` on "any lane invokes" — epochs where every AIMM
-lane is between invocations skip the whole DQN machinery at run time.  The
-input batch is donated to the compiled sweep (`donate_argnames`) and the
-per-epoch metric timelines are stored at slim dtypes (`valid_t` as uint16),
-which cuts the stacked-grid memory high-water mark.
+lane is between invocations skip the whole DQN machinery at run time (and TOM
+candidate scoring is gated the same way on "any lane profiles").  The input
+batch is donated to the compiled sweep (`donate_argnames`) and per-epoch
+metric timelines are stored at slim dtypes (`valid_t` as uint16).
 
 Exactness: technique/mapper/forced-action are traced `TraceCtx` selectors and
 every engine update is gated on `has_ops` (see engine._epoch_sim/_epoch_apply),
-so each lane's `cycles` / `ops_done` / final OPC are bit-identical to a serial
-`run_episode` / `run_program` of the same scenario, including lanes whose
-traces are shorter than the batch envelope (tests/test_sweep_equivalence.py).
-
-Lanes are grouped by whether they carry a live DQN (`mapper == "aimm"` with a
-learned policy); within a group, `engine.BodyFlags` records which features
-(AIMM actions, TOM scoring, PEI thresholding) any lane uses so unused
-machinery is compiled out.  A mixed grid compiles at most two programs.
+so each (lane, seed) cell's `cycles` / `ops_done` / final OPC are bit-identical
+to a serial `run_episode` / `run_program` of the same scenario — whether the
+lane axis is sharded over devices or not, and however seeds are folded
+(tests/test_sweep_equivalence.py, tests/test_plan_partition.py).
 """
 from __future__ import annotations
 
@@ -41,13 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import agent as agent_mod
-from repro.nmp import baselines
+from repro.nmp import partition
+from repro.nmp import plan as plan_mod
 from repro.nmp.config import NMPConfig
-from repro.nmp.engine import (EN_N, BodyFlags, TraceCtx, _init_env,
-                              default_agent_cfg, make_ctx, pad_trace_ops,
-                              pei_top_k, phase_ring_len, scan_epochs,
-                              serial_epochs, state_spec_for)
-from repro.nmp.paging import default_alloc
+from repro.nmp.engine import (TraceCtx, _init_env, default_agent_cfg,
+                              scan_epochs, state_spec_for)
+from repro.nmp.plan import GridPlan, group_flags, needs_agent, plan_grid
 from repro.nmp.scenarios import Scenario
 from repro.nmp.stats import energy_breakdown, energy_nj, resample_opc
 
@@ -58,31 +61,37 @@ from repro.nmp.stats import energy_breakdown, energy_nj, resample_opc
          donate_argnames=("batch",))
 def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
                ring_len, flags):
-    """Scan over episodes; inside, the batched epoch scan runs every lane in
-    lockstep (vmapped epoch body, scalar any-lane-invokes agent cond).  The
-    env is re-initialized per episode while the agent chains through."""
+    """Scan over episodes; inside, the batched epoch scan runs every
+    (lane, seed) cell in lockstep (nested (lane, seed) vmap of the epoch
+    body, scalar any-lane-invokes agent cond).  The env is re-initialized per
+    episode while the agent chains through.  `batch["ep_seed"]` is
+    (L, S, E); trace arrays stay per-lane (L, ...) and are shared across the
+    seed axis."""
     trace = {k: batch[k] for k in ("dest", "src1", "src2")}
+    L, S, _E = batch["ep_seed"].shape
     base_ctx = TraceCtx(
         n_ops=batch["n_ops"], n_pages=batch["n_pages"],
         t_ring=batch["t_ring"], pei_idx=batch["pei_idx"],
         technique=batch["technique"], mapper=batch["mapper"],
         forced_action=batch["forced_action"],
         explore=jnp.zeros_like(batch["ep_explore"][:, 0]))
-    init_envs = jax.vmap(
-        lambda pt, s: _init_env(pt, cfg, spec, s, ring_len))
+    init_envs = jax.vmap(jax.vmap(
+        lambda pt, s: _init_env(pt, cfg, spec, s, ring_len),
+        in_axes=(None, 0)))                               # (L, S) grid of envs
     agent0 = (jax.vmap(lambda s: agent_mod.init_agent(
-        jax.random.PRNGKey(s + 1), agent_cfg))(batch["ep_seed"][:, 0])
+        jax.random.PRNGKey(s + 1), agent_cfg))(
+            batch["ep_seed"][:, :, 0].reshape(L * S))
         if flags.has_agent else None)
-    env0 = init_envs(batch["page_table"], batch["ep_seed"][:, 0])
+    env0 = init_envs(batch["page_table"], batch["ep_seed"][:, :, 0])
 
     def episode(carry, x):
         agent, _ = carry
-        seeds, explore = x                        # (B,) each
+        seeds, explore = x                        # (L, S) / (L,)
         ctx = base_ctx._replace(explore=explore)
         env = init_envs(batch["page_table"], seeds)
         env, agent2, ms = scan_epochs(trace, batch["rw"], env, agent,
                                       tom_cands, ctx, cfg, spec, agent_cfg,
-                                      n_epochs, flags)
+                                      n_epochs, flags, seed_axis=True)
         out = {
             "cycles": env.cycles, "ops": env.ops_done,
             "hops_sum": env.hops_sum, "util_sum": env.util_sum,
@@ -91,17 +100,18 @@ def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
             "access_total": env.access_total,
             "access_on_migrated": env.access_on_migrated,
             "energy": env.energy,
-            # per-epoch timelines, stored slim: ms leaves are (n_epochs, B)
-            "opc_t": ms["opc"].T,
-            "valid_t": ms["valid"].astype(jnp.uint16).T,
+            # per-epoch timelines, stored slim: ms leaves are (n_epochs, L, S)
+            "opc_t": jnp.moveaxis(ms["opc"], 0, -1),
+            "valid_t": jnp.moveaxis(ms["valid"].astype(jnp.uint16), 0, -1),
         }
         return ((agent2 if flags.has_agent else agent), env), out
 
-    xs = (batch["ep_seed"].T, batch["ep_explore"].T)   # (E, B)
+    xs = (jnp.moveaxis(batch["ep_seed"], -1, 0),          # (E, L, S)
+          batch["ep_explore"].T)                          # (E, L)
     (agent_fin, env_fin), outs = jax.lax.scan(episode, (agent0, env0), xs,
                                               length=n_episodes)
-    # outs leaves are (E, B, ...); present them lane-major like the metrics.
-    outs = {k: jnp.moveaxis(v, 0, 1) for k, v in outs.items()}
+    # outs leaves are (E, L, S, ...); present them cell-major.
+    outs = {k: jnp.moveaxis(v, 0, 2) for k, v in outs.items()}
     return outs, env_fin
 
 
@@ -114,6 +124,8 @@ class SweepResult:
     final_env: Any                   # EnvState stacked over the lane axis
     n_episodes: int                  # common (padded) episode count E
     wall_s: float                    # build + compile + run wall time
+    plan: GridPlan | None = None     # the executed plan (seed folding, groups)
+    n_devices: int = 1               # mesh width the sweep ran on
 
     def episode_summary(self, lane: int, episode: int | None = None) -> dict:
         """Per-(lane, episode) summary with the same keys as stats.summarize.
@@ -152,126 +164,98 @@ class SweepResult:
         return resample_opc(self.metrics["opc_t"][lane, e],
                             self.metrics["valid_t"][lane, e], samples)
 
+    # ---- variance bands over the folded seed axis ----
 
-def _episode_schedule(sc: Scenario, n_episodes: int) -> tuple[np.ndarray, np.ndarray]:
-    """(seeds, explore) per episode, padded to the batch episode count.
+    def seed_group(self, lane: int) -> list[int]:
+        """Scenario indices of every seed replica folded into `lane`'s lane."""
+        if self.plan is None:
+            return [lane]
+        return list(self.plan.seed_group(lane))
 
-    Training episodes use seed, seed+1, ... (the run_program protocol); the
-    optional eval episode replays the base seed with exploration off. Padding
-    episodes continue the seed sequence and are simply not reported."""
-    seeds = [sc.seed + e for e in range(sc.episodes)]
-    explore = [True] * sc.episodes
-    if sc.eval_episode:
-        seeds.append(sc.seed)
-        explore.append(False)
-    while len(seeds) < n_episodes:
-        seeds.append(sc.seed + len(seeds))
-        explore.append(True)
-    return (np.asarray(seeds, np.int32), np.asarray(explore, bool))
+    def variance_band(self, lane: int, episode: int | None = None,
+                      keys: Sequence[str] = ("opc", "cycles",
+                                             "energy_nj")) -> dict:
+        """mean±std of per-seed episode summaries across `lane`'s seed group.
 
+        Returns {"seeds": [...], "n": S, "<key>_mean": ..., "<key>_std": ...}
+        — the variance-band record every figure gets for free from the folded
+        seed axis."""
+        members = self.seed_group(lane)
+        sums = [self.episode_summary(i, episode) for i in members]
+        band: dict[str, Any] = {
+            "seeds": [self.scenarios[i].seed for i in members],
+            "n": len(members),
+        }
+        for k in keys:
+            vals = np.asarray([s[k] for s in sums], np.float64)
+            band[f"{k}_mean"] = float(vals.mean())
+            band[f"{k}_std"] = float(vals.std())
+        return band
 
-def _build_batch(scenarios: Sequence[Scenario], cfg: NMPConfig,
-                 n_ops_max: int, n_pages_max: int, n_episodes: int) -> dict:
-    lanes = []
-    for sc in scenarios:
-        tr = sc.trace
-        ops = {k: np.asarray(v) for k, v in
-               pad_trace_ops(tr, n_ops_max, cfg).items()}
-        pt = (np.asarray(sc.page_table, np.int32) if sc.page_table is not None
-              else default_alloc(tr.n_pages, cfg))
-        # pad the page table/RW flags with never-referenced filler pages that
-        # follow the default interleave, so every entry is a legal cube id
-        pad_pages = np.arange(tr.n_pages, n_pages_max) % cfg.n_cubes
-        pt = np.concatenate([pt, pad_pages.astype(np.int32)])
-        rw = np.concatenate([tr.read_write,
-                             np.zeros(n_pages_max - tr.n_pages, bool)])
-        ctx = make_ctx(tr, cfg, sc.technique, sc.mapper, sc.forced_action)
-        seeds, explore = _episode_schedule(sc, n_episodes)
-        lanes.append({
-            **ops, "page_table": pt, "rw": rw,
-            "n_ops": np.int32(ctx.n_ops), "n_pages": np.int32(ctx.n_pages),
-            "t_ring": np.int32(ctx.t_ring), "pei_idx": np.int32(ctx.pei_idx),
-            "technique": np.int32(ctx.technique),
-            "mapper": np.int32(ctx.mapper),
-            "forced_action": np.int32(ctx.forced_action),
-            "ep_seed": seeds, "ep_explore": explore,
-        })
-    return {k: jnp.asarray(np.stack([ln[k] for ln in lanes]))
-            for k in lanes[0]}
-
-
-def needs_agent(sc: Scenario) -> bool:
-    return sc.mapper == "aimm" and sc.forced_action < 0
-
-
-def group_flags(scenarios: Sequence[Scenario], cfg: NMPConfig,
-                has_agent: bool) -> BodyFlags:
-    """Static body flags for one sweep group: the OR over its lanes' needs."""
-    pei_k = max((pei_top_k(sc.trace.n_pages, cfg) for sc in scenarios
-                 if sc.technique == "pei"), default=0)
-    return BodyFlags(
-        has_agent=has_agent,
-        any_aimm=any(sc.mapper == "aimm" for sc in scenarios),
-        any_tom=any(sc.mapper == "tom" for sc in scenarios),
-        pei_k=pei_k,
-    )
+    def opc_timeline_band(self, lane: int, episode: int | None = None,
+                          samples: int = 64) -> tuple[np.ndarray, np.ndarray]:
+        """(mean, std) resampled OPC timelines across `lane`'s seed group."""
+        tls = np.stack([self.opc_timeline(i, episode, samples)
+                        for i in self.seed_group(lane)])
+        return tls.mean(axis=0), tls.std(axis=0)
 
 
 def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
              agent_cfg=None) -> SweepResult:
-    """Run every scenario lane of a grid as one batched, jitted program.
+    """Run every scenario cell of a grid through the plan -> partition ->
+    execute pipeline: one batched, jitted program per lane group, the folded
+    seed axis vmapped inside each lane, the lane axis sharded over the device
+    mesh when more than one device is visible.
 
-    Returns a SweepResult whose per-lane `cycles`/`ops`/`opc` match the serial
+    Returns a SweepResult whose per-cell `cycles`/`ops`/`opc` match the serial
     `run_episode`/`run_program` protocol bit-for-bit (see module docstring).
     """
     scenarios = list(scenarios)
-    assert scenarios, "empty scenario grid"
     t0 = time.time()
+    plan = plan_grid(scenarios, cfg)
     spec = state_spec_for(cfg)
     agent_cfg = agent_cfg or default_agent_cfg(cfg)
+    mesh = partition.build_mesh()
+    tom_cands = partition.replicate(plan_mod.plan_tom_candidates(plan, cfg),
+                                    mesh)
 
-    # The spatial envelope (ops/pages/epochs/ring) is shared across both
-    # agent-mode groups so the merged final_env and per-epoch timelines stack;
-    # the episode count is padded per group — deterministic lanes must not
-    # simulate the AIMM lanes' longer training schedules.
-    n_ops_max = max(sc.trace.n_ops for sc in scenarios)
-    n_pages_max = max(sc.trace.n_pages for sc in scenarios)
-    n_epochs = max(serial_epochs(sc.trace.n_ops, cfg) for sc in scenarios)
-    ring_len = max(phase_ring_len(sc.trace, cfg) for sc in scenarios)
-    n_episodes = max(sc.total_episodes for sc in scenarios)
-    tom_cands = baselines.tom_candidates(n_pages_max, cfg)
-
-    groups = [[i for i, sc in enumerate(scenarios) if needs_agent(sc)],
-              [i for i, sc in enumerate(scenarios) if not needs_agent(sc)]]
     outs: list = [None] * len(scenarios)
     envs: list = [None] * len(scenarios)
-    for has_agent, idxs in zip((True, False), groups):
-        if not idxs:
-            continue
-        group = [scenarios[i] for i in idxs]
-        flags = group_flags(group, cfg, has_agent)
-        ep_group = max(sc.total_episodes for sc in group)
-        batch = _build_batch(group, cfg, n_ops_max, n_pages_max, ep_group)
+    for group in plan.groups:
+        batch_np = plan_mod.build_group_batch(plan, group, cfg)
+        batch_np = partition.pad_group_batch(
+            batch_np, partition.padded_lane_count(group.n_lanes, mesh))
+        batch = partition.shard_group_batch(batch_np, mesh)
         with warnings.catch_warnings():
             # int trace/ctx buffers have no same-shaped outputs to reuse;
             # their donation being unusable is expected, not a leak.
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
             out, env_fin = _run_sweep(batch, tom_cands, cfg, spec, agent_cfg,
-                                      n_epochs, ep_group, ring_len, flags)
+                                      plan.n_epochs, group.n_episodes,
+                                      plan.ring_len, group.flags)
         out = jax.block_until_ready(out)
-        pad_e = n_episodes - ep_group
-        for j, i in enumerate(idxs):
-            outs[i] = {k: np.pad(np.asarray(v[j]),
-                                 [(0, pad_e)] + [(0, 0)] * (v[j].ndim - 1))
-                       for k, v in out.items()}
-            envs[i] = jax.tree.map(lambda a, j=j: np.asarray(a[j]), env_fin)
+        pad_e = plan.n_episodes - group.n_episodes
+        for li, lane in enumerate(group.lanes):
+            cells = {}               # seed slot -> unfolded metric dict
+            for i, si in zip(lane.indices, lane.slots):
+                if si not in cells:
+                    cells[si] = (
+                        {k: np.pad(np.asarray(v[li, si]),
+                                   [(0, pad_e)] + [(0, 0)]
+                                   * (v[li, si].ndim - 1))
+                         for k, v in out.items()},
+                        jax.tree.map(
+                            lambda a, li=li, si=si: np.asarray(a[li, si]),
+                            env_fin))
+                outs[i], envs[i] = cells[si]
 
     metrics = {k: np.stack([o[k] for o in outs]) for k in outs[0]}
     final_env = jax.tree.map(lambda *xs: np.stack(xs), *envs)
     return SweepResult(scenarios=scenarios, cfg=cfg, metrics=metrics,
-                       final_env=final_env, n_episodes=n_episodes,
-                       wall_s=time.time() - t0)
+                       final_env=final_env, n_episodes=plan.n_episodes,
+                       wall_s=time.time() - t0, plan=plan,
+                       n_devices=partition.mesh_desc(mesh)["n_devices"])
 
 
 def run_grid_serial(scenarios: Sequence[Scenario],

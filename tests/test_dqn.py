@@ -105,6 +105,30 @@ def test_q_values_infer_falls_back_off_fused_shape():
         np.asarray(dqn.q_values(params, s, cfg)))
 
 
+def test_qnet_backend_env_var_validated(monkeypatch):
+    """An unknown REPRO_QNET_BACKEND must raise a clear error, not silently
+    fall back to the jnp path."""
+    monkeypatch.setenv("REPRO_QNET_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="REPRO_QNET_BACKEND.*cuda"):
+        dqn._infer_backend()
+    for ok in dqn.QNET_BACKENDS:
+        monkeypatch.setenv("REPRO_QNET_BACKEND", ok)
+        assert dqn._infer_backend() in ("pallas", "jnp")
+
+
+def test_qnet_backend_argument_validated():
+    cfg = DQNConfig(state_dim=8, n_actions=4)
+    params = dqn.init_params(jax.random.PRNGKey(0), cfg)
+    s = jnp.zeros((2, 8))
+    with pytest.raises(ValueError, match="backend='tpu'"):
+        dqn.q_values_infer(params, s, cfg, backend="tpu")
+    # explicit "auto" resolves like the env default instead of silently
+    # skipping the kernel because it isn't literally "pallas"
+    np.testing.assert_array_equal(
+        np.asarray(dqn.q_values_infer(params, s, cfg, backend="auto")),
+        np.asarray(dqn.q_values_infer(params, s, cfg)))
+
+
 def test_train_step_noop_until_replay_ready():
     """Pre-`min_replay` the TD step must be an exact no-op (this is what lets
     the engine skip it under lax.cond)."""

@@ -79,6 +79,22 @@ def test_cond_agent_gate_equals_masked_reference():
         np.testing.assert_array_equal(np.asarray(c), np.asarray(m))
 
 
+def test_tom_gate_cond_equals_masked_reference():
+    """TOM's profiling-phase candidate scoring runs under `lax.cond` on "any
+    lane is in a profiling phase" (gated like the DQN invocation); it must be
+    bit-identical to the score-every-epoch reference path: same cycles, same
+    committed mapping, same candidate scores."""
+    tr = make_trace("KM", n_ops=2048)      # long enough to profile + commit
+    cond = run_episode(tr, CFG, "bnmp", "tom", seed=1)
+    masked = run_episode(tr, CFG, "bnmp", "tom", seed=1, tom_gate="masked")
+    assert float(cond.env.cycles) == float(masked.env.cycles)
+    assert int(cond.env.tom_active) == int(masked.env.tom_active) >= 0
+    np.testing.assert_array_equal(np.asarray(cond.env.tom_scores),
+                                  np.asarray(masked.env.tom_scores))
+    np.testing.assert_array_equal(np.asarray(cond.metrics["opc"]),
+                                  np.asarray(masked.metrics["opc"]))
+
+
 def test_agent_invocations_skip_between_strides():
     """With a scripted INC_INTERVAL policy the invocation stride climbs to 4;
     the invoke metric must go sparse accordingly (the whole point of gating

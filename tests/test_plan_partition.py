@@ -1,0 +1,182 @@
+"""Plan + partition layers of the sweep pipeline.
+
+Unit tests cover seed folding / lane grouping / padding arithmetic directly;
+the multi-device path (lane-axis `NamedSharding` over a forced 4-device host
+platform, including non-divisible lane-count padding) runs in a subprocess
+because `XLA_FLAGS=--xla_force_host_platform_device_count=4` must be set
+before jax initializes.  The same path runs in-process for the whole suite
+on the CI job that exports that flag globally (see .github/workflows/ci.yml).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.nmp import NMPConfig, make_trace
+from repro.nmp import partition
+from repro.nmp.plan import build_group_batch, plan_grid
+from repro.nmp.scenarios import Scenario, seed_variants
+
+CFG = NMPConfig()
+
+
+def _mixed_grid():
+    grid = []
+    for app, n_ops in (("KM", 384), ("RBM", 512)):
+        tr = make_trace(app, n_ops=n_ops)
+        for mapper in ("none", "tom"):
+            grid += seed_variants(Scenario(name=f"{app}/{mapper}", trace=tr,
+                                           mapper=mapper), seeds=(0, 1, 2))
+    tr = make_trace("MAC", n_ops=384)
+    grid += seed_variants(Scenario(name="MAC/aimm", trace=tr, mapper="aimm",
+                                   episodes=2), seeds=(0, 1))
+    return grid
+
+
+# ---------------------------------------------------------------------------
+# Plan layer
+# ---------------------------------------------------------------------------
+
+def test_plan_folds_seeds_and_groups_lanes():
+    grid = _mixed_grid()
+    plan = plan_grid(grid, CFG)
+    assert len(plan.groups) == 2
+    agent, det = plan.groups
+    assert agent.has_agent and not det.has_agent
+    assert (agent.n_lanes, agent.n_seeds) == (1, 2)
+    # 12 deterministic cells fold 3-to-1 AND collapse their seed axis: the
+    # deterministic mappers are seed-invariant, so one simulated cell per
+    # lane serves all three replicas
+    assert (det.n_lanes, det.n_seeds) == (4, 1)
+    assert all(ln.slots == (0, 0, 0) for ln in det.lanes)
+    assert det.flags.any_tom and not det.flags.has_agent
+    # the index map covers every scenario exactly once
+    seen = sorted(i for g in plan.groups for ln in g.lanes
+                  for i in ln.indices)
+    assert seen == list(range(len(grid)))
+    assert plan.seed_group(1) == (0, 1, 2)
+    # envelope: padded to the largest trace / longest schedule
+    assert plan.n_ops_max == 512 and plan.n_episodes == 2
+
+
+def test_plan_pads_ragged_seed_axes():
+    """Seed-variant lanes with different seed counts share one group: the
+    narrow lane's seed axis is padded by re-simulating its first seed."""
+    tr = make_trace("KM", n_ops=384)
+    grid = (seed_variants(Scenario(name="a", trace=tr, mapper="aimm",
+                                   forced_action=1), seeds=(0, 1, 2))
+            + [Scenario(name="b", trace=tr, mapper="aimm", forced_action=3,
+                        seed=7)])
+    plan = plan_grid(grid, CFG)
+    (group,) = plan.groups
+    assert group.n_seeds == 3
+    narrow = group.lanes[1]
+    assert narrow.seeds == (7, 7, 7) and narrow.indices == (3,)
+    assert narrow.slots == (0,)
+    batch = build_group_batch(plan, group, CFG)
+    assert batch["ep_seed"].shape == (2, 3, 1)
+    assert (batch["ep_seed"][1, :, 0] == 7).all()
+
+
+def test_distinct_trace_objects_do_not_fold():
+    """Folding keys on Trace object identity: equal-seed scenarios over
+    different traces stay separate lanes."""
+    grid = [Scenario(name="a", trace=make_trace("KM", n_ops=384)),
+            Scenario(name="b", trace=make_trace("KM", n_ops=384))]
+    plan = plan_grid(grid, CFG)
+    assert plan.n_lanes == 2
+
+
+# ---------------------------------------------------------------------------
+# Partition layer
+# ---------------------------------------------------------------------------
+
+def test_single_device_degrades_to_no_mesh():
+    assert partition.build_mesh([object()]) is None
+    assert partition.mesh_desc(None)["n_devices"] == 1
+    assert partition.padded_lane_count(5, None) == 5
+
+
+def test_pad_group_batch_repeats_lane_zero():
+    batch = {"x": np.arange(6).reshape(3, 2), "y": np.arange(3)}
+    out = partition.pad_group_batch(batch, 4)
+    assert out["x"].shape == (4, 2) and out["y"].shape == (4,)
+    np.testing.assert_array_equal(out["x"][3], batch["x"][0])
+    same = partition.pad_group_batch(batch, 3)
+    assert same["x"].shape == (3, 2)
+
+
+def test_sweep_devices_env_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_SWEEP_DEVICES", "banana")
+    with pytest.raises(ValueError, match="REPRO_SWEEP_DEVICES"):
+        partition.sweep_devices()
+    monkeypatch.setenv("REPRO_SWEEP_DEVICES", "0")
+    with pytest.raises(ValueError, match="outside"):
+        partition.sweep_devices()
+    monkeypatch.setenv("REPRO_SWEEP_DEVICES", "99")
+    with pytest.raises(ValueError, match="outside"):
+        partition.sweep_devices()
+    monkeypatch.setenv("REPRO_SWEEP_DEVICES", "all")
+    assert len(partition.sweep_devices()) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution (forced 4-device host platform, subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    import numpy as np
+    import jax
+    assert jax.device_count() == 4, jax.devices()
+
+    from repro.nmp import NMPConfig, make_trace
+    from repro.nmp.scenarios import Scenario, seed_variants
+    from repro.nmp.sweep import run_grid
+
+    cfg = NMPConfig()
+    grid = []
+    for app, n_ops in (("KM", 256), ("RBM", 384)):
+        tr = make_trace(app, n_ops=n_ops)
+        for mapper in ("none", "tom"):
+            grid += seed_variants(
+                Scenario(name=f"{app}/{mapper}", trace=tr, mapper=mapper),
+                seeds=(0, 1, 2))
+    tr = make_trace("MAC", n_ops=256)
+    grid += seed_variants(
+        Scenario(name="MAC/forced", trace=tr, mapper="aimm",
+                 forced_action=1), seeds=(0, 1, 2))
+
+    os.environ["REPRO_SWEEP_DEVICES"] = "1"
+    r1 = run_grid(grid, cfg)
+    os.environ["REPRO_SWEEP_DEVICES"] = "4"
+    r4 = run_grid(grid, cfg)
+    assert (r1.n_devices, r4.n_devices) == (1, 4)
+    # 5 folded lanes shard over 4 devices only after padding to 8
+    assert r4.plan.n_lanes == 5
+    for k in sorted(r1.metrics):
+        np.testing.assert_array_equal(r1.metrics[k], r4.metrics[k], err_msg=k)
+    print("SHARDED-OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_grid_bit_identical_on_forced_host_devices():
+    """The same grid, single-device vs sharded over 4 forced host devices:
+    per-cell metrics must match bit-for-bit (per-lane work never crosses a
+    device; the only collectives are the boolean any-lane cond gates), with
+    the 5-lane group padded up to the device-divisible 8."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS=("--xla_force_host_platform_device_count=4 "
+                   + os.environ.get("XLA_FLAGS", "")),
+        JAX_PLATFORMS="cpu",
+    )
+    env.pop("REPRO_SWEEP_DEVICES", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED-OK" in proc.stdout

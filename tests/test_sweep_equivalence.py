@@ -1,6 +1,8 @@
 """Batched sweep vs serial engine: per-scenario metrics must match
 bit-for-bit, including lanes whose traces are shorter than the batch
-envelope (op-count and page-count padding).
+envelope (op-count and page-count padding) and scenarios folded onto a
+vmapped seed axis (seed replicas of a cell share one lane and one copy of
+its trace arrays — see nmp.plan).
 
 Grids are sized so related checks share one compiled sweep signature
 (same op/page envelope, episode count and agent mode => one XLA program).
@@ -10,7 +12,7 @@ import pytest
 
 from repro.nmp import NMPConfig, make_trace
 from repro.nmp.engine import run_episode, run_program
-from repro.nmp.scenarios import (Scenario, forced_action_grid,
+from repro.nmp.scenarios import (Scenario, forced_action_grid, seed_variants,
                                  single_program_grid)
 from repro.nmp.stats import summarize
 from repro.nmp.sweep import run_grid
@@ -75,6 +77,70 @@ def test_grid_matches_serial_forced_actions():
                                        forced_action=sc.forced_action,
                                        seed=sc.seed))
         _assert_exact(serial, res.episode_summary(i, 0), sc.name)
+
+
+def test_seed_folded_grid_matches_serial():
+    """18+-cell grid with 3 seeds per cell: the plan layer folds the seed
+    replicas onto a vmapped seed axis (9 lanes, not 27), and every
+    (lane, seed) cell still reproduces its serial run bit-for-bit —
+    including the scripted-AIMM cells, whose trajectories genuinely depend
+    on the seed through the env RNG."""
+    grid = []
+    for app, n_ops in (("KM", 384), ("RBM", 512), ("MAC", 640)):
+        tr = make_trace(app, n_ops=n_ops)
+        for mapper, forced in (("none", -1), ("tom", -1), ("aimm", 1)):
+            grid += seed_variants(
+                Scenario(name=f"{app}/{mapper}", trace=tr, mapper=mapper,
+                         forced_action=forced), seeds=(0, 1, 2))
+    assert len(grid) == 27
+    res = run_grid(grid, CFG)
+    assert res.plan.n_lanes == 9            # 27 cells folded 3-to-1
+    assert [g.n_seeds for g in res.plan.groups] == [3]
+    for i, sc in enumerate(grid):
+        serial = summarize(run_episode(sc.trace, CFG, sc.technique, sc.mapper,
+                                       seed=sc.seed,
+                                       forced_action=sc.forced_action))
+        _assert_exact(serial, res.episode_summary(i, 0), f"{sc.name}/s{sc.seed}")
+    # the scripted lanes' seeds must actually matter (env RNG drives the
+    # random-neighbor action target), otherwise the band test is vacuous
+    aimm0 = [i for i, sc in enumerate(grid)
+             if sc.mapper == "aimm" and sc.trace.n_ops == 640]
+    cyc = {res.episode_summary(i, 0)["cycles"] for i in aimm0}
+    assert len(cyc) > 1
+
+
+def test_variance_band_over_folded_seeds():
+    tr = make_trace("SPMV", n_ops=384)
+    grid = seed_variants(Scenario(name="SPMV/forced", trace=tr, mapper="aimm",
+                                  forced_action=1), seeds=(0, 1, 2))
+    res = run_grid(grid, CFG)
+    assert res.seed_group(1) == [0, 1, 2]
+    band = res.variance_band(0)
+    assert band["n"] == 3 and band["seeds"] == [0, 1, 2]
+    opcs = np.asarray([res.episode_summary(i, 0)["opc"] for i in range(3)])
+    np.testing.assert_allclose(band["opc_mean"], opcs.mean())
+    np.testing.assert_allclose(band["opc_std"], opcs.std())
+    mean_tl, std_tl = res.opc_timeline_band(0)
+    assert mean_tl.shape == std_tl.shape == (64,)
+    assert (std_tl >= 0).all()
+
+
+@pytest.mark.slow
+def test_seed_folded_aimm_chained_matches_run_program():
+    """Learned-policy lanes with a folded seed axis: every (seed, episode)
+    cell of the in-scan episode chain matches its serial run_program — the
+    per-seed DQNs train independently inside one compiled program."""
+    tr = make_trace("KM", n_ops=384)
+    grid = seed_variants(Scenario(name="KM/aimm", trace=tr, mapper="aimm",
+                                  episodes=2), seeds=(0, 1, 2))
+    res = run_grid(grid, CFG)
+    assert res.plan.n_lanes == 1 and res.plan.groups[0].n_seeds == 3
+    for i, sc in enumerate(grid):
+        serial = run_program(sc.trace, CFG, sc.technique, "aimm",
+                             episodes=sc.episodes, seed=sc.seed)
+        for e in range(sc.episodes):
+            _assert_exact(summarize(serial[e]), res.episode_summary(i, e),
+                          f"s{sc.seed}/ep{e}")
 
 
 def test_single_program_grid_builder_covers_cells():
