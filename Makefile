@@ -4,8 +4,10 @@
 #   make test-fast    quick lane: skips tests marked `slow`
 #   make test-4dev    test-fast on a forced 4-device host platform (the sweep
 #                     partition layer shards every grid over a 4-wide mesh)
-#   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record,
-#                     which also writes bench_out/BENCH_engine.json)
+#   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record
+#                     + the continual warm-vs-cold record, which writes
+#                     bench_out/BENCH_engine.json and BENCH_continual.json)
+#   make bench-continual  just the continual-stream warm-vs-cold benchmark
 #   make bench        every benchmark figure (BENCH_FULL=1 for paper scale)
 #   make profile      JAX profiler trace of one batched grid -> bench_out/profile
 
@@ -14,7 +16,7 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast test-4dev bench-smoke bench profile
+.PHONY: test test-fast test-4dev bench-smoke bench-continual bench profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -27,7 +29,10 @@ test-4dev:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	BENCH_ONLY=fig5,engine $(PY) benchmarks/run.py
+	BENCH_ONLY=fig5,engine,continual $(PY) benchmarks/run.py
+
+bench-continual:
+	BENCH_ONLY=continual $(PY) benchmarks/run.py
 
 bench:
 	$(PY) benchmarks/run.py

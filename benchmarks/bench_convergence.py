@@ -1,10 +1,17 @@
 """Fig. 9: OPC timeline (fixed-size resample, order preserved) showing the
-agent converging toward higher OPC across its episodes.  The per-episode
-timelines come straight out of the shared batched figure grid's stacked
-metrics (continual learning across the in-scan episode chain)."""
+agent converging toward higher OPC across its episodes, plus warm-vs-cold
+rows from the continual program-switch stream (one DQN threaded through app
+switches vs a fresh DQN on the final phase).
+
+Everything comes off cached batched sweeps — the shared figure grid
+(`figure_grid`, one compiled sweep for all single-program figures) and the
+shared continual stream (`cached_stream`, reused by bench_continual) — no
+serial per-episode calls remain.
+"""
 import numpy as np
 
-from benchmarks.common import apps, emit, figure_grid, grid_us
+from benchmarks.common import (STREAM_EPISODES, STREAM_N_OPS_PER_APP, apps,
+                               cached_stream, emit, figure_grid, grid_us)
 
 
 def run():
@@ -22,6 +29,24 @@ def run():
         emit(f"fig9/{app}/opc_end", us, round(float(last), 4))
         emit(f"fig9/{app}/convergence_gain", us,
              round(float(last / max(first, 1e-9)), 4))
+
+    # Warm vs cold start on the continual stream's final phase: the warm
+    # agent (threaded through every earlier program phase) starts its first
+    # episode where the cold agent only ends up after training.
+    stream = cached_stream("switch", n_ops_per_app=STREAM_N_OPS_PER_APP,
+                           episodes=STREAM_EPISODES)
+    warm, cold = stream["res"].phases[-1], stream["cold"]
+    sus = stream["us"] / max(len(stream["res"].phases) + 1, 1)
+    lane_w = next(i for i, sc in enumerate(warm.scenarios)
+                  if sc.mapper == "aimm")
+    lane_c = next(i for i, sc in enumerate(cold.scenarios)
+                  if sc.mapper == "aimm")
+    w0 = float(warm.opc_timeline(lane_w, 0, samples=16).mean())
+    c0 = float(cold.opc_timeline(lane_c, 0, samples=16).mean())
+    emit("fig9/continual/warm_first_episode_opc", sus, round(w0, 4))
+    emit("fig9/continual/cold_first_episode_opc", sus, round(c0, 4))
+    emit("fig9/continual/warm_vs_cold_gain", sus,
+         round(w0 / max(c0, 1e-9), 4))
 
 
 if __name__ == "__main__":

@@ -128,6 +128,40 @@ def figure_grid(cfg=None, techniques=("bnmp", "ldb", "pei"),
                        eval_episode=True)
 
 
+_STREAM_CACHE: dict = {}
+
+# Shared continual-stream protocol: bench_continual and the fig9/continual
+# rows must request the *same* stream or the cached_stream memo splits and
+# the most expensive computation (warm stream + cold final phase) runs twice.
+STREAM_N_OPS_PER_APP = N_OPS // 4 if FULL else N_OPS // 8
+STREAM_EPISODES = 5 if FULL else 3
+
+
+def cached_stream(name: str = "switch", cfg=None, **kw):
+    """Memoized continual-stream run shared by the continual benchmarks.
+
+    Executes a named program-phase stream (`repro.nmp.scenarios.STREAMS`)
+    twice over its final phase: once *warm* (one PolicyStore threaded through
+    every phase — the paper's continual-learning protocol) and once *cold*
+    (the final phase alone with a fresh store), so warm-vs-cold rows come
+    from one cached computation.  Returns {"stream", "res" (StreamResult),
+    "cold" (SweepResult of the final phase), "us"}."""
+    from repro.nmp import NMPConfig, partition, scenarios, sweep
+    from repro.nmp.continual import run_stream
+    cfg = cfg or NMPConfig()
+    key = (name, str(cfg), partition.mesh_signature(),
+           tuple(sorted((k, str(v)) for k, v in kw.items())))
+    if key in _STREAM_CACHE:
+        return _STREAM_CACHE[key]
+    stream = scenarios.build_stream(name, **kw)
+    with Timer() as t:
+        res = run_stream(stream, cfg)
+        cold = sweep.run_grid(stream[-1], cfg)   # fresh store => cold lineage
+    out = {"stream": stream, "res": res, "cold": cold, "us": t.us}
+    _STREAM_CACHE[key] = out
+    return out
+
+
 def grid_us(cached: dict) -> float:
     """Per-lane wall-time attribution for a cached grid's CSV rows: the whole
     sweep's wall time split evenly over its lanes."""

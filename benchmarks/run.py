@@ -18,6 +18,7 @@ MODULES = [
     ("fig10_migration", "benchmarks.bench_migration"),
     ("fig11_mesh_scaling", "benchmarks.bench_mesh_scaling"),
     ("fig12_multiprogram", "benchmarks.bench_multiprogram"),
+    ("continual_stream", "benchmarks.bench_continual"),
     ("fig13_sensitivity", "benchmarks.bench_sensitivity"),
     ("fig14_energy", "benchmarks.bench_energy"),
     ("kernels", "benchmarks.bench_kernels"),

@@ -12,6 +12,20 @@ The engine invokes the whole observe -> train -> act pipeline only on
 invocation epochs (under `jax.lax.cond`); epochs between invocations carry
 the agent through untouched.  Gradient-free inference (act, TD targets) can
 route through the fused Pallas dueling-qnet kernel (see core.dqn.q_values_infer).
+
+Lifecycle API (the continual layer, nmp.continual, builds on these):
+
+  cold_start     : the canonical fresh-agent convention (PRNGKey(seed + 1))
+  hand_off       : scenario-boundary handoff — per-scenario counters reset,
+                   lifetime state (DNN, replay, global_step) carries over
+  export_agent / import_agent : host-side numpy snapshot <-> AgentState
+  agent_template : RNG-free AgentState skeleton (checkpoint restore target)
+
+`AgentState.global_step` counts env interactions over the agent's whole
+lifetime and is never reset by `hand_off`; the ε-greedy schedule keys on it,
+so exploration decays across scenario/program switches instead of restarting
+at every boundary.  For a cold-started agent `global_step == step` until the
+first handoff, so single-scenario behavior is unchanged.
 """
 from __future__ import annotations
 
@@ -19,6 +33,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dqn
 from repro.core.dqn import DQNConfig
@@ -33,10 +48,11 @@ class AgentState(NamedTuple):
     target_params: PyTree
     opt_state: PyTree
     replay: ReplayBuffer
-    step: jnp.ndarray          # env interactions
-    train_steps: jnp.ndarray   # gradient updates taken
+    step: jnp.ndarray          # env interactions in the current scenario
+    train_steps: jnp.ndarray   # gradient updates taken (lifetime)
     rng: jax.Array
     loss_ema: jnp.ndarray
+    global_step: jnp.ndarray   # lifetime env interactions (never reset)
 
 
 class AgentConfig(NamedTuple):
@@ -62,6 +78,55 @@ def init_agent(rng: jax.Array, cfg: AgentConfig) -> AgentState:
         train_steps=jnp.zeros((), jnp.int32),
         rng=k2,
         loss_ema=jnp.zeros(()),
+        global_step=jnp.zeros((), jnp.int32),
+    )
+
+
+def cold_start(seed, cfg: AgentConfig) -> AgentState:
+    """The engine's fresh-agent convention: one agent per scenario seed,
+    keyed off PRNGKey(seed + 1).  `seed` may be a traced scalar (the sweep
+    cold-starts whole lanes inside jit)."""
+    return init_agent(jax.random.PRNGKey(seed + 1), cfg)
+
+
+def hand_off(agent: AgentState) -> AgentState:
+    """Scenario-boundary handoff (program switch, co-runner churn): the agent
+    continues its lifetime — DNN weights, target net, Adam moments, replay
+    buffer, RNG stream and `global_step` all carry over — while the
+    per-scenario interaction counter resets.  ε-greedy exploration keys on
+    `global_step`, so it keeps decaying across the boundary."""
+    return agent._replace(step=jnp.zeros((), jnp.int32))
+
+
+def export_agent(agent: AgentState) -> AgentState:
+    """Host-side numpy snapshot of an agent (same pytree structure).  The
+    snapshot is detached from any device/mesh, so it can be stored, compared
+    or checkpointed regardless of where the agent ran."""
+    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), agent)
+
+
+def import_agent(snapshot: AgentState) -> AgentState:
+    """Re-materialize an exported snapshot as device arrays (dtypes kept)."""
+    return jax.tree.map(jnp.asarray, snapshot)
+
+
+def agent_template(cfg: AgentConfig) -> AgentState:
+    """RNG-free AgentState skeleton: every leaf has the shape/dtype of a real
+    agent but zero contents (params via `dqn.zeros_params`).  Checkpoint
+    restore targets are built from this, so a fresh process can restore an
+    agent without replaying the init RNG."""
+    params = dqn.zeros_params(cfg.dqn)
+    opt = adamw(cfg.dqn.lr, grad_clip=cfg.dqn.grad_clip)
+    return AgentState(
+        params=params,
+        target_params=jax.tree.map(jnp.copy, params),
+        opt_state=opt.init(params),
+        replay=init_replay(cfg.replay_capacity, cfg.dqn.state_dim),
+        step=jnp.zeros((), jnp.int32),
+        train_steps=jnp.zeros((), jnp.int32),
+        rng=jax.random.PRNGKey(0),
+        loss_ema=jnp.zeros(()),
+        global_step=jnp.zeros((), jnp.int32),
     )
 
 
@@ -81,11 +146,15 @@ def act(agent: AgentState, cfg: AgentConfig, state_vec: jnp.ndarray,
     rng, k_eps, k_act = jax.random.split(agent.rng, 3)
     q = dqn.q_values_infer(agent.params, state_vec, cfg.dqn)
     greedy = jnp.argmax(q).astype(jnp.int32)
-    eps = epsilon(cfg, agent.step)
+    # ε decays over the agent's *lifetime* (global_step survives scenario
+    # handoffs); for a cold-started agent global_step == step, so cold
+    # first-episode behavior matches the historical per-scenario schedule.
+    eps = epsilon(cfg, agent.global_step)
     rand_a = jax.random.randint(k_act, (), 0, cfg.dqn.n_actions)
     take_rand = jnp.asarray(explore) & (jax.random.uniform(k_eps) < eps)
     action = jnp.where(take_rand, rand_a, greedy)
-    return action, agent._replace(rng=rng, step=agent.step + 1)
+    return action, agent._replace(rng=rng, step=agent.step + 1,
+                                  global_step=agent.global_step + 1)
 
 
 def observe(agent: AgentState, s, a, r, s2, done=0.0) -> AgentState:

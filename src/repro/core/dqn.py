@@ -53,6 +53,15 @@ def init_params(rng: jax.Array, cfg: DQNConfig) -> PyTree:
     return params
 
 
+def zeros_params(cfg: DQNConfig) -> PyTree:
+    """Zero-filled parameter pytree with `init_params`' exact structure,
+    shapes and dtypes, built without an RNG.  This is the restore template
+    for checkpointed agents: a fresh process can rebuild the tree skeleton
+    and map saved leaves onto it without replaying the init key."""
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
 def q_values(params: PyTree, state: jnp.ndarray, cfg: DQNConfig) -> jnp.ndarray:
     """Q(s, .) for a single state (state_dim,) or batch (B, state_dim)."""
     squeeze = state.ndim == 1

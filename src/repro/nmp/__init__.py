@@ -1,8 +1,10 @@
 """Simulated NMP system: the environment AIMM optimizes (paper §5-§6)."""
 from repro.nmp import partition  # noqa: F401
 from repro.nmp.config import NMPConfig  # noqa: F401
+from repro.nmp.continual import PolicyStore, StreamResult, run_stream  # noqa: F401
 from repro.nmp.engine import EpisodeResult, run_episode, run_program  # noqa: F401
 from repro.nmp.plan import GridPlan, plan_grid  # noqa: F401
-from repro.nmp.scenarios import Scenario, seed_variants  # noqa: F401
+from repro.nmp.scenarios import (Scenario, build_stream,  # noqa: F401
+                                 continual_stream, seed_variants)
 from repro.nmp.sweep import SweepResult, run_grid  # noqa: F401
 from repro.nmp.traces import APPS, Trace, make_trace, merge_traces  # noqa: F401

@@ -1,0 +1,177 @@
+"""Continual-learning agent lifecycle layer: persistent policies across
+scenarios, program switches and processes.
+
+The paper's core claim is *continual* learning — AIMM "continuously evaluates
+and learns the impact of mapping decisions ... for any application", surviving
+program switches and co-runner churn.  The engine (nmp.engine) and the sweep
+pipeline (nmp.plan / nmp.partition / nmp.sweep) simulate and train; this
+module owns what happens to the DQN *between* compiled programs:
+
+  PolicyStore   : a tag -> AgentState registry of agent lineages.  Lanes
+                  declare a lineage via `Scenario.lineage`; `sweep.run_grid`
+                  warm-starts declared lanes from the store (cold-starts a
+                  fresh tag) and writes every tag's final agent back.  Agents
+                  are held as host-side numpy snapshots (`agent.export_agent`),
+                  so a store is independent of devices, meshes and jit.
+  checkpointing : `PolicyStore.save` / `PolicyStore.restore` round-trip the
+                  whole store through `train.checkpoint.CheckpointManager`
+                  bit-exactly (replay buffer dtypes, Adam moments and the
+                  PRNG key survive), so a long-running mapper can be stopped
+                  mid-stream and resumed in a fresh process — on a different
+                  device mesh — and reproduce the remaining stream exactly.
+  run_stream    : execute an ordered program-phase stream (see
+                  `scenarios.continual_stream`) as chained `run_grid` calls
+                  threading one PolicyStore, i.e. one DQN living through app
+                  switches and co-runner arrival/departure.
+
+Scenario-boundary semantics (`PolicyStore.checkout`): the DNN weights, target
+network, Adam moments, replay buffer, RNG stream and `global_step` carry
+across the boundary; only the per-scenario interaction counter resets
+(`agent.hand_off`).  The ε-greedy schedule keys on `global_step`, so
+exploration keeps decaying over the agent's lifetime instead of restarting
+with every program switch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+from repro.core import agent as agent_mod
+from repro.core.agent import AgentConfig, AgentState
+from repro.nmp.config import NMPConfig
+from repro.nmp.scenarios import Scenario
+from repro.train.checkpoint import CheckpointManager
+
+
+def check_tag(tag: str) -> str:
+    """Validate a lineage tag (also called by `plan_grid`, so a bad tag fails
+    at plan time instead of after the whole grid has simulated)."""
+    if not isinstance(tag, str) or not tag or "/" in tag:
+        raise ValueError(
+            f"lineage tag {tag!r}: expected a non-empty string without '/' "
+            "(tags become checkpoint leaf-path components)")
+    return tag
+
+
+class PolicyStore:
+    """Registry of persistent agent lineages, keyed by tag.
+
+    Agents enter via `put` (stored as host numpy snapshots) and leave via
+    `checkout` (device arrays, scenario-boundary handoff applied).  The store
+    itself never trains — `sweep.run_grid` / `run_stream` thread it through
+    compiled programs.  Per-tag `meta` records lineage provenance (last
+    scenario, lifetime counters, phases served)."""
+
+    def __init__(self, agents: dict[str, AgentState] | None = None,
+                 meta: dict[str, dict] | None = None):
+        self._agents: dict[str, AgentState] = dict(agents or {})
+        self.meta: dict[str, dict] = {t: dict(m)
+                                      for t, m in (meta or {}).items()}
+
+    # -- registry -------------------------------------------------------
+    @property
+    def tags(self) -> list[str]:
+        return sorted(self._agents)
+
+    def __contains__(self, tag: str) -> bool:
+        return tag in self._agents
+
+    def __len__(self) -> int:
+        return len(self._agents)
+
+    def get(self, tag: str) -> AgentState:
+        """The stored host-side snapshot (no handoff applied)."""
+        return self._agents[tag]
+
+    def put(self, tag: str, agent: AgentState, **meta: Any) -> None:
+        """Store `agent` (detached to host numpy) as the lineage's current
+        state and update its provenance record."""
+        check_tag(tag)
+        snap = agent_mod.export_agent(agent)
+        self._agents[tag] = snap
+        rec = self.meta.setdefault(tag, {"phases": 0})
+        rec["phases"] = rec.get("phases", 0) + 1
+        rec["global_step"] = int(snap.global_step)
+        rec["train_steps"] = int(snap.train_steps)
+        rec.update(meta)
+
+    def checkout(self, tag: str) -> AgentState:
+        """Device-ready warm start for a new scenario: the stored lineage
+        with the scenario-boundary handoff applied (per-scenario counters
+        reset; weights, replay, RNG and global_step carried)."""
+        return agent_mod.hand_off(agent_mod.import_agent(self._agents[tag]))
+
+    def global_step(self, tag: str) -> int:
+        """Lifetime env interactions of a lineage."""
+        return int(self._agents[tag].global_step)
+
+    # -- persistence ----------------------------------------------------
+    def save(self, directory: str, step: int | None = None,
+             keep: int = 0) -> int:
+        """Checkpoint every lineage (synchronously) via CheckpointManager.
+
+        `step` defaults to latest+1 so repeated saves of a long-running
+        stream form a history.  Every step is kept by default (`keep=0`) —
+        a stream checkpoints once per phase and any phase must stay a valid
+        resume point; pass `keep > 0` to bound the history instead."""
+        mgr = CheckpointManager(directory, keep=keep, async_write=False)
+        if step is None:
+            latest = mgr.latest_step()
+            step = 0 if latest is None else latest + 1
+        mgr.save(step, dict(self._agents),
+                 extras={"tags": self.tags, "meta": self.meta})
+        return step
+
+    @classmethod
+    def restore(cls, directory: str, agent_cfg: AgentConfig,
+                step: int | None = None) -> "PolicyStore":
+        """Rebuild a store in a fresh process: read the checkpoint's tag list
+        from its metadata, build RNG-free `agent_template` skeletons, and map
+        the saved leaves back on bit-exactly.  `agent_cfg` must describe the
+        same agent architecture the store was saved with."""
+        mgr = CheckpointManager(directory)
+        meta = mgr.read_meta(step)
+        template = {t: agent_mod.agent_template(agent_cfg)
+                    for t in meta["extras"]["tags"]}
+        tree, extras = mgr.restore(template, step)
+        agents = {t: agent_mod.export_agent(a) for t, a in tree.items()}
+        return cls(agents=agents, meta=extras.get("meta", {}))
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One executed program-phase stream: per-phase SweepResults plus the
+    PolicyStore holding every lineage's final agent."""
+    phases: list[Any]                # list[sweep.SweepResult], in phase order
+    store: PolicyStore
+
+    def phase_summary(self, phase: int, lane: int,
+                      episode: int | None = None) -> dict:
+        return self.phases[phase].episode_summary(lane, episode)
+
+
+def run_stream(stream: Sequence[Sequence[Scenario]],
+               cfg: NMPConfig = NMPConfig(),
+               agent_cfg: AgentConfig | None = None,
+               store: PolicyStore | None = None,
+               checkpoint_dir: str | None = None) -> StreamResult:
+    """Execute an ordered program-phase stream as chained `run_grid` calls.
+
+    Each phase is one grid (see `scenarios.continual_stream`); the store is
+    threaded through, so lanes sharing a lineage tag across phases are one
+    DQN living through every app switch and co-runner change.  With
+    `checkpoint_dir` the store is checkpointed after every phase, the steps
+    continuing the directory's existing history (so on a fresh directory
+    step == phase index, and a *resumed* stream appends instead of
+    clobbering earlier phases' resume points).  That is the stop/resume
+    protocol for long-running streams: `PolicyStore.restore(dir, agent_cfg,
+    step=k)` + `run_stream(stream[k+1:], store=...)` reproduces the
+    remaining phases bit-exactly."""
+    from repro.nmp.sweep import run_grid
+    store = store if store is not None else PolicyStore()
+    results = []
+    for phase in stream:
+        results.append(run_grid(phase, cfg, agent_cfg, store=store))
+        if checkpoint_dir is not None:
+            store.save(checkpoint_dir)
+    return StreamResult(phases=results, store=store)

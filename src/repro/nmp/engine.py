@@ -1047,6 +1047,9 @@ def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
     `agent` persists across episodes (continual learning); pass the returned
     agent back in to keep training. Env state is reset each episode, matching
     the paper's protocol ("simulation states are cleared except the DNN").
+    Cross-scenario persistence (warm starts, program-switch streams,
+    checkpointing) lives one layer up in `nmp.continual.PolicyStore` — the
+    engine only ever sees an AgentState in, an AgentState out.
 
     This serial runner is the batched engine at batch size 1 (one vmapped
     lane), so its numbers are bit-identical to the same lane inside a
@@ -1057,7 +1060,9 @@ def run_episode(trace: Trace, cfg: NMPConfig = NMPConfig(),
     agent_cfg = agent_cfg or default_agent_cfg(cfg)
     flags = episode_flags(trace, cfg, technique, mapper, forced_action)
     if flags.has_agent and agent is None:
-        agent = agent_mod.init_agent(jax.random.PRNGKey(seed + 1), agent_cfg)
+        # Fresh lineage: the canonical cold-start convention shared with the
+        # sweep's in-jit lane init and the continual layer's fresh tags.
+        agent = agent_mod.cold_start(seed, agent_cfg)
     n_epochs = serial_epochs(trace.n_ops, cfg)
 
     tr = _batch1(pad_trace_ops(trace, trace.n_ops, cfg))

@@ -14,10 +14,12 @@ execute:
     whose results provably cannot depend on the seed (deterministic
     mappers, see `seed_invariant`) collapse to a width-1 seed axis: one
     simulated cell serves every replica;
-  * **lane grouping**: lanes are grouped by DQN-liveness (`needs_agent`),
+  * **lane grouping**: lanes are grouped by DQN-liveness (`needs_agent`)
+    and agent-lineage mode (`lane_lineage`: warm-capable lanes whose agent
+    batch is threaded in/out of the program vs plain cold-start lanes),
     with per-group `engine.BodyFlags` recording which machinery (AIMM
     actions, TOM scoring, PEI thresholding) any lane of the group uses, so
-    unused features compile out.  A mixed grid compiles at most two
+    unused features compile out.  A mixed grid compiles at most three
     programs — one per group.
 
 `build_group_batch` materializes one group's numpy input batch (trace arrays
@@ -43,6 +45,13 @@ from repro.nmp.scenarios import Scenario
 def needs_agent(sc: Scenario) -> bool:
     """A lane carries a live DQN iff it is a learned-policy AIMM cell."""
     return sc.mapper == "aimm" and sc.forced_action < 0
+
+
+def lane_lineage(sc: Scenario) -> str | None:
+    """The PolicyStore tag of a lane's agent lineage, or None for a plain
+    cold-start lane.  Only learned-policy AIMM lanes carry an agent, so a
+    lineage tag on any other cell is inert and normalized away here."""
+    return sc.lineage if needs_agent(sc) else None
 
 
 def seed_invariant(sc: Scenario) -> bool:
@@ -81,13 +90,20 @@ class LanePlan:
 
 @dataclasses.dataclass(frozen=True)
 class GroupPlan:
-    """One compiled program: lanes sharing an agent mode, a seed-axis width
-    and an episode count."""
+    """One compiled program: lanes sharing an agent mode, a lineage mode, a
+    seed-axis width and an episode count.
+
+    `lineage=True` marks the warm-capable program: its initial agent batch is
+    an *input* (warm-started from a PolicyStore or cold-started on a fresh
+    lineage) and its final agent batch an output.  Lineage-free lanes compile
+    the exact historical program — agents born and dropped inside the jit —
+    so grids without lineages stay bit-identical to pre-lifecycle builds."""
     lanes: tuple[LanePlan, ...]
     has_agent: bool
     flags: BodyFlags
     n_episodes: int              # per-group padded episode count
     n_seeds: int                 # common (padded) seed-axis width S
+    lineage: bool = False        # agent batch threaded in/out of the program
 
     @property
     def n_lanes(self) -> int:
@@ -104,10 +120,19 @@ class GridPlan:
     n_epochs: int
     ring_len: int
     n_episodes: int              # global padded episode count (presentation)
+    agent_lineage: tuple[str | None, ...] = ()
+                                 # per-scenario PolicyStore tag (grid order):
+                                 # None = cold-start, shared tag = lanes in
+                                 # one warm-start / shared-agent group
 
     @property
     def n_lanes(self) -> int:
         return sum(g.n_lanes for g in self.groups)
+
+    def lineage_tags(self) -> tuple[str, ...]:
+        """Distinct lineage tags the grid declares, in first-seen order."""
+        return tuple(dict.fromkeys(t for t in self.agent_lineage
+                                   if t is not None))
 
     def seed_group(self, index: int) -> tuple[int, ...]:
         """Original grid indices of every seed replica folded into the same
@@ -179,23 +204,46 @@ def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
     ring_len = max(phase_ring_len(sc.trace, cfg) for sc in scenarios)
     n_episodes = max(sc.total_episodes for sc in scenarios)
 
+    # Group order: cold agent lanes first (the exact historical program),
+    # then warm-capable lineage lanes, then deterministic lanes — grids
+    # without lineages keep the historical two-group layout untouched.
     groups = []
-    for has_agent in (True, False):
+    for has_agent, lineage in ((True, False), (True, True), (False, False)):
         idxs = [i for i, sc in enumerate(scenarios)
-                if needs_agent(sc) == has_agent]
+                if needs_agent(sc) == has_agent
+                and (lane_lineage(sc) is not None) == (has_agent and lineage)]
         if not idxs:
             continue
         lanes, n_seeds = _pad_seed_axis(_fold_lanes(scenarios, idxs))
         members = [scenarios[i] for i in idxs]
+        group_eps = max(sc.total_episodes for sc in members)
+        if lineage:
+            # Fail bad tags at plan time, not in the post-simulation
+            # write-back (continual.check_tag enforces the same rule at
+            # PolicyStore.put).
+            from repro.nmp.continual import check_tag
+            for sc in members:
+                check_tag(sc.lineage)
+            # A padding episode would keep training a lineage's agent past
+            # its scenario's schedule and hand the extra training to the next
+            # phase — refuse ragged episode counts instead of corrupting the
+            # lineage (run ragged phases as separate run_grid calls).
+            ragged = {sc.total_episodes for sc in members}
+            if len(ragged) > 1:
+                raise ValueError(
+                    "lineage lanes must share one episode count per grid "
+                    f"(got {sorted(ragged)}); split ragged phases into "
+                    "separate run_grid calls")
         groups.append(GroupPlan(
             lanes=tuple(lanes), has_agent=has_agent,
             flags=group_flags(members, cfg, has_agent),
-            n_episodes=max(sc.total_episodes for sc in members),
-            n_seeds=n_seeds))
+            n_episodes=group_eps,
+            n_seeds=n_seeds, lineage=lineage))
     return GridPlan(scenarios=scenarios, groups=tuple(groups),
                     n_ops_max=n_ops_max, n_pages_max=n_pages_max,
                     n_epochs=n_epochs, ring_len=ring_len,
-                    n_episodes=n_episodes)
+                    n_episodes=n_episodes,
+                    agent_lineage=tuple(lane_lineage(sc) for sc in scenarios))
 
 
 def episode_schedule(sc: Scenario, seed: int,

@@ -9,9 +9,16 @@ chained episodes. Grid builders cover the paper's experiment families:
                         (Fig. 12 protocol)
   forced_action_grid  : scripted-policy ablations, one lane per AIMM action
                         (mechanism-ceiling studies)
+  continual_stream    : an *ordered* sequence of program phases (app
+                        switches, co-runner arrival/departure) — one grid
+                        per phase, the learned-AIMM lane of every phase
+                        tagged with a shared `lineage` so
+                        `continual.run_stream` threads one DQN through the
+                        whole stream via chained `run_grid` calls
 
 `GRIDS` maps names to builders so benchmarks/examples can request a standard
-grid by name (`build("single", apps=..., n_ops=...)`).
+grid by name (`build("single", apps=..., n_ops=...)`); `STREAMS` does the
+same for phase streams (`build_stream("switch", ...)`).
 """
 from __future__ import annotations
 
@@ -38,6 +45,10 @@ class Scenario:
     eval_episode: bool = False       # append a greedy (explore=False) episode
     forced_action: int = -1          # >= 0: scripted policy, no DQN
     page_table: np.ndarray | None = None
+    lineage: str | None = None       # PolicyStore tag: warm-start the lane's
+                                     # DQN from the tag (cold-start the
+                                     # lineage if absent) and write the final
+                                     # agent back — None = plain cold start
 
     @property
     def total_episodes(self) -> int:
@@ -54,7 +65,7 @@ class Scenario:
         across the seeds of a cell, which is what makes folding effective."""
         pt = self.page_table.tobytes() if self.page_table is not None else None
         return (id(self.trace), self.technique, self.mapper, self.episodes,
-                self.eval_episode, self.forced_action, pt)
+                self.eval_episode, self.forced_action, pt, self.lineage)
 
 
 def seed_variants(sc: Scenario, seeds: Sequence[int]) -> list[Scenario]:
@@ -135,13 +146,74 @@ def forced_action_grid(app: str = "SPMV", n_ops: int = 2048,
             for a in actions for seed in seeds]
 
 
+# Default program-switch stream (phase name, live app set): a single program,
+# a co-runner arriving, the original program departing.  The lineage-tagged
+# AIMM lane lives through all three phases.
+DEFAULT_STREAM = (
+    ("KM", ("KM",)),
+    ("KM+SC", ("KM", "SC")),
+    ("SC", ("SC",)),
+)
+
+
+def continual_stream(phases: Iterable[tuple[str, Sequence[str]]] = DEFAULT_STREAM,
+                     n_ops_per_app: int = 2048,
+                     technique: str = "bnmp",
+                     episodes: int = 2,
+                     lineage: str | None = "stream",
+                     seed: int = 0,
+                     include_baseline: bool = True,
+                     interleave: int = 32) -> list[list[Scenario]]:
+    """Ordered program-phase stream for continual learning (the paper's
+    "continuously evaluates and learns ... for any application" claim).
+
+    Each phase is one grid: the live app set of that phase — merged
+    round-robin from *per-app traces* when programs co-run, so arrival/
+    departure re-uses the same per-app access patterns rather than one
+    pre-merged blob — with a learned-AIMM lane tagged `lineage` (plus an
+    unmanaged baseline lane when `include_baseline`).  Execute the phases in
+    order with `continual.run_stream` (chained `sweep.run_grid` calls
+    threading one PolicyStore) and the DQN lives through every app switch;
+    with `lineage=None` every phase cold-starts instead (the ablation
+    baseline)."""
+    app_traces: dict[str, object] = {}
+    for _, apps in phases:
+        for app in apps:
+            if app not in app_traces:
+                app_traces[app] = make_trace(app, n_ops=n_ops_per_app)
+    stream = []
+    for pi, (name, apps) in enumerate(phases):
+        tr = (app_traces[apps[0]] if len(apps) == 1 else
+              merge_traces([app_traces[a] for a in apps],
+                           interleave=interleave))
+        grid = []
+        if include_baseline:
+            grid.append(Scenario(name=f"p{pi}:{name}/base", trace=tr,
+                                 technique=technique, seed=seed))
+        grid.append(Scenario(name=f"p{pi}:{name}/aimm", trace=tr,
+                             technique=technique, mapper="aimm", seed=seed,
+                             episodes=episodes, lineage=lineage))
+        stream.append(grid)
+    return stream
+
+
 GRIDS: dict[str, Callable[..., list[Scenario]]] = {
     "single": single_program_grid,
     "multi": multi_program_grid,
     "ablation": forced_action_grid,
 }
 
+STREAMS: dict[str, Callable[..., list[list[Scenario]]]] = {
+    "switch": continual_stream,
+}
+
 
 def build(name: str, **kw) -> list[Scenario]:
     """Build a named grid (see GRIDS) with builder-specific overrides."""
     return GRIDS[name](**kw)
+
+
+def build_stream(name: str, **kw) -> list[list[Scenario]]:
+    """Build a named phase stream (see STREAMS) — one grid per phase, to be
+    executed in order by `continual.run_stream`."""
+    return STREAMS[name](**kw)

@@ -25,6 +25,14 @@ candidate scoring is gated the same way on "any lane profiles").  The input
 batch is donated to the compiled sweep (`donate_argnames`) and per-epoch
 metric timelines are stored at slim dtypes (`valid_t` as uint16).
 
+Agent lifecycle: cold-start lanes are born and die inside the compiled
+program (the historical path, bit-identical by construction); lanes that
+declare a `Scenario.lineage` tag compile into a separate warm-capable
+program whose initial agent batch is an input and whose final agent batch is
+an output, threaded through a `continual.PolicyStore` so one DQN can live
+across run_grid calls, program switches and process restarts (see
+nmp.continual).
+
 Exactness: technique/mapper/forced-action are traced `TraceCtx` selectors and
 every engine update is gated on `has_ops` (see engine._epoch_sim/_epoch_apply),
 so each (lane, seed) cell's `cycles` / `ops_done` / final OPC are bit-identical
@@ -57,16 +65,22 @@ from repro.nmp.stats import energy_breakdown, energy_nj, resample_opc
 
 @partial(jax.jit,
          static_argnames=("cfg", "spec", "agent_cfg", "n_epochs", "n_episodes",
-                          "ring_len", "flags"),
+                          "ring_len", "flags", "want_agent"),
          donate_argnames=("batch",))
 def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
-               ring_len, flags):
+               ring_len, flags, warm_agent=None, want_agent=False):
     """Scan over episodes; inside, the batched epoch scan runs every
     (lane, seed) cell in lockstep (nested (lane, seed) vmap of the epoch
     body, scalar any-lane-invokes agent cond).  The env is re-initialized per
     episode while the agent chains through.  `batch["ep_seed"]` is
     (L, S, E); trace arrays stay per-lane (L, ...) and are shared across the
-    seed axis."""
+    seed axis.
+
+    Agent lifecycle: by default every (lane, seed) cell cold-starts its DQN
+    inside the program (the exact historical path).  Lineage groups pass the
+    initial agent batch in as `warm_agent` (flat (L*S,) cells, warm-started
+    from a PolicyStore or cold-started on a fresh lineage) and set
+    `want_agent` to get the final agent batch back out for the store."""
     trace = {k: batch[k] for k in ("dest", "src1", "src2")}
     L, S, _E = batch["ep_seed"].shape
     base_ctx = TraceCtx(
@@ -78,10 +92,12 @@ def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
     init_envs = jax.vmap(jax.vmap(
         lambda pt, s: _init_env(pt, cfg, spec, s, ring_len),
         in_axes=(None, 0)))                               # (L, S) grid of envs
-    agent0 = (jax.vmap(lambda s: agent_mod.init_agent(
-        jax.random.PRNGKey(s + 1), agent_cfg))(
+    if warm_agent is not None:
+        agent0 = warm_agent
+    else:
+        agent0 = (jax.vmap(lambda s: agent_mod.cold_start(s, agent_cfg))(
             batch["ep_seed"][:, :, 0].reshape(L * S))
-        if flags.has_agent else None)
+            if flags.has_agent else None)
     env0 = init_envs(batch["page_table"], batch["ep_seed"][:, :, 0])
 
     def episode(carry, x):
@@ -103,6 +119,7 @@ def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
             # per-epoch timelines, stored slim: ms leaves are (n_epochs, L, S)
             "opc_t": jnp.moveaxis(ms["opc"], 0, -1),
             "valid_t": jnp.moveaxis(ms["valid"].astype(jnp.uint16), 0, -1),
+            "invoke_t": jnp.moveaxis(ms["invoke"].astype(jnp.uint16), 0, -1),
         }
         return ((agent2 if flags.has_agent else agent), env), out
 
@@ -112,7 +129,7 @@ def _run_sweep(batch, tom_cands, cfg, spec, agent_cfg, n_epochs, n_episodes,
                                               length=n_episodes)
     # outs leaves are (E, L, S, ...); present them cell-major.
     outs = {k: jnp.moveaxis(v, 0, 2) for k, v in outs.items()}
-    return outs, env_fin
+    return outs, env_fin, (agent_fin if want_agent else None)
 
 
 @dataclasses.dataclass
@@ -120,12 +137,15 @@ class SweepResult:
     scenarios: list[Scenario]
     cfg: NMPConfig
     metrics: dict[str, np.ndarray]   # (B, E) scalars; energy (B, E, EN_N);
-                                     # opc_t/valid_t (B, E, n_epochs)
+                                     # opc_t/valid_t/invoke_t (B, E, n_epochs)
     final_env: Any                   # EnvState stacked over the lane axis
     n_episodes: int                  # common (padded) episode count E
     wall_s: float                    # build + compile + run wall time
     plan: GridPlan | None = None     # the executed plan (seed folding, groups)
     n_devices: int = 1               # mesh width the sweep ran on
+    store: Any = None                # the PolicyStore holding the grid's
+                                     # final agent lineages (None when no
+                                     # lane declared a lineage)
 
     def episode_summary(self, lane: int, episode: int | None = None) -> dict:
         """Per-(lane, episode) summary with the same keys as stats.summarize.
@@ -164,6 +184,16 @@ class SweepResult:
         return resample_opc(self.metrics["opc_t"][lane, e],
                             self.metrics["valid_t"][lane, e], samples)
 
+    def invocations(self, lane: int, episode: int | None = None) -> int:
+        """Agent invocations in one episode (all episodes when None) — the
+        paper's natural x-axis for convergence ("invocations to threshold
+        OPC", see benchmarks/bench_continual.py)."""
+        sc = self.scenarios[lane]
+        inv = self.metrics["invoke_t"][lane]
+        if episode is not None:
+            return int(inv[episode].sum())
+        return int(inv[:sc.total_episodes].sum())
+
     # ---- variance bands over the folded seed axis ----
 
     def seed_group(self, lane: int) -> list[int]:
@@ -200,12 +230,43 @@ class SweepResult:
         return tls.mean(axis=0), tls.std(axis=0)
 
 
+def _warm_agent_batch(group, n_lanes_padded: int, store, agent_cfg):
+    """Initial agent batch for a lineage group: flat (L*S,) cells, lane-major.
+
+    A cell whose lineage tag is in the store warm-starts from the stored
+    agent (via `PolicyStore.checkout`, which applies the scenario-boundary
+    handoff); a fresh tag cold-starts the lineage with the cell's own seed.
+    Device-divisibility padding lanes repeat lane 0's cells, mirroring
+    `partition.pad_group_batch`."""
+    cells = []
+    for lane in group.lanes:
+        tag = lane.scenario.lineage
+        # one checkout (host->device import) per tag; seed replicas reuse the
+        # read-only cell and jnp.stack below gives each its own copy
+        warm = (store.checkout(tag)
+                if store is not None and tag in store else None)
+        for seed in lane.seeds:
+            cells.append(warm if warm is not None
+                         else agent_mod.cold_start(int(seed), agent_cfg))
+    lane0 = cells[:group.n_seeds]
+    for _ in range(n_lanes_padded - group.n_lanes):
+        cells.extend(lane0)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
+
+
 def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
-             agent_cfg=None) -> SweepResult:
+             agent_cfg=None, store=None) -> SweepResult:
     """Run every scenario cell of a grid through the plan -> partition ->
     execute pipeline: one batched, jitted program per lane group, the folded
     seed axis vmapped inside each lane, the lane axis sharded over the device
     mesh when more than one device is visible.
+
+    `store` is a `continual.PolicyStore` carrying agent lineages across
+    run_grid calls: lanes whose `Scenario.lineage` tag it holds warm-start
+    from the stored agent, fresh tags cold-start, and every tag's final
+    agent is written back (the store is updated in place and also returned
+    as `SweepResult.store`).  With no lineage lanes the store is untouched
+    and the compiled programs are exactly the historical cold-start ones.
 
     Returns a SweepResult whose per-cell `cycles`/`ops`/`opc` match the serial
     `run_episode`/`run_program` protocol bit-for-bit (see module docstring).
@@ -218,22 +279,28 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
     mesh = partition.build_mesh()
     tom_cands = partition.replicate(plan_mod.plan_tom_candidates(plan, cfg),
                                     mesh)
+    if store is None and plan.lineage_tags():
+        from repro.nmp.continual import PolicyStore
+        store = PolicyStore()
 
     outs: list = [None] * len(scenarios)
     envs: list = [None] * len(scenarios)
     for group in plan.groups:
+        n_lanes_padded = partition.padded_lane_count(group.n_lanes, mesh)
         batch_np = plan_mod.build_group_batch(plan, group, cfg)
-        batch_np = partition.pad_group_batch(
-            batch_np, partition.padded_lane_count(group.n_lanes, mesh))
+        batch_np = partition.pad_group_batch(batch_np, n_lanes_padded)
         batch = partition.shard_group_batch(batch_np, mesh)
+        warm = (_warm_agent_batch(group, n_lanes_padded, store, agent_cfg)
+                if group.lineage else None)
         with warnings.catch_warnings():
             # int trace/ctx buffers have no same-shaped outputs to reuse;
             # their donation being unusable is expected, not a leak.
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            out, env_fin = _run_sweep(batch, tom_cands, cfg, spec, agent_cfg,
-                                      plan.n_epochs, group.n_episodes,
-                                      plan.ring_len, group.flags)
+            out, env_fin, agent_fin = _run_sweep(
+                batch, tom_cands, cfg, spec, agent_cfg, plan.n_epochs,
+                group.n_episodes, plan.ring_len, group.flags,
+                warm_agent=warm, want_agent=group.lineage)
         out = jax.block_until_ready(out)
         pad_e = plan.n_episodes - group.n_episodes
         for li, lane in enumerate(group.lanes):
@@ -249,13 +316,25 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
                             lambda a, li=li, si=si: np.asarray(a[li, si]),
                             env_fin))
                 outs[i], envs[i] = cells[si]
+        if group.lineage:
+            # Hand every tag's final agent back to the store.  When several
+            # cells share a tag (seed replicas, repeated tags), the lineage
+            # continues from the first cell of the last lane declaring it.
+            S = group.n_seeds
+            for li, lane in enumerate(group.lanes):
+                cell = jax.tree.map(
+                    lambda a, li=li, s=lane.slots[0]: np.asarray(a[li * S + s]),
+                    agent_fin)
+                store.put(lane.scenario.lineage, cell,
+                          scenario=lane.scenario.name)
 
     metrics = {k: np.stack([o[k] for o in outs]) for k in outs[0]}
     final_env = jax.tree.map(lambda *xs: np.stack(xs), *envs)
     return SweepResult(scenarios=scenarios, cfg=cfg, metrics=metrics,
                        final_env=final_env, n_episodes=plan.n_episodes,
                        wall_s=time.time() - t0, plan=plan,
-                       n_devices=partition.mesh_desc(mesh)["n_devices"])
+                       n_devices=partition.mesh_desc(mesh)["n_devices"],
+                       store=store)
 
 
 def run_grid_serial(scenarios: Sequence[Scenario],

@@ -105,6 +105,18 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_meta(self, step: int | None = None) -> dict:
+        """Checkpoint metadata (step, extras, per-leaf shapes/dtypes) without
+        loading any arrays.  Restore targets whose tree *structure* is data-
+        dependent (e.g. a PolicyStore's tag -> agent map) read this first to
+        build the template `restore` maps leaves onto."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with open(os.path.join(self.dir, f"step_{step:09d}",
+                               "meta.json")) as f:
+            return json.load(f)
+
     def restore(self, template: PyTree, step: int | None = None,
                 shardings: PyTree | None = None, host_id: int = 0
                 ) -> tuple[PyTree, dict]:

@@ -1,0 +1,300 @@
+"""Continual-learning lifecycle layer: PolicyStore warm starts, lifetime
+exploration decay, checkpoint/restore bit-exactness, and program-switch
+streams (nmp.continual + the sweep's lineage groups).
+
+The cold-start path is covered by the golden + sweep-equivalence suites; the
+tests here pin the *new* semantics: a lineage's DQN carries across run_grid
+calls (weights, replay, Adam moments, RNG, global_step), exploration decays
+over the agent's lifetime instead of restarting per scenario, and a store
+checkpointed mid-stream restores — in a fresh process — to reproduce the
+remaining stream bit-exactly.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import agent as A
+from repro.nmp import NMPConfig, make_trace
+from repro.nmp.continual import PolicyStore, run_stream
+from repro.nmp.engine import default_agent_cfg
+from repro.nmp.scenarios import Scenario, build_stream, continual_stream
+from repro.nmp.sweep import run_grid
+
+CFG = NMPConfig()
+ACFG = default_agent_cfg(CFG)
+
+
+def _leaves_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               and np.asarray(x).dtype == np.asarray(y).dtype
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Agent lifecycle primitives
+# ---------------------------------------------------------------------------
+
+def test_cold_start_counters_and_template_structure():
+    ag = A.cold_start(3, ACFG)
+    assert int(ag.step) == int(ag.global_step) == 0
+    tmpl = A.agent_template(ACFG)
+    assert (jax.tree_util.tree_structure(ag)
+            == jax.tree_util.tree_structure(tmpl))
+    for a, t in zip(jax.tree.leaves(ag), jax.tree.leaves(tmpl)):
+        assert a.shape == t.shape and a.dtype == t.dtype
+
+
+def test_hand_off_resets_scenario_counter_keeps_lifetime():
+    ag = A.cold_start(0, ACFG)
+    _, ag = A.act(ag, ACFG, jnp.zeros(ACFG.dqn.state_dim))
+    _, ag = A.act(ag, ACFG, jnp.zeros(ACFG.dqn.state_dim))
+    assert int(ag.step) == int(ag.global_step) == 2
+    ho = A.hand_off(ag)
+    assert int(ho.step) == 0 and int(ho.global_step) == 2
+    assert _leaves_equal(ho.params, ag.params)
+    assert _leaves_equal(ho.replay, ag.replay)
+    np.testing.assert_array_equal(np.asarray(ho.rng), np.asarray(ag.rng))
+
+
+def test_epsilon_decays_over_lifetime_not_per_scenario():
+    """The ε schedule keys on global_step: after a handoff the agent keeps
+    exploiting instead of rewinding to eps_start (the satellite fix — the
+    historical schedule restarted with every scenario)."""
+    ag = A.cold_start(0, ACFG)
+    eps0 = float(A.epsilon(ACFG, ag.global_step))
+    for _ in range(60):
+        _, ag = A.act(ag, ACFG, jnp.zeros(ACFG.dqn.state_dim))
+    ag = A.hand_off(ag)                      # scenario boundary
+    eps_warm = float(A.epsilon(ACFG, ag.global_step))
+    assert eps_warm < eps0                   # no reset to eps_start
+    assert np.isclose(eps0, ACFG.eps_start)
+
+
+def test_store_put_get_checkout_and_tag_validation():
+    store = PolicyStore()
+    ag = A.cold_start(0, ACFG)
+    _, ag = A.act(ag, ACFG, jnp.zeros(ACFG.dqn.state_dim))
+    store.put("km", ag, scenario="KM")
+    assert "km" in store and store.tags == ["km"] and len(store) == 1
+    assert store.global_step("km") == 1
+    assert store.meta["km"]["scenario"] == "KM"
+    got = store.checkout("km")
+    assert int(got.step) == 0 and int(got.global_step) == 1
+    assert _leaves_equal(got.params, ag.params)
+    for bad in ("", "a/b", 7):
+        with pytest.raises(ValueError, match="lineage tag"):
+            store.put(bad, ag)
+
+
+# ---------------------------------------------------------------------------
+# Warm-start grids
+# ---------------------------------------------------------------------------
+
+def _phase(tr, name, lineage="t", episodes=1):
+    return [Scenario(name=name, trace=tr, mapper="aimm", episodes=episodes,
+                     lineage=lineage)]
+
+
+def test_run_grid_threads_lineage_through_store():
+    tr = make_trace("KM", n_ops=384)
+    r1 = run_grid(_phase(tr, "p0"), CFG)
+    store = r1.store
+    assert store is not None and store.tags == ["t"]
+    gs1 = store.global_step("t")
+    assert gs1 == r1.invocations(0) > 0
+    r2 = run_grid(_phase(tr, "p1"), CFG, store=store)
+    assert r2.store is store                 # updated in place
+    assert store.global_step("t") == gs1 + r2.invocations(0)
+    assert store.meta["t"]["phases"] == 2
+    assert store.meta["t"]["scenario"] == "p1"
+
+
+def test_warm_start_changes_trajectory_cold_grid_has_no_store():
+    """A warm-started lane must actually differ from a cold lane of the same
+    scenario (the carried DQN/replay/ε change decisions), and a grid without
+    lineages must not grow a store."""
+    tr = make_trace("KM", n_ops=384)
+    store = run_grid(_phase(tr, "p0", episodes=2), CFG).store
+    warm = run_grid(_phase(tr, "p1"), CFG, store=store)
+    cold = run_grid(_phase(tr, "p1"), CFG)   # fresh store => cold lineage
+    assert (warm.metrics["cycles"][0, 0] != cold.metrics["cycles"][0, 0]
+            or warm.invocations(0) != cold.invocations(0))
+    plain = run_grid([Scenario(name="km", trace=tr, mapper="aimm")], CFG)
+    assert plain.store is None
+
+
+def test_fresh_lineage_matches_inline_cold_start_bitwise():
+    """A lineage lane whose tag is absent cold-starts the lineage: the warm-
+    capable program (agent batch passed in) must reproduce the historical
+    in-jit cold start bit-for-bit for the same scenario."""
+    tr = make_trace("KM", n_ops=384)
+    lin = run_grid(_phase(tr, "km", episodes=2), CFG)
+    cold = run_grid([Scenario(name="km", trace=tr, mapper="aimm",
+                              episodes=2)], CFG)
+    for k in ("cycles", "ops", "opc_t", "invoke_t"):
+        np.testing.assert_array_equal(lin.metrics[k], cold.metrics[k],
+                                      err_msg=k)
+
+
+def test_run_stream_equals_manual_chained_run_grids():
+    stream = build_stream("switch", n_ops_per_app=384, episodes=1,
+                          include_baseline=False)
+    res = run_stream(stream, CFG)
+    store = PolicyStore()
+    for pi, phase in enumerate(stream):
+        manual = run_grid(phase, CFG, store=store)
+        for k in ("cycles", "ops", "opc_t"):
+            np.testing.assert_array_equal(res.phases[pi].metrics[k],
+                                          manual.metrics[k], err_msg=k)
+    assert store.global_step("stream") == res.store.global_step("stream")
+
+
+def test_continual_stream_builder_shapes():
+    stream = continual_stream(n_ops_per_app=256, episodes=2)
+    assert len(stream) == 3
+    for phase in stream:
+        assert [sc.mapper for sc in phase] == ["none", "aimm"]
+        assert phase[1].lineage == "stream"
+    # co-runner phase merges per-app traces, single phases reuse them
+    assert stream[1][1].trace.n_ops == 512
+    assert stream[0][1].trace is stream[0][0].trace
+    names = [sc.name for phase in stream for sc in phase]
+    assert len(set(names)) == len(names)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / restore
+# ---------------------------------------------------------------------------
+
+def test_store_checkpoint_roundtrip_bit_exact(tmp_path):
+    """Every AgentState leaf — replay buffer (f32/i32), Adam moments, the
+    uint32 PRNG key, counters — survives save/restore bit-exactly, via an
+    RNG-free template in the restoring process."""
+    tr = make_trace("KM", n_ops=384)
+    store = run_grid(_phase(tr, "p0", episodes=2), CFG).store
+    step = store.save(str(tmp_path))
+    back = PolicyStore.restore(str(tmp_path), ACFG, step=step)
+    a, b = store.get("t"), back.get("t")
+    assert _leaves_equal(a, b)
+    assert np.asarray(b.rng).dtype == np.uint32
+    assert np.asarray(b.replay.a).dtype == np.int32
+    assert np.asarray(b.opt_state["m"]["w0"]).dtype == np.float32
+    assert back.meta["t"]["global_step"] == store.global_step("t")
+    # repeated saves form a history; default step continues it, and every
+    # step is kept (keep=0) — each phase of a stream must stay a valid
+    # resume point, beyond CheckpointManager's default retention of 3
+    assert store.save(str(tmp_path)) == step + 1
+    for _ in range(3):
+        store.save(str(tmp_path))
+    from repro.train.checkpoint import CheckpointManager
+    assert CheckpointManager(str(tmp_path)).all_steps() == [0, 1, 2, 3, 4]
+    assert _leaves_equal(
+        PolicyStore.restore(str(tmp_path), ACFG, step=0).get("t"), a)
+
+
+_RESUME_SCRIPT = textwrap.dedent("""
+    import sys
+    import numpy as np
+    from repro.nmp import NMPConfig
+    from repro.nmp.continual import PolicyStore, run_stream
+    from repro.nmp.engine import default_agent_cfg
+    from repro.nmp.scenarios import build_stream
+
+    ckpt_dir, out = sys.argv[1], sys.argv[2]
+    cfg = NMPConfig()
+    stream = build_stream("switch", n_ops_per_app=384, episodes=1,
+                          include_baseline=False)
+    store = PolicyStore.restore(ckpt_dir, default_agent_cfg(cfg), step=1)
+    res = run_stream(stream[2:], cfg, store=store)
+    np.savez(out, **{k: v for k, v in res.phases[0].metrics.items()})
+    print("RESUME-OK")
+""")
+
+
+@pytest.mark.slow
+def test_midstream_restore_reproduces_remaining_stream(tmp_path):
+    """Checkpoint after phase 2 of a 3-phase stream, restore in a *fresh
+    process*, run the remaining phase: metrics must match the uninterrupted
+    stream bit-for-bit (the acceptance bar for the lifecycle layer)."""
+    stream = build_stream("switch", n_ops_per_app=384, episodes=1,
+                          include_baseline=False)
+    res = run_stream(stream, CFG, checkpoint_dir=str(tmp_path / "ck"))
+    out = tmp_path / "resumed.npz"
+    proc = subprocess.run(
+        [sys.executable, "-c", _RESUME_SCRIPT, str(tmp_path / "ck"),
+         str(out)],
+        env=dict(os.environ), capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "RESUME-OK" in proc.stdout
+    resumed = np.load(out)
+    want = res.phases[2].metrics
+    for k in sorted(want):
+        np.testing.assert_array_equal(want[k], resumed[k], err_msg=k)
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    import numpy as np
+    import jax
+    assert jax.device_count() == 4, jax.devices()
+
+    from repro.nmp import NMPConfig
+    from repro.nmp.continual import PolicyStore
+    from repro.nmp.engine import default_agent_cfg
+    from repro.nmp.scenarios import Scenario, seed_variants
+    from repro.nmp.sweep import run_grid
+    from repro.nmp.traces import make_trace
+
+    cfg = NMPConfig()
+    acfg = default_agent_cfg(cfg)
+    tr = make_trace("KM", n_ops=256)
+
+    def phase(name, lineage):
+        return seed_variants(Scenario(name=name, trace=tr, mapper="aimm",
+                                      lineage=lineage), seeds=(0, 1, 2))
+
+    ckpt = os.environ["CONT_CKPT_DIR"]
+    os.environ["REPRO_SWEEP_DEVICES"] = "4"
+    r1 = run_grid(phase("p0", "a") + phase("p0b", "b"), cfg)
+    assert r1.n_devices == 4
+    r1.store.save(ckpt, step=0)
+
+    # restore onto the sharded host and finish; then the same finish on one
+    # device must match bit-for-bit
+    outs = {}
+    for dev in ("4", "1"):
+        os.environ["REPRO_SWEEP_DEVICES"] = dev
+        store = PolicyStore.restore(ckpt, acfg, step=0)
+        outs[dev] = run_grid(phase("p1", "a") + phase("p1b", "b"), cfg,
+                             store=store)
+    assert (outs["4"].n_devices, outs["1"].n_devices) == (4, 1)
+    for k in sorted(outs["1"].metrics):
+        np.testing.assert_array_equal(outs["1"].metrics[k],
+                                      outs["4"].metrics[k], err_msg=k)
+    print("SHARDED-RESTORE-OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_restore_bit_identical_on_forced_host_devices(tmp_path):
+    """A store saved from a sharded (forced 4-device) run restores onto both
+    a sharded and a single-device host and finishes the stream identically —
+    warm lineage lanes included (3-seed fold + non-divisible lane padding)."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS=("--xla_force_host_platform_device_count=4 "
+                   + os.environ.get("XLA_FLAGS", "")),
+        JAX_PLATFORMS="cpu",
+        CONT_CKPT_DIR=str(tmp_path / "ck"),
+    )
+    env.pop("REPRO_SWEEP_DEVICES", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED-RESTORE-OK" in proc.stdout

@@ -90,6 +90,78 @@ def test_distinct_trace_objects_do_not_fold():
     assert plan.n_lanes == 2
 
 
+def test_plan_groups_warm_lineage_lanes_apart_from_cold():
+    """Lineage (warm-capable) agent lanes compile separately from plain
+    cold-start agent lanes: cold group first (the exact historical program),
+    then the lineage group, then deterministic lanes — and GridPlan records
+    the per-scenario lineage map."""
+    tr = make_trace("KM", n_ops=384)
+    grid = [
+        Scenario(name="cold", trace=tr, mapper="aimm"),
+        Scenario(name="warm", trace=tr, mapper="aimm", lineage="tagA"),
+        Scenario(name="det", trace=tr, mapper="tom"),
+        Scenario(name="warm2", trace=tr, mapper="aimm", lineage="tagB",
+                 seed=1),
+    ]
+    plan = plan_grid(grid, CFG)
+    assert [(g.has_agent, g.lineage, g.n_lanes) for g in plan.groups] == [
+        (True, False, 1), (True, True, 2), (False, False, 1)]
+    assert plan.agent_lineage == (None, "tagA", None, "tagB")
+    assert plan.lineage_tags() == ("tagA", "tagB")
+    # lineage is part of the fold key: same trace/seed, different tag => no fold
+    assert all(len(ln.indices) == 1 for g in plan.groups for ln in g.lanes)
+
+
+def test_plan_lineage_on_non_agent_lane_is_inert():
+    """A lineage tag on a deterministic or scripted lane carries no agent:
+    the plan normalizes it away instead of spawning a warm group."""
+    tr = make_trace("KM", n_ops=384)
+    grid = [Scenario(name="det", trace=tr, mapper="tom", lineage="t"),
+            Scenario(name="scripted", trace=tr, mapper="aimm",
+                     forced_action=1, lineage="t")]
+    plan = plan_grid(grid, CFG)
+    assert all(not g.lineage for g in plan.groups)
+    assert plan.agent_lineage == (None, None)
+    assert plan.lineage_tags() == ()
+
+
+def test_plan_lineage_seed_variants_fold_into_one_warm_lane():
+    """Seed replicas of one lineage-tagged cell still fold onto the seed
+    axis (they share the tag and the fold key)."""
+    tr = make_trace("KM", n_ops=384)
+    grid = seed_variants(Scenario(name="w", trace=tr, mapper="aimm",
+                                  lineage="t"), seeds=(0, 1, 2))
+    plan = plan_grid(grid, CFG)
+    (group,) = plan.groups
+    assert group.lineage and group.n_lanes == 1 and group.n_seeds == 3
+
+
+def test_plan_rejects_invalid_lineage_tags_at_plan_time():
+    """A malformed tag must fail before anything compiles or simulates, not
+    in the post-run store write-back."""
+    tr = make_trace("KM", n_ops=384)
+    for bad in ("", "a/b"):
+        with pytest.raises(ValueError, match="lineage tag"):
+            plan_grid([Scenario(name="x", trace=tr, mapper="aimm",
+                                lineage=bad)], CFG)
+
+
+def test_plan_rejects_ragged_lineage_episode_counts():
+    """Padding episodes would over-train a lineage's agent past its schedule;
+    ragged lineage groups must be refused, not silently padded."""
+    tr = make_trace("KM", n_ops=384)
+    grid = [Scenario(name="a", trace=tr, mapper="aimm", lineage="t",
+                     episodes=1),
+            Scenario(name="b", trace=tr, mapper="aimm", lineage="u",
+                     episodes=3)]
+    with pytest.raises(ValueError, match="episode count"):
+        plan_grid(grid, CFG)
+    # cold lanes keep the historical pad-to-max behavior
+    cold = [Scenario(name="a", trace=tr, mapper="aimm", episodes=1),
+            Scenario(name="b", trace=tr, mapper="aimm", episodes=3)]
+    assert plan_grid(cold, CFG).groups[0].n_episodes == 3
+
+
 # ---------------------------------------------------------------------------
 # Partition layer
 # ---------------------------------------------------------------------------

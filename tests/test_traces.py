@@ -61,3 +61,57 @@ def test_merge_traces_multiprogram():
                                    m.src1[m.program_id == 0]]))
     assert (owner[p0] == 0).all()
     assert m.iter_ops > 0
+
+
+def _stream_of(m, pid):
+    """Ops of program `pid` in merge order, shifted back to its page space."""
+    sel = m.program_id == pid
+    return m.dest[sel], m.src1[sel], m.src2[sel]
+
+
+def test_merge_traces_non_divisible_interleave_remainder():
+    """Op counts that don't divide the interleave burst: the trailing partial
+    bursts must still land, every op exactly once, stream order preserved."""
+    t1 = make_trace("KM", n_ops=100)      # 100 = 3*32 + 4
+    t2 = make_trace("RD", n_ops=50)       # 50 = 32 + 18
+    m = merge_traces([t1, t2], interleave=32)
+    assert m.n_ops == 150
+    assert np.bincount(m.program_id, minlength=2).tolist() == [100, 50]
+    off = t1.n_pages
+    for pid, t, o in ((0, t1, 0), (1, t2, off)):
+        d, s1, s2 = _stream_of(m, pid)
+        np.testing.assert_array_equal(d - o, t.dest)     # order preserved
+        np.testing.assert_array_equal(s1 - o, t.src1)
+        np.testing.assert_array_equal(s2 - o, t.src2)
+
+
+def test_merge_traces_single_app_combo():
+    """A one-program 'combo' is the identity modulo nothing: same ops, same
+    pages, all program ids zero."""
+    t = make_trace("SPMV", n_ops=300)
+    m = merge_traces([t], interleave=32)
+    assert m.n_ops == t.n_ops and m.n_pages == t.n_pages
+    np.testing.assert_array_equal(m.dest, t.dest)
+    np.testing.assert_array_equal(m.src1, t.src1)
+    np.testing.assert_array_equal(m.src2, t.src2)
+    assert (m.program_id == 0).all()
+    np.testing.assert_array_equal(m.read_write, t.read_write)
+
+
+def test_merge_traces_empty_tail_after_short_program_exhausts():
+    """Very unequal lengths: once the short program drains, the tail must be
+    purely the long program's remaining ops (no zero-filled filler ops), and
+    RW flags must carry over per page space."""
+    t1 = make_trace("KM", n_ops=512)
+    t2 = make_trace("RD", n_ops=64)       # drains after 2 bursts
+    m = merge_traces([t1, t2], interleave=32)
+    assert m.n_ops == 576
+    # tail beyond the last t2 op is all program 0
+    last_p1 = np.max(np.nonzero(m.program_id == 1)[0])
+    assert (m.program_id[last_p1 + 1:] == 0).all()
+    assert m.program_id[last_p1 + 1:].size == 512 - (last_p1 + 1 - 64)
+    d, s1, s2 = _stream_of(m, 0)
+    np.testing.assert_array_equal(d, t1.dest)            # nothing dropped
+    off = t1.n_pages
+    np.testing.assert_array_equal(m.read_write[:off], t1.read_write)
+    np.testing.assert_array_equal(m.read_write[off:], t2.read_write)
