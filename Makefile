@@ -5,9 +5,12 @@
 #   make test-4dev    test-fast on a forced 4-device host platform (the sweep
 #                     partition layer shards every grid over a 4-wide mesh)
 #   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record
-#                     + the continual warm-vs-cold record, which writes
-#                     bench_out/BENCH_engine.json and BENCH_continual.json)
+#                     + the continual warm-vs-cold record + the topology-axis
+#                     record: writes bench_out/BENCH_engine.json,
+#                     BENCH_continual.json and BENCH_topology.json)
 #   make bench-continual  just the continual-stream warm-vs-cold benchmark
+#   make bench-topology   just the topology-axis benchmark (per-interconnect
+#                         learned-AIMM vs baseline + mesh warm-grid guard)
 #   make bench        every benchmark figure (BENCH_FULL=1 for paper scale)
 #   make profile      JAX profiler trace of one batched grid -> bench_out/profile
 
@@ -16,7 +19,8 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast test-4dev bench-smoke bench-continual bench profile
+.PHONY: test test-fast test-4dev bench-smoke bench-continual bench-topology \
+	bench profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,15 +28,21 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+# Forced 4-device host platform: the whole fast lane sharded, including the
+# topology equivalence tests (tests/test_topology.py runs the mixed-topology
+# grid against serial per-lane runs on the 4-wide lane mesh).
 test-4dev:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4 $$XLA_FLAGS" \
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	BENCH_ONLY=fig5,engine,continual $(PY) benchmarks/run.py
+	BENCH_ONLY=fig5,engine,continual,topology $(PY) benchmarks/run.py
 
 bench-continual:
 	BENCH_ONLY=continual $(PY) benchmarks/run.py
+
+bench-topology:
+	BENCH_ONLY=topology $(PY) benchmarks/run.py
 
 bench:
 	$(PY) benchmarks/run.py

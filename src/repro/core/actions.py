@@ -2,8 +2,11 @@
 
 Eight actions: six data/computation remaps plus two agent-invocation-interval
 adjustments. Remap targets are expressed relative to the hot page's *compute*
-cube in the 2D cube array (paper wording), with "near" = random neighbour and
-"far" = diagonally opposite cube.
+cube, with "near" = random neighbour and "far" = the topology's far table
+(the diagonally opposite cube on the paper's 2D mesh; the hop-farthest cube
+on other interconnects).  The target tables are precomputed per topology
+(`repro.nmp.topology.Topology.nbr`/`far`), so the action machinery is
+topology-agnostic gathers + one categorical draw.
 """
 from __future__ import annotations
 
@@ -33,37 +36,29 @@ ACTION_NAMES = (
 )
 
 
-def cube_xy(cube: jnp.ndarray, mesh_x: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    return cube % mesh_x, cube // mesh_x
+def random_neighbor(rng: jax.Array, cube: jnp.ndarray, nbr: jnp.ndarray,
+                    nbr_valid: jnp.ndarray) -> jnp.ndarray:
+    """Uniformly pick one of `cube`'s topology neighbours.
 
-
-def xy_cube(x: jnp.ndarray, y: jnp.ndarray, mesh_x: int) -> jnp.ndarray:
-    return y * mesh_x + x
-
-
-def random_neighbor(rng: jax.Array, cube: jnp.ndarray, mesh_x: int, mesh_y: int) -> jnp.ndarray:
-    """Uniformly pick one of the (up to 4) mesh neighbours of `cube`.
-
-    Off-mesh candidates are replaced by the cube itself before sampling, then
-    invalid picks fall back to a valid direction, so the result is always a
-    legal cube id.
-    """
-    x, y = cube_xy(cube, mesh_x)
-    cand_x = jnp.stack([x - 1, x + 1, x, x])
-    cand_y = jnp.stack([y, y, y - 1, y + 1])
-    valid = (cand_x >= 0) & (cand_x < mesh_x) & (cand_y >= 0) & (cand_y < mesh_y)
-    # Sample a direction proportional to validity.
+    `nbr`/`nbr_valid` are the topology's (C, D) neighbour table and validity
+    mask (invalid slots hold the cube itself).  Sampling is a categorical
+    draw over the D slots proportional to validity, so an invalid slot is
+    never picked and the result is always a legal cube id.  On the 2D mesh
+    the table keeps the historical candidate slot order [x-1, x+1, y-1, y+1]
+    and D = 4, so the draw is bit-identical to the historical coordinate
+    arithmetic."""
+    cand = nbr[cube]                                 # (D,)
+    valid = nbr_valid[cube]
     p = valid.astype(jnp.float32)
     p = p / jnp.maximum(p.sum(), 1.0)
-    d = jax.random.choice(rng, 4, p=p)
-    nx = jnp.clip(cand_x[d], 0, mesh_x - 1)
-    ny = jnp.clip(cand_y[d], 0, mesh_y - 1)
-    return xy_cube(nx, ny, mesh_x)
+    d = jax.random.choice(rng, cand.shape[0], p=p)
+    return cand[d]
 
 
-def diagonal_opposite(cube: jnp.ndarray, mesh_x: int, mesh_y: int) -> jnp.ndarray:
-    x, y = cube_xy(cube, mesh_x)
-    return xy_cube(mesh_x - 1 - x, mesh_y - 1 - y, mesh_x)
+def far_target(cube: jnp.ndarray, far: jnp.ndarray) -> jnp.ndarray:
+    """The topology's "far" remap target for `cube` (precomputed table: the
+    mirror-diagonal cube on the 2D mesh, the hop-farthest cube elsewhere)."""
+    return far[cube]
 
 
 def adjust_interval(level: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:

@@ -7,4 +7,5 @@ from repro.nmp.plan import GridPlan, plan_grid  # noqa: F401
 from repro.nmp.scenarios import (Scenario, build_stream,  # noqa: F401
                                  continual_stream, seed_variants)
 from repro.nmp.sweep import SweepResult, run_grid  # noqa: F401
+from repro.nmp.topology import TOPOLOGIES, Topology, get_topology  # noqa: F401
 from repro.nmp.traces import APPS, Trace, make_trace, merge_traces  # noqa: F401

@@ -13,6 +13,13 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class NMPConfig:
     # --- topology (Table 1) ---
+    # `topology` names a builder in nmp.topology.TOPOLOGIES ("mesh2d",
+    # "torus2d", "ring", "dragonfly"); mesh_x/mesh_y parameterize its
+    # geometry (ring: mesh_x*mesh_y cubes; dragonfly: mesh_y groups of
+    # mesh_x cubes).  The routing tensors are precomputed host-side from
+    # this declarative spec (nmp.topology.get_topology), so the config stays
+    # hashable and jit-static.
+    topology: str = "mesh2d"
     mesh_x: int = 4
     mesh_y: int = 4
     n_mcs: int = 4                    # one per CMP corner
@@ -23,6 +30,14 @@ class NMPConfig:
     # --- AIMM hardware ---
     page_cache_entries: int = 256     # page info cache (empirical, §7.6)
     migration_queue: int = 128
+    # page-info-cache history depths (paper Fig. 3; per-page hop / latency /
+    # migration-latency / action histories).  Also sizes the matching state-
+    # vector slices (core.state.StateSpec), so changing them changes the DQN
+    # input dim.
+    hop_hist: int = 8
+    lat_hist: int = 8
+    mig_hist: int = 4
+    act_hist: int = 4
     # --- memory / network geometry ---
     page_bytes: int = 4096
     link_bytes_per_cycle: int = 16    # 128-bit links

@@ -9,7 +9,11 @@ Epoch model (documented cost model; see DESIGN.md §2):
   window   : the next `window_sizes[interval_level]` ops of the trace
   schedule : technique (BNMP/LDB/PEI) picks a compute cube per op, then the
              AIMM compute-remap table overrides per-page
-  route    : packets s1->c, s2->c, c->d over XY routes; per-link flit loads
+  route    : packets s1->c, s2->c, c->d over the topology's precomputed
+             routes (nmp.topology: hop matrix + route-link incidence tensor,
+             built host-side per interconnect — XY on the paper's mesh,
+             minimal routes on torus/ring/dragonfly); per-link flit loads
+             are one gather + einsum, never per-epoch route construction
   time     : cycles = mc_inject + max(compute, link, dram serialization)
              + mean latency + NMP-table overflow stalls + migration stalls
   feedback : OPC = ops/cycles; reward = sign(dOPC); state vector from
@@ -78,9 +82,9 @@ from repro.core.state import StateSpec, build_state
 from repro.nmp import baselines
 from repro.nmp.config import NMPConfig
 from repro.nmp.migration import migration_cost
-from repro.nmp.network import hop_count, link_loads, n_links, nearest_mc
 from repro.nmp.paging import (PageInfoCache, default_alloc, init_page_cache,
                               lookup_or_insert, push_hist)
+from repro.nmp.topology import get_topology, hop_count, link_loads
 from repro.nmp.traces import Trace
 
 MAPPERS = ("none", "tom", "aimm")
@@ -238,7 +242,7 @@ def _init_env(page_table: jnp.ndarray, cfg: NMPConfig, spec: StateSpec,
     page_table = jnp.asarray(page_table, jnp.int32)
     P = page_table.shape[0]
     C, M = cfg.n_cubes, cfg.n_mcs
-    L = n_links(cfg)
+    L = get_topology(cfg).n_links
     return EnvState(
         page_to_cube=page_table,
         compute_remap=jnp.full((P,), -1, jnp.int32),
@@ -359,6 +363,7 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     P = env.page_to_cube.shape[0]
     C = cfg.n_cubes
     W = cfg.w_max
+    topo = get_topology(cfg)     # host-side tensors, trace-time constants
     is_tom = ctx.mapper == MAPPER_ID["tom"]
     is_aimm = ctx.mapper == MAPPER_ID["aimm"]
 
@@ -408,11 +413,11 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     fsrc = jnp.concatenate([s1cube, s2cube, ccube])
     fdst = jnp.concatenate([ccube, ccube, dcube])
     fw = jnp.concatenate([valid, valid, valid]) * cfg.packet_flits
-    loads = link_loads(fsrc, fdst, fw, cfg) + env.pending_mig_loads
+    loads = link_loads(topo, fsrc, fdst, fw) + env.pending_mig_loads
 
-    hops_op = (hop_count(s1cube, ccube, cfg.mesh_x)
-               + hop_count(s2cube, ccube, cfg.mesh_x)
-               + hop_count(ccube, dcube, cfg.mesh_x)).astype(jnp.float32)
+    hops_op = (hop_count(topo, s1cube, ccube)
+               + hop_count(topo, s2cube, ccube)
+               + hop_count(topo, ccube, dcube)).astype(jnp.float32)
     hops_total = jnp.sum(hops_op * valid)
     mean_hops = hops_total / jnp.maximum(w_valid, 1.0)
 
@@ -448,7 +453,8 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     dram_serial = jnp.max(acc_c * lat_c) / (cfg.n_vaults * 4.0)
 
     # ---- epoch cycles & OPC ----
-    mcq = jnp.zeros((cfg.n_mcs,)).at[nearest_mc(cfg)[dcube]].add(valid)
+    mcq = jnp.zeros((cfg.n_mcs,)).at[
+        jnp.asarray(topo.nearest_mc)[dcube]].add(valid)
     mc_inject = w_valid / (cfg.n_mcs * cfg.mc_issue_rate)
     # Hottest-link serialization with superlinear queuing amplification: a link
     # loaded far above the network average queues disproportionately (3-stage
@@ -574,7 +580,7 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
         tom_active = jnp.where(commit, best, env.tom_active)
         # remap data movement: amortized one-time link traffic + stall
         mig_stall_tom = jnp.where(commit,
-                                  changed * cfg.page_flits / (n_links(cfg) * 8.0),
+                                  changed * cfg.page_flits / (topo.n_links * 8.0),
                                   0.0)
         migrated_tom = jnp.where(commit, changed, 0.0)
     else:
@@ -652,10 +658,12 @@ def _epoch_apply(env: EnvState, mid: EpochMid, action: jnp.ndarray,
 
     if flags.any_aimm:
         # --- apply action (no-ops unless an aimm lane at an invocation) ---
+        topo = get_topology(cfg)
         hot_page = mid.hot_page
-        nbr = act_mod.random_neighbor(mid.k_nbr, mid.ccube_hot, cfg.mesh_x,
-                                      cfg.mesh_y)
-        diag = act_mod.diagonal_opposite(mid.ccube_hot, cfg.mesh_x, cfg.mesh_y)
+        nbr = act_mod.random_neighbor(mid.k_nbr, mid.ccube_hot,
+                                      jnp.asarray(topo.nbr),
+                                      jnp.asarray(topo.nbr_valid))
+        diag = act_mod.far_target(mid.ccube_hot, jnp.asarray(topo.far))
         is_data = (action == NEAR_DATA) | (action == FAR_DATA)
         is_comp = ((action == NEAR_COMPUTE) | (action == FAR_COMPUTE)
                    | (action == SOURCE_COMPUTE))
@@ -1006,7 +1014,12 @@ def _run_scan(trace, rw_pages, env, agent, tom_cands, ctx, cfg, spec,
 
 
 def state_spec_for(cfg: NMPConfig) -> StateSpec:
-    return StateSpec(n_cubes=cfg.n_cubes, n_mcs=cfg.n_mcs)
+    """State layout for a config: cube/MC counts plus the page-info-cache
+    history depths (configurable via NMPConfig; the paper's Fig. 3 defaults
+    leave the historical layout untouched)."""
+    return StateSpec(n_cubes=cfg.n_cubes, n_mcs=cfg.n_mcs,
+                     hop_hist=cfg.hop_hist, lat_hist=cfg.lat_hist,
+                     mig_hist=cfg.mig_hist, act_hist=cfg.act_hist)
 
 
 def default_agent_cfg(cfg: NMPConfig) -> AgentConfig:

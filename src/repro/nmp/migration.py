@@ -1,7 +1,9 @@
 """Page migration model (paper §5.3).
 
 A data-remap decision enqueues (page, new_cube) into the migration system.
-The MDMA streams the 4 KB frame over the XY route old->new:
+The MDMA streams the 4 KB frame over the topology's precomputed route
+old->new (XY on the paper's mesh; minimal routes elsewhere — see
+nmp.topology):
 
   * traffic   : page_flits x hops, charged to the link-load histogram of the
                 following epoch (migration shares the memory network),
@@ -16,7 +18,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.nmp.config import NMPConfig
-from repro.nmp.network import hop_count, link_loads
+from repro.nmp.topology import get_topology
 
 
 def migration_cost(old_cube: jnp.ndarray, new_cube: jnp.ndarray,
@@ -25,9 +27,12 @@ def migration_cost(old_cube: jnp.ndarray, new_cube: jnp.ndarray,
     """Cost of migrating one page.
 
     touches: number of window ops touching the page while it migrates.
-    Returns (latency_cycles, stall_cycles, link_load_vector).
+    Returns (latency_cycles, stall_cycles, link_load_vector).  An exact
+    no-op when old_cube == new_cube: zero latency, zero stall, zero loads
+    (the route incidence row of a self-route is empty on every topology).
     """
-    hops = hop_count(old_cube, new_cube, cfg.mesh_x).astype(jnp.float32)
+    topo = get_topology(cfg)
+    hops = jnp.asarray(topo.hops)[old_cube, new_cube].astype(jnp.float32)
     moving = (hops > 0).astype(jnp.float32)
     latency = moving * (cfg.page_flits + hops * cfg.t_router + cfg.t_page_walk)
     # Blocked accesses overlap the DMA; the epoch-level stall is a fraction of
@@ -36,6 +41,8 @@ def migration_cost(old_cube: jnp.ndarray, new_cube: jnp.ndarray,
     stall_frac = jnp.where(is_rw, 0.25, 0.05)
     stall = moving * (stall_frac * latency
                       + 4.0 * jnp.minimum(touches.astype(jnp.float32), 8.0))
-    loads = link_loads(old_cube[None], new_cube[None],
-                       jnp.asarray([cfg.page_flits]), cfg) * moving
+    # DMA traffic over the precomputed route: the page's flits on every link
+    # of the old->new path, from one gather of the incidence tensor.
+    loads = (jnp.asarray(topo.route_links)[old_cube, new_cube]
+             * cfg.page_flits * moving)
     return latency, stall, loads

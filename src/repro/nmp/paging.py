@@ -40,23 +40,33 @@ def hoard_alloc(n_pages: int, cfg: NMPConfig, program_of_page: np.ndarray,
                 seed: int = 0) -> np.ndarray:
     """HOARD-style: thread/program-private chunks -> contiguous cube regions.
 
-    Programs get disjoint, contiguous spans of cubes proportional to their page
-    counts; within a span, pages interleave across that span's cubes only.
+    Programs get contiguous spans of cubes proportional to their page counts;
+    within a span, pages interleave across that span's cubes only.  Programs
+    with zero pages (a program id gap, or a departed co-runner whose pages
+    were freed) claim no cubes at all — every cube goes to the programs that
+    actually hold pages, so a degenerate span can never starve them.  Spans
+    are disjoint whenever the populated programs fit the cube count; with
+    more populated programs than cubes, every program keeps a one-cube span
+    and the spans wrap round-robin (overlap is then unavoidable, but stays
+    balanced instead of piling onto cube 0).
     """
     program_of_page = np.asarray(program_of_page)
     n_prog = int(program_of_page.max()) + 1
     counts = np.bincount(program_of_page, minlength=n_prog).astype(np.float64)
-    share = np.maximum(np.round(counts / counts.sum() * cfg.n_cubes), 1).astype(int)
-    while share.sum() > cfg.n_cubes:
-        share[np.argmax(share)] -= 1
+    pop = np.flatnonzero(counts > 0)          # populated programs only
+    share = np.zeros(n_prog, int)
+    share[pop] = np.maximum(
+        np.round(counts[pop] / counts.sum() * cfg.n_cubes), 1).astype(int)
+    while share.sum() > cfg.n_cubes and (share[pop] > 1).any():
+        share[pop[np.argmax(share[pop])]] -= 1
     while share.sum() < cfg.n_cubes:
-        share[np.argmin(share)] += 1
+        share[pop[np.argmin(share[pop])]] += 1
     start = np.concatenate([[0], np.cumsum(share)[:-1]])
     table = np.zeros(n_pages, np.int32)
-    for p in range(n_prog):
+    for p in pop:
         idx = np.where(program_of_page == p)[0]
         span = max(share[p], 1)
-        table[idx] = start[p] + (np.arange(idx.size) % span)
+        table[idx] = (start[p] + (np.arange(idx.size) % span)) % cfg.n_cubes
     return table
 
 
@@ -72,7 +82,15 @@ class PageInfoCache(NamedTuple):
     act_hist: jnp.ndarray  # (E, 4) actions taken on the page
 
 
-def init_page_cache(cfg: NMPConfig, hop_h=8, lat_h=8, mig_h=4, act_h=4) -> PageInfoCache:
+def init_page_cache(cfg: NMPConfig, hop_h=None, lat_h=None, mig_h=None,
+                    act_h=None) -> PageInfoCache:
+    """Empty pooled cache.  History depths default to the config's
+    `hop_hist`/`lat_hist`/`mig_hist`/`act_hist` fields (paper defaults
+    8/8/4/4); explicit arguments override per call."""
+    hop_h = cfg.hop_hist if hop_h is None else hop_h
+    lat_h = cfg.lat_hist if lat_h is None else lat_h
+    mig_h = cfg.mig_hist if mig_h is None else mig_h
+    act_h = cfg.act_hist if act_h is None else act_h
     E = cfg.page_cache_entries
     return PageInfoCache(
         tag=jnp.full((E,), -1, jnp.int32),

@@ -14,13 +14,16 @@ execute:
     whose results provably cannot depend on the seed (deterministic
     mappers, see `seed_invariant`) collapse to a width-1 seed axis: one
     simulated cell serves every replica;
-  * **lane grouping**: lanes are grouped by DQN-liveness (`needs_agent`)
-    and agent-lineage mode (`lane_lineage`: warm-capable lanes whose agent
-    batch is threaded in/out of the program vs plain cold-start lanes),
-    with per-group `engine.BodyFlags` recording which machinery (AIMM
-    actions, TOM scoring, PEI thresholding) any lane of the group uses, so
-    unused features compile out.  A mixed grid compiles at most three
-    programs — one per group.
+  * **lane grouping**: lanes are grouped by DQN-liveness (`needs_agent`),
+    agent-lineage mode (`lane_lineage`: warm-capable lanes whose agent
+    batch is threaded in/out of the program vs plain cold-start lanes) and
+    cube topology (`scenario_topology`: interconnects have different link
+    spaces and routing tensors, so a mixed-topology grid compiles one
+    program per topology group), with per-group `engine.BodyFlags`
+    recording which machinery (AIMM actions, TOM scoring, PEI thresholding)
+    any lane of the group uses, so unused features compile out.  A
+    single-topology mixed grid compiles at most three programs — one per
+    agent-mode group — exactly the historical layout.
 
 `build_group_batch` materializes one group's numpy input batch (trace arrays
 per lane, episode seed schedules per (lane, seed)); the partition layer
@@ -45,6 +48,12 @@ from repro.nmp.scenarios import Scenario
 def needs_agent(sc: Scenario) -> bool:
     """A lane carries a live DQN iff it is a learned-policy AIMM cell."""
     return sc.mapper == "aimm" and sc.forced_action < 0
+
+
+def scenario_topology(sc: Scenario, cfg: NMPConfig) -> str:
+    """Effective cube interconnect of a lane: the scenario's own
+    `topology` tag, falling back to the sweep config's."""
+    return sc.topology if sc.topology is not None else cfg.topology
 
 
 def lane_lineage(sc: Scenario) -> str | None:
@@ -104,6 +113,9 @@ class GroupPlan:
     n_episodes: int              # per-group padded episode count
     n_seeds: int                 # common (padded) seed-axis width S
     lineage: bool = False        # agent batch threaded in/out of the program
+    topology: str = "mesh2d"     # cube interconnect every lane of the group
+                                 # simulates (the execute layer runs the
+                                 # group under cfg resolved to it)
 
     @property
     def n_lanes(self) -> int:
@@ -124,6 +136,9 @@ class GridPlan:
                                  # per-scenario PolicyStore tag (grid order):
                                  # None = cold-start, shared tag = lanes in
                                  # one warm-start / shared-agent group
+    topologies: tuple[str, ...] = ()
+                                 # per-scenario effective interconnect (grid
+                                 # order, cfg fallback resolved)
 
     @property
     def n_lanes(self) -> int:
@@ -192,6 +207,25 @@ def group_flags(group: Sequence[Scenario], cfg: NMPConfig,
 def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
     scenarios = tuple(scenarios)
     assert scenarios, "empty scenario grid"
+    from repro.nmp.topology import validate_topology
+    eff_topo = tuple(scenario_topology(sc, cfg) for sc in scenarios)
+    for t in dict.fromkeys(eff_topo):
+        validate_topology(t)
+    # A lineage tag spanning topologies would compile into separate
+    # per-topology programs whose final agents overwrite each other in the
+    # PolicyStore (last group wins) — refuse it like the ragged-episode case
+    # instead of corrupting the lineage (run per-topology phases as separate
+    # run_grid calls, or use distinct tags).
+    tag_topos: dict[str, set] = {}
+    for i, sc in enumerate(scenarios):
+        if lane_lineage(sc) is not None:
+            tag_topos.setdefault(sc.lineage, set()).add(eff_topo[i])
+    for tag, topos in tag_topos.items():
+        if len(topos) > 1:
+            raise ValueError(
+                f"lineage {tag!r} spans topologies {sorted(topos)}; a tag's "
+                "lanes must share one interconnect per grid (use distinct "
+                "tags or separate run_grid calls)")
 
     # The spatial envelope (ops/pages/epochs/ring) is shared across both
     # agent-mode groups so the merged final_env and per-epoch timelines
@@ -207,43 +241,50 @@ def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
     # Group order: cold agent lanes first (the exact historical program),
     # then warm-capable lineage lanes, then deterministic lanes — grids
     # without lineages keep the historical two-group layout untouched.
+    # Within an agent mode, lanes split further by cube topology (first-seen
+    # order): interconnects differ in link count and routing tensors, so
+    # each topology group compiles its own program; a single-topology grid
+    # keeps the exact historical grouping.
     groups = []
     for has_agent, lineage in ((True, False), (True, True), (False, False)):
-        idxs = [i for i, sc in enumerate(scenarios)
-                if needs_agent(sc) == has_agent
-                and (lane_lineage(sc) is not None) == (has_agent and lineage)]
-        if not idxs:
-            continue
-        lanes, n_seeds = _pad_seed_axis(_fold_lanes(scenarios, idxs))
-        members = [scenarios[i] for i in idxs]
-        group_eps = max(sc.total_episodes for sc in members)
-        if lineage:
-            # Fail bad tags at plan time, not in the post-simulation
-            # write-back (continual.check_tag enforces the same rule at
-            # PolicyStore.put).
-            from repro.nmp.continual import check_tag
-            for sc in members:
-                check_tag(sc.lineage)
-            # A padding episode would keep training a lineage's agent past
-            # its scenario's schedule and hand the extra training to the next
-            # phase — refuse ragged episode counts instead of corrupting the
-            # lineage (run ragged phases as separate run_grid calls).
-            ragged = {sc.total_episodes for sc in members}
-            if len(ragged) > 1:
-                raise ValueError(
-                    "lineage lanes must share one episode count per grid "
-                    f"(got {sorted(ragged)}); split ragged phases into "
-                    "separate run_grid calls")
-        groups.append(GroupPlan(
-            lanes=tuple(lanes), has_agent=has_agent,
-            flags=group_flags(members, cfg, has_agent),
-            n_episodes=group_eps,
-            n_seeds=n_seeds, lineage=lineage))
+        mode_idxs = [i for i, sc in enumerate(scenarios)
+                     if needs_agent(sc) == has_agent
+                     and (lane_lineage(sc) is not None) == (has_agent
+                                                            and lineage)]
+        for topo in dict.fromkeys(eff_topo[i] for i in mode_idxs):
+            idxs = [i for i in mode_idxs if eff_topo[i] == topo]
+            lanes, n_seeds = _pad_seed_axis(_fold_lanes(scenarios, idxs))
+            members = [scenarios[i] for i in idxs]
+            group_eps = max(sc.total_episodes for sc in members)
+            if lineage:
+                # Fail bad tags at plan time, not in the post-simulation
+                # write-back (continual.check_tag enforces the same rule at
+                # PolicyStore.put).
+                from repro.nmp.continual import check_tag
+                for sc in members:
+                    check_tag(sc.lineage)
+                # A padding episode would keep training a lineage's agent
+                # past its scenario's schedule and hand the extra training to
+                # the next phase — refuse ragged episode counts instead of
+                # corrupting the lineage (run ragged phases as separate
+                # run_grid calls).
+                ragged = {sc.total_episodes for sc in members}
+                if len(ragged) > 1:
+                    raise ValueError(
+                        "lineage lanes must share one episode count per grid "
+                        f"(got {sorted(ragged)}); split ragged phases into "
+                        "separate run_grid calls")
+            groups.append(GroupPlan(
+                lanes=tuple(lanes), has_agent=has_agent,
+                flags=group_flags(members, cfg, has_agent),
+                n_episodes=group_eps,
+                n_seeds=n_seeds, lineage=lineage, topology=topo))
     return GridPlan(scenarios=scenarios, groups=tuple(groups),
                     n_ops_max=n_ops_max, n_pages_max=n_pages_max,
                     n_epochs=n_epochs, ring_len=ring_len,
                     n_episodes=n_episodes,
-                    agent_lineage=tuple(lane_lineage(sc) for sc in scenarios))
+                    agent_lineage=tuple(lane_lineage(sc) for sc in scenarios),
+                    topologies=eff_topo)
 
 
 def episode_schedule(sc: Scenario, seed: int,

@@ -9,6 +9,11 @@ chained episodes. Grid builders cover the paper's experiment families:
                         (Fig. 12 protocol)
   forced_action_grid  : scripted-policy ablations, one lane per AIMM action
                         (mechanism-ceiling studies)
+  topology_grid       : app x interconnect x mapper — the topology axis
+                        (`Scenario.topology` names a builder in
+                        `nmp.topology.TOPOLOGIES`; the plan layer compiles
+                        one program per topology group, so a mixed grid is
+                        still a handful of batched sweeps)
   continual_stream    : an *ordered* sequence of program phases (app
                         switches, co-runner arrival/departure) — one grid
                         per phase, the learned-AIMM lane of every phase
@@ -49,6 +54,13 @@ class Scenario:
                                      # DQN from the tag (cold-start the
                                      # lineage if absent) and write the final
                                      # agent back — None = plain cold start
+    topology: str | None = None      # cube interconnect this lane simulates
+                                     # (a name in nmp.topology.TOPOLOGIES);
+                                     # None = inherit the sweep NMPConfig's
+                                     # topology.  Lanes of different
+                                     # topologies have different link spaces,
+                                     # so the plan layer compiles one program
+                                     # per topology group.
 
     @property
     def total_episodes(self) -> int:
@@ -65,7 +77,8 @@ class Scenario:
         across the seeds of a cell, which is what makes folding effective."""
         pt = self.page_table.tobytes() if self.page_table is not None else None
         return (id(self.trace), self.technique, self.mapper, self.episodes,
-                self.eval_episode, self.forced_action, pt, self.lineage)
+                self.eval_episode, self.forced_action, pt, self.lineage,
+                self.topology)
 
 
 def seed_variants(sc: Scenario, seeds: Sequence[int]) -> list[Scenario]:
@@ -146,6 +159,44 @@ def forced_action_grid(app: str = "SPMV", n_ops: int = 2048,
             for a in actions for seed in seeds]
 
 
+def topology_grid(apps: Sequence[str] = ("KM",),
+                  topologies: Sequence[str] | None = None,
+                  techniques: Sequence[str] = ("bnmp",),
+                  mappers: Sequence[str] = ("none", "aimm"),
+                  n_ops: int = 2048, seeds: Sequence[int] = (0,),
+                  episodes: int = 1, aimm_episodes: int | None = None,
+                  eval_episode: bool = False) -> list[Scenario]:
+    """The topology axis: app x interconnect x technique x mapper x seed.
+
+    One lane per cell, each tagged with its `Scenario.topology`; the plan
+    layer groups lanes by topology (different interconnects have different
+    link spaces) and compiles one program per group, so the whole axis is
+    still a handful of batched sweeps.  The default mapper pair
+    ("none", "aimm") is the paper's central question per interconnect:
+    does the learned mapping beat the unmanaged baseline?"""
+    from repro.nmp.topology import TOPOLOGIES, validate_topology
+    topologies = tuple(TOPOLOGIES) if topologies is None else tuple(topologies)
+    for t in topologies:
+        validate_topology(t)
+    out = []
+    for app in apps:
+        tr = make_trace(app, n_ops=n_ops)
+        for topo in topologies:
+            for tech in techniques:
+                for mapper in mappers:
+                    for seed in seeds:
+                        eps = (aimm_episodes
+                               if (mapper == "aimm"
+                                   and aimm_episodes is not None)
+                               else episodes)
+                        out.append(Scenario(
+                            name=f"{app}/{topo}/{tech}/{mapper}/s{seed}",
+                            trace=tr, technique=tech, mapper=mapper,
+                            seed=seed, episodes=eps, topology=topo,
+                            eval_episode=eval_episode and mapper == "aimm"))
+    return out
+
+
 # Default program-switch stream (phase name, live app set): a single program,
 # a co-runner arriving, the original program departing.  The lineage-tagged
 # AIMM lane lives through all three phases.
@@ -201,6 +252,7 @@ GRIDS: dict[str, Callable[..., list[Scenario]]] = {
     "single": single_program_grid,
     "multi": multi_program_grid,
     "ablation": forced_action_grid,
+    "topology": topology_grid,
 }
 
 STREAMS: dict[str, Callable[..., list[list[Scenario]]]] = {

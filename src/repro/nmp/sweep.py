@@ -4,8 +4,10 @@
 
   plan      (nmp.plan)      : normalize scenarios into a declarative
                               `GridPlan` — shared padding envelope, lanes
-                              grouped by DQN-liveness, seeds folded into a
-                              per-lane seed axis;
+                              grouped by DQN-liveness and cube topology
+                              (one program per topology group; the routing
+                              tensors are trace-time constants), seeds
+                              folded into a per-lane seed axis;
   partition (nmp.partition) : build a device mesh, pad each group to a
                               device-divisible lane count and shard the lane
                               axis (`NamedSharding`); degrades to a plain
@@ -283,11 +285,20 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
         from repro.nmp.continual import PolicyStore
         store = PolicyStore()
 
+    # Mixed-topology grids: the stacked final env needs one link-space
+    # width, so per-group pending link loads are padded to the widest
+    # topology's link count before stacking (padding links carry zero load).
+    from repro.nmp.topology import get_topology
+    n_links_max = max(
+        get_topology(dataclasses.replace(cfg, topology=t)).n_links
+        for t in dict.fromkeys(plan.topologies))
+
     outs: list = [None] * len(scenarios)
     envs: list = [None] * len(scenarios)
     for group in plan.groups:
+        group_cfg = dataclasses.replace(cfg, topology=group.topology)
         n_lanes_padded = partition.padded_lane_count(group.n_lanes, mesh)
-        batch_np = plan_mod.build_group_batch(plan, group, cfg)
+        batch_np = plan_mod.build_group_batch(plan, group, group_cfg)
         batch_np = partition.pad_group_batch(batch_np, n_lanes_padded)
         batch = partition.shard_group_batch(batch_np, mesh)
         warm = (_warm_agent_batch(group, n_lanes_padded, store, agent_cfg)
@@ -298,10 +309,14 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
             out, env_fin, agent_fin = _run_sweep(
-                batch, tom_cands, cfg, spec, agent_cfg, plan.n_epochs,
+                batch, tom_cands, group_cfg, spec, agent_cfg, plan.n_epochs,
                 group.n_episodes, plan.ring_len, group.flags,
                 warm_agent=warm, want_agent=group.lineage)
         out = jax.block_until_ready(out)
+        pad_l = n_links_max - get_topology(group_cfg).n_links
+        if pad_l:
+            env_fin = env_fin._replace(pending_mig_loads=jnp.pad(
+                env_fin.pending_mig_loads, [(0, 0)] * 2 + [(0, pad_l)]))
         pad_e = plan.n_episodes - group.n_episodes
         for li, lane in enumerate(group.lanes):
             cells = {}               # seed slot -> unfolded metric dict
@@ -345,18 +360,20 @@ def run_grid_serial(scenarios: Sequence[Scenario],
     from repro.nmp.stats import summarize
     out = []
     for sc in scenarios:
+        sc_cfg = (dataclasses.replace(cfg, topology=sc.topology)
+                  if sc.topology is not None else cfg)
         if needs_agent(sc):
-            results = run_program(sc.trace, cfg, sc.technique, "aimm",
+            results = run_program(sc.trace, sc_cfg, sc.technique, "aimm",
                                   episodes=sc.episodes, seed=sc.seed,
                                   page_table=sc.page_table)
             if sc.eval_episode:
                 results.append(run_episode(
-                    sc.trace, cfg, sc.technique, "aimm",
+                    sc.trace, sc_cfg, sc.technique, "aimm",
                     agent=results[-1].agent, seed=sc.seed, explore=False,
                     page_table=sc.page_table))
             out.append(summarize(results[-1]))
         else:
-            res = run_episode(sc.trace, cfg, sc.technique, sc.mapper,
+            res = run_episode(sc.trace, sc_cfg, sc.technique, sc.mapper,
                               seed=sc.seed, page_table=sc.page_table,
                               forced_action=sc.forced_action)
             out.append(summarize(res))

@@ -71,6 +71,57 @@ def test_hoard_alloc_colocates_programs():
     assert cubes0.isdisjoint(cubes1)          # disjoint cube regions
 
 
+def test_hoard_alloc_skips_zero_page_programs():
+    """A program id with zero pages (id gap / departed co-runner) must not
+    claim a cube share: every cube goes to the populated programs, and their
+    spans still cover all pages with legal cube ids."""
+    owner = np.asarray([0] * 12 + [2] * 4, np.int32)   # program 1 is empty
+    table = hoard_alloc(16, CFG, owner)
+    assert (table >= 0).all() and (table < CFG.n_cubes).all()
+    cubes0 = set(table[owner == 0].tolist())
+    cubes2 = set(table[owner == 2].tolist())
+    assert cubes0.isdisjoint(cubes2)
+    # the empty program starves nobody: all 16 cubes are split between the
+    # two populated programs, proportionally (12:4 pages -> 12:4 cubes)
+    assert len(cubes0) == 12 and len(cubes2) == 4
+    # a fully-degenerate tail of empty programs changes nothing
+    owner2 = np.asarray([0] * 12 + [5] * 4, np.int32)  # ids 1..4 all empty
+    table2 = hoard_alloc(16, CFG, owner2)
+    assert len(set(table2[owner2 == 0].tolist())) == 12
+    # more populated programs than cubes: overlap is unavoidable, but spans
+    # wrap round-robin instead of collapsing onto cube 0
+    owner3 = np.arange(20, dtype=np.int32)             # 20 single-page programs
+    table3 = hoard_alloc(20, CFG, owner3)
+    assert (table3 >= 0).all() and (table3 < CFG.n_cubes).all()
+    occupancy = np.bincount(table3, minlength=CFG.n_cubes)
+    assert occupancy.max() <= 2                        # balanced, not piled
+
+
+def test_page_cache_depths_follow_config():
+    """PageInfoCache history depths come from NMPConfig (satellite): custom
+    depths resize the cache rows AND the matching state-vector slices, and
+    the defaults reproduce the historical 8/8/4/4 layout."""
+    from repro.nmp.engine import state_spec_for
+    from repro.nmp.paging import init_page_cache
+    cache = init_page_cache(CFG)
+    assert cache.hop_hist.shape[1] == 8 and cache.lat_hist.shape[1] == 8
+    assert cache.mig_hist.shape[1] == 4 and cache.act_hist.shape[1] == 4
+    spec = state_spec_for(CFG)
+    assert (spec.hop_hist, spec.lat_hist, spec.mig_hist, spec.act_hist) == \
+        (8, 8, 4, 4)
+
+    cfg2 = NMPConfig(hop_hist=4, lat_hist=2, mig_hist=3, act_hist=6)
+    cache2 = init_page_cache(cfg2)
+    assert cache2.hop_hist.shape[1] == 4 and cache2.lat_hist.shape[1] == 2
+    assert cache2.mig_hist.shape[1] == 3 and cache2.act_hist.shape[1] == 6
+    spec2 = state_spec_for(cfg2)
+    assert spec2.dim == spec.dim - (8 + 8 + 4 + 4) + (4 + 2 + 3 + 6)
+    # and the engine runs end-to-end with the resized state vector
+    res = run_episode(make_trace("KM", n_ops=256), cfg2, "bnmp", "aimm",
+                      seed=0)
+    assert summarize(res)["ops"] == 256
+
+
 def test_8x8_mesh_runs():
     cfg = NMPConfig(mesh_x=8, mesh_y=8)
     res = run_episode(make_trace("RBM", n_ops=1024), cfg, "bnmp", "none")

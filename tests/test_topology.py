@@ -1,0 +1,265 @@
+"""The pluggable topology layer: routing-tensor invariants on every builder,
+bit-compatibility of `mesh2d` with the historical XY model, link-load
+conservation, migration no-ops, and the topology axis through the sweep
+pipeline (grouping + mixed-topology bit-identity vs serial).
+
+None of these are marked slow, so the whole file also runs on the forced
+4-device CI job (`make test-4dev`) where every grid is sharded over a
+4-wide lane mesh — the mixed-topology equivalence below is therefore
+exercised sharded and unsharded.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.nmp import NMPConfig, make_trace
+from repro.nmp.config import NMPConfig as _Cfg
+from repro.nmp.migration import migration_cost
+from repro.nmp.scenarios import Scenario, topology_grid
+from repro.nmp.sweep import run_grid, run_grid_serial
+from repro.nmp.topology import (TOPOLOGIES, build_topology, get_topology,
+                                hop_count, link_loads)
+
+CFG = NMPConfig()
+ALL_CFGS = {name: NMPConfig(topology=name) for name in TOPOLOGIES}
+
+
+# ---------------------------------------------------------------------------
+# Structural invariants (every builder)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_routing_tensor_invariants(name):
+    topo = get_topology(ALL_CFGS[name])
+    C, L = topo.n_cubes, topo.n_links
+    assert topo.hops.shape == (C, C) and topo.route_links.shape == (C, C, L)
+    # hops symmetric, zero diagonal, connected
+    assert (topo.hops == topo.hops.T).all()
+    assert (np.diag(topo.hops) == 0).all()
+    assert (topo.hops[~np.eye(C, dtype=bool)] > 0).all()
+    # a route uses each link at most once and exactly `hops` links in total
+    assert set(np.unique(topo.route_links)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(topo.route_links.sum(axis=-1), topo.hops)
+    # self-routes are empty (what makes same-cube migration an exact no-op)
+    assert topo.route_links[np.arange(C), np.arange(C)].sum() == 0
+    # neighbor table: valid slots are exactly the hop-1 cubes
+    for c in range(C):
+        nbrs = set(topo.nbr[c][topo.nbr_valid[c]].tolist())
+        assert nbrs == set(np.flatnonzero(topo.hops[c] == 1).tolist())
+        # invalid slots are self-padded => always a legal cube id
+        assert set(topo.nbr[c].tolist()) <= set(range(C)) and \
+            (topo.nbr[c][~topo.nbr_valid[c]] == c).all()
+    # far targets are legal and never the cube itself
+    assert (topo.far != np.arange(C)).all()
+    # nearest-MC: every MC cube maps to its own controller
+    for i, cube in enumerate(topo.mc_cubes):
+        assert topo.nearest_mc[cube] == i
+
+
+def test_link_counts():
+    assert get_topology(ALL_CFGS["mesh2d"]).n_links == 24      # 2*4*3
+    assert get_topology(ALL_CFGS["torus2d"]).n_links == 32     # 2*16
+    assert get_topology(ALL_CFGS["ring"]).n_links == 16
+    # dragonfly: 4 groups x C(4,2) intra + C(4,2) global
+    assert get_topology(ALL_CFGS["dragonfly"]).n_links == 30
+    cfg8 = NMPConfig(mesh_x=8, mesh_y=8)
+    assert get_topology(cfg8).n_links == 8 * 7 * 2
+    assert int(get_topology(cfg8).hops[0, 63]) == 14
+
+
+def test_unknown_topology_raises():
+    with pytest.raises(ValueError, match="unknown topology"):
+        build_topology(NMPConfig(topology="hypercube"))
+
+
+def test_duplicate_mc_attachment_rejected():
+    """Geometries too small to host n_mcs distinct controllers fail loudly at
+    build time instead of silently under-injecting (a 2-group dragonfly
+    attaches its 4 MCs at 4 distinct cubes; a 2-cube ring cannot)."""
+    topo = build_topology(NMPConfig(topology="dragonfly", mesh_x=8, mesh_y=2))
+    assert len(set(topo.mc_cubes)) == 4
+    with pytest.raises(ValueError, match="duplicate MC attachment"):
+        build_topology(NMPConfig(topology="ring", mesh_x=2, mesh_y=1))
+    # mesh2d pins one MC per CMP corner: any other n_mcs must fail loudly
+    # (the engine sizes its MC-queue state to n_mcs), while ring/dragonfly
+    # honor n_mcs via evenly spaced attachment
+    with pytest.raises(ValueError, match="MC attachment cubes for n_mcs=2"):
+        build_topology(NMPConfig(topology="mesh2d", n_mcs=2))
+    assert build_topology(NMPConfig(topology="ring", n_mcs=2)).mc_cubes == \
+        (0, 8)
+
+
+# ---------------------------------------------------------------------------
+# mesh2d == historical XY model
+# ---------------------------------------------------------------------------
+
+def test_mesh2d_matches_manhattan_and_mirror():
+    topo = get_topology(CFG)
+    X, Y = CFG.mesh_x, CFG.mesh_y
+    cx, cy = np.arange(16) % X, np.arange(16) // X
+    np.testing.assert_array_equal(
+        topo.hops, np.abs(cx[:, None] - cx[None, :])
+        + np.abs(cy[:, None] - cy[None, :]))
+    # far = mirror through the array center (the paper's diagonally opposite
+    # cube), NOT the hop-farthest cube
+    np.testing.assert_array_equal(topo.far, (Y - 1 - cy) * X + (X - 1 - cx))
+    assert int(topo.far[5]) == 10                   # (1,1) -> (2,2)
+    assert topo.mc_cubes == CFG.mc_cubes
+    # corner-adjacent MCs: each corner cube maps to its own MC
+    assert int(hop_count(topo, jnp.asarray(0), jnp.asarray(15))) == 6
+
+
+def test_mesh2d_xy_route_shape():
+    """XY routing: X at the source row then Y at the destination column —
+    route (0 -> 15) uses row-0 horizontal links and column-3 verticals."""
+    topo = get_topology(CFG)
+    X, Y = CFG.mesh_x, CFG.mesh_y
+    H = Y * (X - 1)
+    route = np.flatnonzero(topo.route_links[0, 15])
+    assert route.tolist() == [0, 1, 2,                       # row 0, x=0..2
+                              H + 3 * (Y - 1) + 0,           # col 3, y=0..2
+                              H + 3 * (Y - 1) + 1,
+                              H + 3 * (Y - 1) + 2]
+
+
+# ---------------------------------------------------------------------------
+# Conservation (satellite): every topology, random flow batches
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.sampled_from(sorted(TOPOLOGIES)),
+       st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15),
+                          st.integers(1, 9)),
+                min_size=1, max_size=24))
+def test_link_load_conservation_all_topologies(name, flows):
+    """Total accumulated link load == sum(weight * hops) on every topology:
+    minimal routes place exactly `hops` link traversals per flow."""
+    topo = get_topology(ALL_CFGS[name])
+    src = jnp.asarray([f[0] for f in flows])
+    dst = jnp.asarray([f[1] for f in flows])
+    w = jnp.asarray([float(f[2]) for f in flows])
+    loads = link_loads(topo, src, dst, w)
+    assert loads.shape[0] == topo.n_links
+    assert (np.asarray(loads) >= 0).all()
+    total = float(loads.sum())
+    expect = float((w * hop_count(topo, src, dst)).sum())
+    assert total == expect       # exact: integer weights over 0/1 incidence
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_migration_same_cube_is_exact_noop(name):
+    """`migration_cost` must be an exact no-op (zero latency, zero stall,
+    zero link loads) when old_cube == new_cube, on every topology."""
+    cfg = ALL_CFGS[name]
+    for cube in (0, 7, 15):
+        lat, stall, loads = migration_cost(
+            jnp.asarray(cube), jnp.asarray(cube), jnp.asarray(True),
+            jnp.asarray(12.0), cfg)
+        assert float(lat) == 0.0 and float(stall) == 0.0
+        assert float(jnp.abs(loads).sum()) == 0.0
+        assert loads.shape == (get_topology(cfg).n_links,)
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_migration_moving_page_charges_route(name):
+    cfg = ALL_CFGS[name]
+    topo = get_topology(cfg)
+    lat, stall, loads = migration_cost(
+        jnp.asarray(0), jnp.asarray(5), jnp.asarray(False),
+        jnp.asarray(3.0), cfg)
+    hops = float(topo.hops[0, 5])
+    assert float(lat) == cfg.page_flits + hops * cfg.t_router + cfg.t_page_walk
+    assert float(loads.sum()) == hops * cfg.page_flits
+    assert float(stall) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Topology axis through the sweep pipeline
+# ---------------------------------------------------------------------------
+
+def test_plan_groups_by_topology():
+    """Lanes of different interconnects compile separate programs; lanes of
+    one interconnect keep the historical grouping."""
+    from repro.nmp.plan import plan_grid
+    tr = make_trace("KM", n_ops=384)
+    grid = [Scenario(name="m/none", trace=tr),
+            Scenario(name="r/none", trace=tr, topology="ring"),
+            Scenario(name="m/aimm", trace=tr, mapper="aimm"),
+            Scenario(name="r/aimm", trace=tr, mapper="aimm", topology="ring"),
+            Scenario(name="m2/tom", trace=tr, mapper="tom",
+                     topology="mesh2d")]
+    plan = plan_grid(grid, CFG)
+    assert [(g.topology, g.has_agent, g.n_lanes) for g in plan.groups] == [
+        ("mesh2d", True, 1), ("ring", True, 1),
+        ("mesh2d", False, 2), ("ring", False, 1)]
+    assert plan.topologies == ("mesh2d", "ring", "mesh2d", "ring", "mesh2d")
+    # topology is part of the fold key: same cell, different interconnect
+    assert all(len(ln.indices) == 1 for g in plan.groups for ln in g.lanes)
+
+
+def test_plan_rejects_unknown_topology():
+    from repro.nmp.plan import plan_grid
+    tr = make_trace("KM", n_ops=384)
+    with pytest.raises(ValueError, match="unknown topology"):
+        plan_grid([Scenario(name="x", trace=tr, topology="moebius")], CFG)
+
+
+def test_plan_rejects_lineage_spanning_topologies():
+    """One lineage tag across interconnects would compile per-topology
+    programs whose final agents overwrite each other in the PolicyStore —
+    rejected at plan time (distinct tags per topology are fine)."""
+    from repro.nmp.plan import plan_grid
+    tr = make_trace("KM", n_ops=384)
+    with pytest.raises(ValueError, match="spans topologies"):
+        plan_grid([Scenario(name="m", trace=tr, mapper="aimm", lineage="t"),
+                   Scenario(name="r", trace=tr, mapper="aimm", lineage="t",
+                            topology="ring")], CFG)
+    plan = plan_grid([Scenario(name="m", trace=tr, mapper="aimm",
+                               lineage="t-mesh"),
+                      Scenario(name="r", trace=tr, mapper="aimm",
+                               lineage="t-ring", topology="ring")], CFG)
+    assert [(g.topology, g.lineage) for g in plan.groups] == [
+        ("mesh2d", True), ("ring", True)]
+
+
+def test_mixed_topology_grid_matches_serial():
+    """A grid spanning all four interconnects — unmanaged + scripted-AIMM
+    lanes per topology plus a learned-AIMM torus lane — reproduces per-lane
+    serial `run_episode`/`run_program` bit-for-bit (runs sharded on the
+    forced-4-device CI job, unsharded otherwise)."""
+    tr = make_trace("KM", n_ops=384)
+    grid = []
+    for topo in sorted(TOPOLOGIES):
+        grid.append(Scenario(name=f"{topo}/none", trace=tr, topology=topo))
+        grid.append(Scenario(name=f"{topo}/forced", trace=tr, mapper="aimm",
+                             forced_action=1, topology=topo, seed=3))
+    grid.append(Scenario(name="torus2d/learned", trace=tr, mapper="aimm",
+                         topology="torus2d", episodes=2))
+    res = run_grid(grid, CFG)
+    serial = run_grid_serial(grid, CFG)
+    for i, sc in enumerate(grid):
+        batched = res.episode_summary(i)
+        for k in ("cycles", "ops", "opc"):
+            assert serial[i][k] == batched[k], (sc.name, k)
+    # final env stacks across link spaces: padded to the widest topology
+    n_links_max = max(get_topology(c) .n_links for c in ALL_CFGS.values())
+    assert res.final_env.pending_mig_loads.shape == (len(grid), n_links_max)
+
+
+def test_topology_grid_builder():
+    grid = topology_grid(apps=("KM",), n_ops=384)
+    assert len(grid) == 2 * len(TOPOLOGIES)
+    assert {sc.topology for sc in grid} == set(TOPOLOGIES)
+    with pytest.raises(ValueError, match="unknown topology"):
+        topology_grid(topologies=("kleinbottle",))
+
+
+def test_mesh2d_default_config_unchanged():
+    """The default config still names the paper's mesh — the whole golden
+    suite depends on it."""
+    assert _Cfg().topology == "mesh2d"
+    assert dataclasses.replace(CFG, topology="ring") != CFG
