@@ -3,12 +3,17 @@
 #   make test         tier-1 verify: the full suite (what the roadmap gates on)
 #   make test-fast    quick lane: skips tests marked `slow`
 #   make test-4dev    test-fast on a forced 4-device host platform (the sweep
-#                     partition layer shards every grid over a 4-wide mesh)
+#                     partition layer shards every grid over a 4-wide mesh,
+#                     and the serving tests multiplex tenants over slot-
+#                     sharded resident programs)
 #   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record
-#                     + the continual warm-vs-cold record + the topology-axis
-#                     record: writes bench_out/BENCH_engine.json,
-#                     BENCH_continual.json and BENCH_topology.json)
+#                     + the continual warm-vs-cold record + the multi-tenant
+#                     serving record + the topology-axis record: writes
+#                     bench_out/BENCH_engine.json, BENCH_continual.json,
+#                     BENCH_serving.json and BENCH_topology.json)
 #   make bench-continual  just the continual-stream warm-vs-cold benchmark
+#   make bench-serving    just the multi-tenant serving benchmark (64 tenant
+#                         streams through 16 resident slot programs)
 #   make bench-topology   just the topology-axis benchmark (per-interconnect
 #                         learned-AIMM vs baseline + mesh warm-grid guard)
 #   make bench        every benchmark figure (BENCH_FULL=1 for paper scale)
@@ -19,8 +24,8 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast test-4dev bench-smoke bench-continual bench-topology \
-	bench profile
+.PHONY: test test-fast test-4dev bench-smoke bench-continual bench-serving \
+	bench-topology bench profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -36,10 +41,13 @@ test-4dev:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	BENCH_ONLY=fig5,engine,continual,topology $(PY) benchmarks/run.py
+	BENCH_ONLY=fig5,engine,continual,serving,topology $(PY) benchmarks/run.py
 
 bench-continual:
 	BENCH_ONLY=continual $(PY) benchmarks/run.py
+
+bench-serving:
+	BENCH_ONLY=serving $(PY) benchmarks/run.py
 
 bench-topology:
 	BENCH_ONLY=topology $(PY) benchmarks/run.py

@@ -1,0 +1,117 @@
+"""Multi-tenant serving benchmark: the streaming mapping service under a
+64-tenant fleet (nmp.serving.MappingServer).
+
+Protocol: `N_TENANTS` heterogeneous single-lane tenant streams (app cycle
+offset + seed per tenant, `N_PHASES` phases each) are all submitted up
+front and drained through `N_SLOTS` resident lane-slot programs with a
+capacity-bounded PolicyStore (capacity < fleet size, >= slot count — so the
+store evicts under pressure while in-flight tenants stay warm).  The server
+double-buffers the next tick's host batch against the current device step.
+
+Measured (the acceptance bar for the serving layer):
+
+  * phase latency p50/p99 and steady-state epochs/sec — from ticks after
+    the last compile;
+  * slot occupancy and the recompile count after the first tick, which must
+    be ZERO: the resident programs' static shapes never change as tenants
+    arrive and depart;
+  * store evictions with capacity < tenants;
+  * per-tenant exactness: `SPOT_CHECKS` tenants re-run solo through
+    `continual.run_stream` and compared bit-for-bit (recorded as
+    `spot_checks_bit_identical`; the solo runs happen after the serving
+    stats are captured so their compiles don't pollute the record).
+
+Rows are emitted as CSV like every benchmark; the machine-readable record
+lands in ``bench_out/BENCH_serving.json`` (schema: benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import FULL, Timer, emit
+
+JSON_PATH = os.environ.get("BENCH_SERVING_JSON",
+                           "bench_out/BENCH_serving.json")
+
+N_TENANTS = int(os.environ.get("BENCH_SERVING_TENANTS",
+                               "96" if FULL else "64"))
+N_SLOTS = 16
+N_PHASES = 3
+N_OPS_PER_APP = 1024 if FULL else 512
+STORE_CAPACITY = max(N_SLOTS, N_TENANTS // 2)   # < fleet, >= slots
+SPOT_CHECKS = 2
+
+
+def run():
+    from repro.nmp import NMPConfig
+    from repro.nmp.continual import run_stream
+    from repro.nmp.scenarios import tenant_fleet
+    from repro.nmp.serving import MappingServer, solo_stream
+
+    cfg = NMPConfig()
+    fleet = tenant_fleet(n_tenants=N_TENANTS, n_phases=N_PHASES,
+                         n_ops_per_app=N_OPS_PER_APP)
+    srv = MappingServer(cfg, n_slots=N_SLOTS, store_capacity=STORE_CAPACITY)
+    with Timer() as t:
+        for tid, stream in fleet.items():
+            srv.submit(tid, stream)
+        ticks = srv.run()
+    stats = srv.stats()
+    assert stats["tenants_done"] == N_TENANTS
+
+    # exactness spot checks AFTER capturing stats: the solo reference runs
+    # compile their own (1-lane) programs, which must not count against the
+    # server's steady-state record
+    spot = list(fleet)[:: max(N_TENANTS // SPOT_CHECKS, 1)][:SPOT_CHECKS]
+    identical = True
+    for tid in spot:
+        solo = run_stream(solo_stream(tid, fleet[tid]), cfg)
+        for pi in range(N_PHASES):
+            served = srv.tenant_metrics(tid, pi)
+            want = solo.phases[pi].metrics
+            identical &= all(np.array_equal(served[k], want[k][0])
+                             for k in want)
+
+    us_tick = t.us / max(ticks, 1)
+    name = f"serving/{N_TENANTS}tenants_{stats['n_slots']}slots"
+    emit(f"{name}/phase_latency_p50_ms", us_tick,
+         round(stats["phase_latency_p50_s"] * 1e3, 3))
+    emit(f"{name}/phase_latency_p99_ms", us_tick,
+         round(stats["phase_latency_p99_s"] * 1e3, 3))
+    emit(f"{name}/steady_epochs_per_sec", us_tick,
+         round(stats["steady_epochs_per_sec"] or 0.0, 1))
+    emit(f"{name}/slot_occupancy", us_tick,
+         round(stats["slot_occupancy"], 4))
+    emit(f"{name}/recompiles_after_first_tick", us_tick,
+         stats["recompiles_after_first_tick"])
+    emit(f"{name}/store_evictions", us_tick, stats["store"]["evictions"])
+    emit(f"{name}/spot_checks_bit_identical", us_tick, identical)
+
+    record = {
+        "fleet": {"n_tenants": N_TENANTS, "n_phases": N_PHASES,
+                  "n_ops_per_app": N_OPS_PER_APP, "full": FULL},
+        "server": {"n_slots": stats["n_slots"],
+                   "n_devices": stats["n_devices"],
+                   "store_capacity": STORE_CAPACITY},
+        "service": {k: stats[k] for k in (
+            "ticks", "phases_served", "tenants_done", "tenants_removed",
+            "phase_latency_p50_s", "phase_latency_p99_s", "slot_occupancy",
+            "recompiles_total", "recompiles_after_first_tick",
+            "steady_ticks", "steady_epochs_per_sec")},
+        "store": stats["store"],
+        "exactness": {"spot_check_tenants": spot,
+                      "spot_checks_bit_identical": bool(identical)},
+        "wall_s": round(t.us / 1e6, 3),
+    }
+    os.makedirs(os.path.dirname(JSON_PATH) or ".", exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ MODULES = [
     ("fig11_mesh_scaling", "benchmarks.bench_mesh_scaling"),
     ("fig12_multiprogram", "benchmarks.bench_multiprogram"),
     ("continual_stream", "benchmarks.bench_continual"),
+    ("serving", "benchmarks.bench_serving"),
     ("topology_axis", "benchmarks.bench_topology"),
     ("fig13_sensitivity", "benchmarks.bench_sensitivity"),
     ("fig14_energy", "benchmarks.bench_energy"),

@@ -3,9 +3,11 @@ from repro.nmp import partition  # noqa: F401
 from repro.nmp.config import NMPConfig  # noqa: F401
 from repro.nmp.continual import PolicyStore, StreamResult, run_stream  # noqa: F401
 from repro.nmp.engine import EpisodeResult, run_episode, run_program  # noqa: F401
-from repro.nmp.plan import GridPlan, plan_grid  # noqa: F401
+from repro.nmp.plan import Envelope, GridPlan, plan_grid  # noqa: F401
 from repro.nmp.scenarios import (Scenario, build_stream,  # noqa: F401
-                                 continual_stream, seed_variants)
+                                 continual_stream, seed_variants,
+                                 tenant_fleet, tenant_stream)
+from repro.nmp.serving import MappingServer, solo_stream  # noqa: F401
 from repro.nmp.sweep import SweepResult, run_grid  # noqa: F401
 from repro.nmp.topology import TOPOLOGIES, Topology, get_topology  # noqa: F401
 from repro.nmp.traces import APPS, Trace, make_trace, merge_traces  # noqa: F401

@@ -60,13 +60,34 @@ class PolicyStore:
     `checkout` (device arrays, scenario-boundary handoff applied).  The store
     itself never trains — `sweep.run_grid` / `run_stream` thread it through
     compiled programs.  Per-tag `meta` records lineage provenance (last
-    scenario, lifetime counters, phases served)."""
+    scenario, lifetime counters, phases served, a `version` bumped on every
+    `put`).
+
+    `capacity` bounds the number of resident lineages: `put` and `checkout`
+    refresh a tag's recency, and a `put` that overflows the bound evicts the
+    least-recently-used *other* tags (counted in `evictions`; per-tag
+    eviction counts live on in `meta`, so a returning tag's `version`
+    continues across evictions).  An evicted lineage simply cold-restarts on
+    its next warm-start lookup — the serving layer (nmp.serving) relies on
+    this to serve an unbounded tenant population from a finite store.  The
+    default (`capacity=None`) is unbounded, the historical behavior."""
 
     def __init__(self, agents: dict[str, AgentState] | None = None,
-                 meta: dict[str, dict] | None = None):
+                 meta: dict[str, dict] | None = None,
+                 capacity: int | None = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"PolicyStore capacity must be >= 1 or None "
+                             f"(got {capacity})")
+        self.capacity = capacity
+        self.evictions = 0               # lifetime eviction count
+        self.restored_step = None        # checkpoint step this store came
+                                         # from (set by `restore`), used by
+                                         # run_stream to realign resumed
+                                         # checkpoint histories
         self._agents: dict[str, AgentState] = dict(agents or {})
         self.meta: dict[str, dict] = {t: dict(m)
                                       for t, m in (meta or {}).items()}
+        self._evict_to_capacity()
 
     # -- registry -------------------------------------------------------
     @property
@@ -85,21 +106,47 @@ class PolicyStore:
 
     def put(self, tag: str, agent: AgentState, **meta: Any) -> None:
         """Store `agent` (detached to host numpy) as the lineage's current
-        state and update its provenance record."""
+        state, bump its `version` and update its provenance record.  With a
+        bounded store this may evict least-recently-used other tags."""
         check_tag(tag)
         snap = agent_mod.export_agent(agent)
+        self._agents.pop(tag, None)          # re-insert = most recent
         self._agents[tag] = snap
         rec = self.meta.setdefault(tag, {"phases": 0})
         rec["phases"] = rec.get("phases", 0) + 1
+        rec["version"] = rec.get("version", 0) + 1
         rec["global_step"] = int(snap.global_step)
         rec["train_steps"] = int(snap.train_steps)
         rec.update(meta)
+        self._evict_to_capacity()
 
     def checkout(self, tag: str) -> AgentState:
         """Device-ready warm start for a new scenario: the stored lineage
         with the scenario-boundary handoff applied (per-scenario counters
-        reset; weights, replay, RNG and global_step carried)."""
+        reset; weights, replay, RNG and global_step carried).  Refreshes the
+        tag's LRU recency."""
+        self._agents[tag] = self._agents.pop(tag)
         return agent_mod.hand_off(agent_mod.import_agent(self._agents[tag]))
+
+    def version(self, tag: str) -> int:
+        """Lifetime `put` count of a lineage (survives eviction)."""
+        return int(self.meta[tag].get("version", 0))
+
+    # -- bounded capacity ----------------------------------------------
+    def evict(self, tag: str) -> None:
+        """Drop a lineage's resident agent.  Its `meta` record stays (with
+        an `evicted` count), so versioning continues if the tag returns; a
+        later warm-start lookup simply misses and cold-restarts."""
+        del self._agents[tag]
+        self.evictions += 1
+        rec = self.meta.setdefault(tag, {})
+        rec["evicted"] = rec.get("evicted", 0) + 1
+
+    def _evict_to_capacity(self) -> None:
+        if self.capacity is None:
+            return
+        while len(self._agents) > self.capacity:
+            self.evict(next(iter(self._agents)))     # insertion order = LRU
 
     def global_step(self, tag: str) -> int:
         """Lifetime env interactions of a lineage."""
@@ -119,7 +166,9 @@ class PolicyStore:
             latest = mgr.latest_step()
             step = 0 if latest is None else latest + 1
         mgr.save(step, dict(self._agents),
-                 extras={"tags": self.tags, "meta": self.meta})
+                 extras={"tags": self.tags, "meta": self.meta,
+                         "capacity": self.capacity,
+                         "evictions": self.evictions})
         return step
 
     @classmethod
@@ -128,14 +177,22 @@ class PolicyStore:
         """Rebuild a store in a fresh process: read the checkpoint's tag list
         from its metadata, build RNG-free `agent_template` skeletons, and map
         the saved leaves back on bit-exactly.  `agent_cfg` must describe the
-        same agent architecture the store was saved with."""
+        same agent architecture the store was saved with.
+
+        The restored store remembers the checkpoint step it came from
+        (`restored_step`), which `run_stream` uses to keep the step <-> phase
+        alignment when a stream resumes from a non-latest step."""
         mgr = CheckpointManager(directory)
         meta = mgr.read_meta(step)
         template = {t: agent_mod.agent_template(agent_cfg)
                     for t in meta["extras"]["tags"]}
         tree, extras = mgr.restore(template, step)
         agents = {t: agent_mod.export_agent(a) for t, a in tree.items()}
-        return cls(agents=agents, meta=extras.get("meta", {}))
+        store = cls(agents=agents, meta=extras.get("meta", {}),
+                    capacity=extras.get("capacity"))
+        store.evictions = int(extras.get("evictions", 0))
+        store.restored_step = int(meta["step"])
+        return store
 
 
 @dataclasses.dataclass
@@ -154,24 +211,41 @@ def run_stream(stream: Sequence[Sequence[Scenario]],
                cfg: NMPConfig = NMPConfig(),
                agent_cfg: AgentConfig | None = None,
                store: PolicyStore | None = None,
-               checkpoint_dir: str | None = None) -> StreamResult:
+               checkpoint_dir: str | None = None,
+               checkpoint_base_step: int | None = None) -> StreamResult:
     """Execute an ordered program-phase stream as chained `run_grid` calls.
 
     Each phase is one grid (see `scenarios.continual_stream`); the store is
     threaded through, so lanes sharing a lineage tag across phases are one
-    DQN living through every app switch and co-runner change.  With
-    `checkpoint_dir` the store is checkpointed after every phase, the steps
-    continuing the directory's existing history (so on a fresh directory
-    step == phase index, and a *resumed* stream appends instead of
-    clobbering earlier phases' resume points).  That is the stop/resume
-    protocol for long-running streams: `PolicyStore.restore(dir, agent_cfg,
-    step=k)` + `run_stream(stream[k+1:], store=...)` reproduces the
-    remaining phases bit-exactly."""
+    DQN living through every app switch and co-runner change.
+
+    With `checkpoint_dir` the store is checkpointed after every phase at
+    step `base + phase_index`, where the base is (first match wins):
+
+      * `checkpoint_base_step`, when given explicitly;
+      * `store.restored_step + 1`, when the store came from
+        `PolicyStore.restore` — so a stream resumed from step `k` writes its
+        phases at `k+1, k+2, ...`, *re-aligning* the directory's step <->
+        phase-index mapping even when `k` is not the latest step (resuming
+        from an older step overwrites the now-stale later steps instead of
+        appending misaligned ones after them);
+      * the directory's `latest+1` continuation otherwise (a fresh directory
+        starts at step == phase index).
+
+    That is the stop/resume protocol for long-running streams:
+    `PolicyStore.restore(dir, agent_cfg, step=k)` +
+    `run_stream(stream[k+1:], store=..., checkpoint_dir=dir)` reproduces the
+    remaining phases bit-exactly, with every step in the directory mapping
+    to the phase of the same index."""
     from repro.nmp.sweep import run_grid
     store = store if store is not None else PolicyStore()
+    base = checkpoint_base_step
+    if base is None and store.restored_step is not None:
+        base = store.restored_step + 1
     results = []
-    for phase in stream:
+    for pi, phase in enumerate(stream):
         results.append(run_grid(phase, cfg, agent_cfg, store=store))
         if checkpoint_dir is not None:
-            store.save(checkpoint_dir)
+            store.save(checkpoint_dir,
+                       step=None if base is None else base + pi)
     return StreamResult(phases=results, store=store)

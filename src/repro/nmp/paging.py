@@ -51,6 +51,13 @@ def hoard_alloc(n_pages: int, cfg: NMPConfig, program_of_page: np.ndarray,
     balanced instead of piling onto cube 0).
     """
     program_of_page = np.asarray(program_of_page)
+    if program_of_page.size != n_pages:
+        raise ValueError(
+            f"hoard_alloc: program_of_page has {program_of_page.size} "
+            f"entries for n_pages={n_pages}; one owner per page expected")
+    if n_pages == 0:
+        # zero-page trace (e.g. every co-runner departed): nothing to place
+        return np.zeros(0, np.int32)
     n_prog = int(program_of_page.max()) + 1
     counts = np.bincount(program_of_page, minlength=n_prog).astype(np.float64)
     pop = np.flatnonzero(counts > 0)          # populated programs only

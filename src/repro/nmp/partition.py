@@ -95,6 +95,10 @@ def pad_group_batch(batch: dict[str, np.ndarray],
     Padding lanes are real, legal simulations (copies of lane 0) so the
     SPMD program needs no masking; the execute layer simply never reads
     their outputs."""
+    if not batch:
+        raise ValueError(
+            "pad_group_batch: empty group batch (no arrays) — a group must "
+            "hold at least one lane before it can be padded")
     n = next(iter(batch.values())).shape[0]
     if n_to == n:
         return batch

@@ -204,9 +204,48 @@ def group_flags(group: Sequence[Scenario], cfg: NMPConfig,
     )
 
 
-def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
+@dataclasses.dataclass(frozen=True)
+class Envelope:
+    """The padded spatial/temporal envelope a grid's programs compile to.
+
+    Normally derived from the scenarios themselves (`plan_envelope`); the
+    serving layer (nmp.serving) instead *forces* one fixed envelope across
+    every service tick, so the resident compiled programs' static shapes —
+    and therefore the jit cache — never change as tenants come and go."""
+    n_ops_max: int
+    n_pages_max: int
+    n_epochs: int
+    ring_len: int
+    n_episodes: int
+
+    def dominates(self, other: "Envelope") -> bool:
+        return (self.n_ops_max >= other.n_ops_max
+                and self.n_pages_max >= other.n_pages_max
+                and self.n_epochs >= other.n_epochs
+                and self.ring_len >= other.ring_len
+                and self.n_episodes >= other.n_episodes)
+
+
+def plan_envelope(scenarios: Sequence[Scenario], cfg: NMPConfig) -> Envelope:
+    """The minimal envelope covering every scenario of a grid."""
+    if not scenarios:
+        raise ValueError("empty scenario grid: plan_envelope needs at least "
+                         "one scenario")
+    return Envelope(
+        n_ops_max=max(sc.trace.n_ops for sc in scenarios),
+        n_pages_max=max(sc.trace.n_pages for sc in scenarios),
+        n_epochs=max(serial_epochs(sc.trace.n_ops, cfg) for sc in scenarios),
+        ring_len=max(phase_ring_len(sc.trace, cfg) for sc in scenarios),
+        n_episodes=max(sc.total_episodes for sc in scenarios))
+
+
+def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig,
+              envelope: Envelope | None = None) -> GridPlan:
     scenarios = tuple(scenarios)
-    assert scenarios, "empty scenario grid"
+    if not scenarios:
+        raise ValueError(
+            "empty scenario grid: run_grid/run_stream need at least one "
+            "scenario per phase (got an empty sequence)")
     from repro.nmp.topology import validate_topology
     eff_topo = tuple(scenario_topology(sc, cfg) for sc in scenarios)
     for t in dict.fromkeys(eff_topo):
@@ -231,12 +270,22 @@ def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
     # agent-mode groups so the merged final_env and per-epoch timelines
     # stack; episode counts and seed widths are padded per group —
     # deterministic lanes must not simulate the AIMM lanes' longer training
-    # schedules.
-    n_ops_max = max(sc.trace.n_ops for sc in scenarios)
-    n_pages_max = max(sc.trace.n_pages for sc in scenarios)
-    n_epochs = max(serial_epochs(sc.trace.n_ops, cfg) for sc in scenarios)
-    ring_len = max(phase_ring_len(sc.trace, cfg) for sc in scenarios)
-    n_episodes = max(sc.total_episodes for sc in scenarios)
+    # schedules.  A forced `envelope` (the serving layer's fixed-shape
+    # resident programs) replaces the derived one; it must dominate it, so
+    # padding stays exact.
+    derived = plan_envelope(scenarios, cfg)
+    if envelope is not None:
+        if not envelope.dominates(derived):
+            raise ValueError(
+                f"forced envelope {envelope} does not cover the grid's own "
+                f"envelope {derived}; every scenario must fit the fixed "
+                "shapes")
+        env = envelope
+    else:
+        env = derived
+    n_ops_max, n_pages_max = env.n_ops_max, env.n_pages_max
+    n_epochs, ring_len = env.n_epochs, env.ring_len
+    n_episodes = env.n_episodes
 
     # Group order: cold agent lanes first (the exact historical program),
     # then warm-capable lineage lanes, then deterministic lanes — grids
@@ -255,7 +304,8 @@ def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
             idxs = [i for i in mode_idxs if eff_topo[i] == topo]
             lanes, n_seeds = _pad_seed_axis(_fold_lanes(scenarios, idxs))
             members = [scenarios[i] for i in idxs]
-            group_eps = max(sc.total_episodes for sc in members)
+            group_eps = (envelope.n_episodes if envelope is not None
+                         else max(sc.total_episodes for sc in members))
             if lineage:
                 # Fail bad tags at plan time, not in the post-simulation
                 # write-back (continual.check_tag enforces the same rule at
@@ -274,6 +324,11 @@ def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig) -> GridPlan:
                         "lineage lanes must share one episode count per grid "
                         f"(got {sorted(ragged)}); split ragged phases into "
                         "separate run_grid calls")
+                if envelope is not None and ragged != {group_eps}:
+                    raise ValueError(
+                        f"lineage lanes run {sorted(ragged)} episodes but the "
+                        f"forced envelope fixes {group_eps}; padding episodes "
+                        "would keep training the lineage past its schedule")
             groups.append(GroupPlan(
                 lanes=tuple(lanes), has_agent=has_agent,
                 flags=group_flags(members, cfg, has_agent),

@@ -21,6 +21,12 @@ chained episodes. Grid builders cover the paper's experiment families:
                         `continual.run_stream` threads one DQN through the
                         whole stream via chained `run_grid` calls
 
+  tenant_stream /
+  tenant_fleet        : single-lane program-switch streams for serving
+                        tenants — one scenario per phase, many tenants
+                        sharing Trace objects; the workload unit of the
+                        multi-tenant mapping service (`nmp.serving`)
+
 `GRIDS` maps names to builders so benchmarks/examples can request a standard
 grid by name (`build("single", apps=..., n_ops=...)`); `STREAMS` does the
 same for phase streams (`build_stream("switch", ...)`).
@@ -248,6 +254,59 @@ def continual_stream(phases: Iterable[tuple[str, Sequence[str]]] = DEFAULT_STREA
     return stream
 
 
+def tenant_stream(apps: Sequence[str] = ("KM", "SC"),
+                  n_phases: int | None = None,
+                  n_ops_per_app: int = 512,
+                  technique: str = "bnmp",
+                  episodes: int = 1,
+                  lineage: str | None = None,
+                  seed: int = 0,
+                  traces: dict | None = None) -> list[list[Scenario]]:
+    """Single-lane program-switch stream for one serving tenant.
+
+    Each phase is one learned-AIMM scenario over the next app in the cycle
+    (`apps` repeated up to `n_phases`) — the unit of work a
+    `serving.MappingServer` slot executes per service tick.  `lineage` tags
+    the lane so `continual.run_stream` can also execute the stream solo (the
+    serving layer re-tags with the tenant id itself); pass a shared `traces`
+    dict so a whole tenant fleet reuses one Trace per (app, n_ops)."""
+    n_phases = len(apps) if n_phases is None else n_phases
+    traces = traces if traces is not None else {}
+    stream = []
+    for pi in range(n_phases):
+        app = apps[pi % len(apps)]
+        key = (app, n_ops_per_app)
+        if key not in traces:
+            traces[key] = make_trace(app, n_ops=n_ops_per_app)
+        stream.append([Scenario(
+            name=f"p{pi}:{app}/aimm", trace=traces[key],
+            technique=technique, mapper="aimm", seed=seed,
+            episodes=episodes, lineage=lineage)])
+    return stream
+
+
+def tenant_fleet(n_tenants: int = 8,
+                 apps: Sequence[str] = ("KM", "SC", "PR", "SPMV"),
+                 n_phases: int = 2,
+                 n_ops_per_app: int = 512,
+                 technique: str = "bnmp",
+                 episodes: int = 1,
+                 seed0: int = 0) -> dict[str, list[list[Scenario]]]:
+    """A heterogeneous fleet of single-lane tenant streams for the serving
+    layer: tenant `t<i>` cycles through `apps` starting at offset i with
+    seed `seed0 + i`, and all tenants share one Trace object per
+    (app, n_ops) — the many-concurrent-tenants workload of the
+    multi-tenant mapping service (see nmp.serving / bench_serving)."""
+    traces: dict = {}
+    return {
+        f"t{i:03d}": tenant_stream(
+            apps=tuple(apps[(i + k) % len(apps)] for k in range(len(apps))),
+            n_phases=n_phases, n_ops_per_app=n_ops_per_app,
+            technique=technique, episodes=episodes, seed=seed0 + i,
+            traces=traces)
+        for i in range(n_tenants)}
+
+
 GRIDS: dict[str, Callable[..., list[Scenario]]] = {
     "single": single_program_grid,
     "multi": multi_program_grid,
@@ -257,6 +316,7 @@ GRIDS: dict[str, Callable[..., list[Scenario]]] = {
 
 STREAMS: dict[str, Callable[..., list[list[Scenario]]]] = {
     "switch": continual_stream,
+    "tenant": tenant_stream,
 }
 
 

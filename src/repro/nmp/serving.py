@@ -1,0 +1,409 @@
+"""Streaming multi-tenant mapping service: many concurrent tenant streams
+through a small set of resident compiled lane-slot programs.
+
+The paper's mapper is *continual* — it keeps learning "for any application"
+— but `continual.run_stream` is an offline, one-stream batch loop.  This
+module is the long-lived serving layer the north star asks for:
+
+  MappingServer : holds `n_slots` lane slots and one bounded `PolicyStore`.
+                  Tenants (`submit(tenant_id, stream)`) queue for a slot;
+                  a slot executes one phase of its tenant's stream per
+                  service tick and is recycled when the tenant's stream is
+                  drained (or the tenant is `remove`d mid-stream).  Each
+                  tick batches the current phase of every active tenant
+                  into ONE `run_grid`-shaped compiled call, reusing the
+                  plan / partition / sweep pipeline with a *forced*
+                  `plan.Envelope` and a *fixed* padded lane count — so the
+                  resident programs' static shapes never change as tenants
+                  arrive and depart, and nothing recompiles at steady state
+                  (`sweep.compiled_sweep_programs` tracks this).
+
+Scheduling and exactness: every slot is an independent lane of the sweep,
+and per-lane results are bit-identical to serial runs regardless of padding
+envelope or co-lanes (the pipeline's standing invariant), so a tenant's
+per-phase metrics are bit-identical to running its stream alone via
+`continual.run_stream` with the same lineage tag (tests/test_serving.py).
+Agent continuity goes through the shared `PolicyStore` exactly as in
+`run_grid` — the tenant id is the lineage tag — so a bounded store with LRU
+eviction serves an unbounded tenant population: an evicted tenant's next
+phase transparently cold-restarts its lineage.
+
+Double buffering: the compiled call is dispatched asynchronously and the
+*next* tick's host batch is built and transferred (`jax.device_put` inside
+`sweep.prepare_group_batch`) while the devices execute the current one, so
+the engine never idles on host->device I/O.  The schedule of tick t+1 is a
+pure function of the queue/slot bookkeeping — it never waits on tick t's
+results; only the warm agent batch does.
+
+Metrics: `MappingServer.stats()` reports per-phase latency p50/p99,
+steady-state epochs/sec (ticks after the last compile), slot occupancy,
+recompile and eviction counts, plus a per-tenant table — the record
+`benchmarks/bench_serving.py` writes to bench_out/BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.nmp import baselines, partition
+from repro.nmp import plan as plan_mod
+from repro.nmp import sweep as sweep_mod
+from repro.nmp.config import NMPConfig
+from repro.nmp.continual import PolicyStore, check_tag
+from repro.nmp.engine import (BodyFlags, default_agent_cfg, pei_top_k,
+                              state_spec_for)
+from repro.nmp.plan import Envelope, needs_agent, plan_envelope, plan_grid
+from repro.nmp.scenarios import Scenario
+from repro.nmp.sweep import SweepResult
+
+
+def solo_stream(tenant_id: str,
+                stream: Sequence[Sequence[Scenario] | Scenario]
+                ) -> list[list[Scenario]]:
+    """The reference protocol for one tenant: its stream re-tagged exactly
+    as the server tags it (lineage == tenant id), runnable standalone via
+    `continual.run_stream`.  A tenant's per-phase serving results are
+    bit-identical to this solo run's."""
+    return [[dataclasses.replace(_phase_scenario(ph), lineage=tenant_id)]
+            for ph in stream]
+
+
+def _phase_scenario(phase) -> Scenario:
+    """Normalize one stream phase to its single scenario (serving slots are
+    one lane wide; a phase may be a Scenario or a [Scenario])."""
+    if isinstance(phase, Scenario):
+        return phase
+    phase = list(phase)
+    if len(phase) != 1:
+        raise ValueError(
+            f"serving streams are single-lane: each phase must hold exactly "
+            f"one scenario (got {len(phase)})")
+    return phase[0]
+
+
+@dataclasses.dataclass
+class Tenant:
+    """Bookkeeping for one submitted tenant stream."""
+    tenant_id: str
+    phases: list[Scenario]           # re-tagged, one scenario per phase
+    cursor: int = 0                  # next phase to serve
+    slot: int | None = None
+    done: bool = False
+    removed: bool = False
+    latencies: list = dataclasses.field(default_factory=list)
+    results: list = dataclasses.field(default_factory=list)
+                                     # per served phase: (SweepResult, lane)
+
+    @property
+    def remaining(self) -> int:
+        return len(self.phases) - self.cursor
+
+
+class MappingServer:
+    """Long-lived multi-tenant mapping service (see module docstring).
+
+    `n_slots` is rounded up to the device-mesh width, so slot-sharded
+    serving works unchanged on a forced multi-device host.  `envelope`
+    fixes the resident programs' padded shapes up front; by default it is
+    inferred (and frozen) from everything submitted before the first tick,
+    and later submissions must fit it.  `store` (or `store_capacity`)
+    bounds the lineage store; `keep_results=False` drops per-phase metric
+    arrays after recording latencies (long-running servers)."""
+
+    def __init__(self, cfg: NMPConfig = NMPConfig(), n_slots: int = 8,
+                 envelope: Envelope | None = None,
+                 agent_cfg=None, store: PolicyStore | None = None,
+                 store_capacity: int | None = None,
+                 keep_results: bool = True):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1 (got {n_slots})")
+        self.cfg = cfg
+        self.mesh = partition.build_mesh()
+        self.n_slots = partition.padded_lane_count(n_slots, self.mesh)
+        self.spec = state_spec_for(cfg)
+        self.agent_cfg = agent_cfg or default_agent_cfg(cfg)
+        if store is not None and store_capacity is not None:
+            raise ValueError("pass either store or store_capacity, not both")
+        self.store = (store if store is not None
+                      else PolicyStore(capacity=store_capacity))
+        self.envelope = envelope
+        self.keep_results = keep_results
+
+        self._tenants: dict[str, Tenant] = {}
+        self._queue: deque[str] = deque()
+        self._slots: list[str | None] = [None] * self.n_slots
+        self._episodes: int | None = (envelope.n_episodes
+                                      if envelope is not None else None)
+        self._flags = BodyFlags(has_agent=True, any_aimm=True, any_tom=False,
+                                pei_k=0)
+        self._tom_cands = None
+        self._pending = None             # prepared-but-unserved next tick
+        # service metrics
+        self.ticks = 0
+        self._tick_wall: list[float] = []
+        self._tick_active: list[int] = []
+        self._tick_compiles: list[int] = []
+        self._phases_served = 0
+
+    # -- tenant lifecycle ----------------------------------------------
+
+    def submit(self, tenant_id: str,
+               stream: Sequence[Sequence[Scenario] | Scenario]) -> None:
+        """Enqueue a tenant stream.  The tenant id becomes the lineage tag
+        of every phase (duplicate ids — which would silently share one DQN
+        across tenants — are rejected while the earlier tenant is live)."""
+        check_tag(tenant_id)
+        prev = self._tenants.get(tenant_id)
+        if prev is not None and not prev.done:
+            raise ValueError(
+                f"tenant {tenant_id!r} is already live (queued or in a "
+                "slot); duplicate lineage tags would share one DQN across "
+                "tenants — wait for it to drain or pick a distinct id")
+        phases = [dataclasses.replace(_phase_scenario(ph),
+                                      lineage=tenant_id) for ph in stream]
+        if not phases:
+            raise ValueError(f"tenant {tenant_id!r}: empty stream")
+        for sc in phases:
+            self._validate_scenario(tenant_id, sc)
+        for sc in phases:
+            self._absorb_flags(sc)
+        self._tenants[tenant_id] = Tenant(tenant_id=tenant_id, phases=phases)
+        self._queue.append(tenant_id)
+        self._pending = None             # schedule changed; re-prepare
+
+    def remove(self, tenant_id: str) -> None:
+        """Depart a tenant mid-stream: frees its slot (or queue entry) at
+        the next tick.  Its lineage stays in the store until evicted."""
+        t = self._tenants[tenant_id]
+        if t.done:
+            return
+        t.done = t.removed = True
+        if t.slot is not None:
+            self._slots[t.slot] = None
+            t.slot = None
+        else:
+            self._queue = deque(q for q in self._queue if q != tenant_id)
+        self._pending = None             # schedule changed; re-prepare
+
+    def _validate_scenario(self, tenant_id: str, sc: Scenario) -> None:
+        if not needs_agent(sc):
+            raise ValueError(
+                f"tenant {tenant_id!r}: serving slots run learned-AIMM "
+                f"lanes (got mapper={sc.mapper!r}, "
+                f"forced_action={sc.forced_action})")
+        if sc.topology is not None and sc.topology != self.cfg.topology:
+            raise ValueError(
+                f"tenant {tenant_id!r}: scenario topology {sc.topology!r} "
+                f"differs from the server's {self.cfg.topology!r}; one "
+                "resident program serves one interconnect")
+        if self._episodes is None:
+            self._episodes = sc.total_episodes
+        elif sc.total_episodes != self._episodes:
+            raise ValueError(
+                f"tenant {tenant_id!r}: phase runs {sc.total_episodes} "
+                f"episodes but the server's resident programs are fixed at "
+                f"{self._episodes}; all tenants must share one phase "
+                "episode count")
+        if self.envelope is not None:
+            need = plan_envelope([sc], self.cfg)
+            if not self.envelope.dominates(need):
+                raise ValueError(
+                    f"tenant {tenant_id!r}: phase needs envelope {need} "
+                    f"but the server's is frozen at {self.envelope}")
+
+    def _absorb_flags(self, sc: Scenario) -> None:
+        """Grow the resident programs' static BodyFlags monotonically (a new
+        capability — e.g. the first PEI tenant — recompiles once; the flags
+        stay a superset of every lane's needs, which the engine's per-lane
+        gating makes exact)."""
+        if sc.technique == "pei":
+            k = pei_top_k(sc.trace.n_pages, self.cfg)
+            if k > self._flags.pei_k:
+                self._flags = dataclasses.replace(self._flags, pei_k=k)
+                self._pending = None
+
+    # -- scheduling ----------------------------------------------------
+
+    def _freeze_envelope(self) -> None:
+        if self.envelope is None:
+            scs = [sc for t in self._tenants.values() if not t.done
+                   for sc in t.phases]
+            env = plan_envelope(scs, self.cfg)
+            # phase episode counts are uniform (enforced at submit)
+            self.envelope = dataclasses.replace(env,
+                                                n_episodes=self._episodes)
+        if self._tom_cands is None:
+            self._tom_cands = partition.replicate(
+                baselines.tom_candidates(self.envelope.n_pages_max, self.cfg),
+                self.mesh)
+
+    def _schedule(self) -> list[tuple[int, Tenant]]:
+        """Assign queued tenants to free slots and return the active
+        (slot, tenant) pairs in slot order — the lane order of the tick's
+        compiled call.  Pure bookkeeping: never waits on device results."""
+        for i, tid in enumerate(self._slots):
+            if tid is None and self._queue:
+                nxt = self._queue.popleft()
+                self._slots[i] = nxt
+                self._tenants[nxt].slot = i
+        return [(i, self._tenants[tid])
+                for i, tid in enumerate(self._slots) if tid is not None]
+
+    def _prepare_next(self):
+        """Build (and host->device transfer) the next tick's batch, or None
+        when no tenant has work.  Callable while a previous tick is still
+        executing on device (double buffering)."""
+        sched = self._schedule()
+        if not sched:
+            return None
+        self._freeze_envelope()
+        scs = [t.phases[t.cursor] for _, t in sched]
+        plan = plan_grid(scs, self.cfg, envelope=self.envelope)
+        groups = [g for g in plan.groups if g.n_lanes]
+        assert len(groups) == 1, "serving lanes form one lineage group"
+        group = groups[0]
+        batch, _ = sweep_mod.prepare_group_batch(plan, group, self.cfg,
+                                                 self.mesh,
+                                                 n_lanes=self.n_slots)
+        return (sched, scs, plan, group, batch)
+
+    def _advance(self, sched: list[tuple[int, Tenant]]) -> None:
+        """Consume the served phase of every scheduled tenant and recycle
+        the slots of drained tenants (deterministic — usable before the
+        tick's results land)."""
+        for slot, t in sched:
+            t.cursor += 1
+            if t.cursor >= len(t.phases):
+                t.done = True
+                t.slot = None
+                self._slots[slot] = None
+
+    # -- serving -------------------------------------------------------
+
+    def _serve_one(self, prepared, overlap: bool):
+        sched, scs, plan, group, batch = prepared
+        warm = sweep_mod._warm_agent_batch(group, self.n_slots, self.store,
+                                           self.agent_cfg)
+        n_prog0 = sweep_mod.compiled_sweep_programs()
+        t0 = time.perf_counter()
+        out, _env_fin, agent_fin = sweep_mod.dispatch_sweep(
+            batch, self._tom_cands, self.cfg, self.spec, self.agent_cfg,
+            self.envelope.n_epochs, group.n_episodes, self.envelope.ring_len,
+            self._flags, warm_agent=warm, want_agent=True)
+        self._advance(sched)
+        # the devices are executing this tick: overlap the next tick's host
+        # batch build + transfer with it
+        nxt = self._prepare_next() if overlap else None
+        out = jax.block_until_ready(out)
+        agent_fin = jax.block_until_ready(agent_fin)
+        wall = time.perf_counter() - t0
+        self._complete(sched, scs, out, agent_fin, group, wall,
+                       sweep_mod.compiled_sweep_programs() - n_prog0)
+        return nxt
+
+    def _complete(self, sched, scs, out, agent_fin, group, wall: float,
+                  compiles: int) -> None:
+        S = group.n_seeds            # always 1: tenants never fold together
+        res = SweepResult(
+            scenarios=scs, cfg=self.cfg,
+            metrics={k: np.stack([np.asarray(v[li, 0]) for li in
+                                  range(len(sched))]) for k, v in out.items()},
+            final_env=None, n_episodes=group.n_episodes, wall_s=wall)
+        for li, (slot, t) in enumerate(sched):
+            cell = jax.tree.map(
+                lambda a, li=li: np.asarray(a[li * S]), agent_fin)
+            self.store.put(t.tenant_id, cell, scenario=scs[li].name,
+                           tenant=t.tenant_id)
+            t.latencies.append(wall)
+            if self.keep_results:
+                t.results.append((res, li))
+        self.ticks += 1
+        self._phases_served += len(sched)
+        self._tick_wall.append(wall)
+        self._tick_active.append(len(sched))
+        self._tick_compiles.append(compiles)
+
+    def tick(self) -> int:
+        """Run one synchronous service step.  Returns the number of tenant
+        phases served (0 = no work pending)."""
+        prepared = self._pending or self._prepare_next()
+        self._pending = None
+        if prepared is None:
+            return 0
+        self._serve_one(prepared, overlap=False)
+        return self._tick_active[-1]
+
+    def run(self, max_ticks: int | None = None) -> int:
+        """Drain every submitted stream, double-buffering the next tick's
+        host batch against the current device step.  Returns ticks run."""
+        n = 0
+        if self._pending is None:
+            self._pending = self._prepare_next()
+        while self._pending is not None:
+            if max_ticks is not None and n >= max_ticks:
+                break
+            self._pending = self._serve_one(self._pending, overlap=True)
+            n += 1
+        return n
+
+    # -- results & metrics ---------------------------------------------
+
+    def tenant(self, tenant_id: str) -> Tenant:
+        return self._tenants[tenant_id]
+
+    def tenant_metrics(self, tenant_id: str, phase: int) -> dict:
+        """The raw per-episode metric arrays of one served tenant phase —
+        directly comparable (bit-exact) to the matching
+        `run_stream(solo_stream(...))` phase's `metrics[...][lane]`."""
+        res, lane = self._tenants[tenant_id].results[phase]
+        return {k: v[lane] for k, v in res.metrics.items()}
+
+    def tenant_summary(self, tenant_id: str, phase: int,
+                       episode: int | None = None) -> dict:
+        res, lane = self._tenants[tenant_id].results[phase]
+        return res.episode_summary(lane, episode)
+
+    def stats(self) -> dict:
+        """Service-level metrics surface (the BENCH_serving.json record)."""
+        lat = np.asarray([w for t in self._tenants.values()
+                          for w in t.latencies], np.float64)
+        wall = np.asarray(self._tick_wall, np.float64)
+        active = np.asarray(self._tick_active, np.float64)
+        compiles = np.asarray(self._tick_compiles, int)
+        # steady state: ticks after the last one that compiled anything
+        last_c = int(np.max(np.nonzero(compiles)[0])) if compiles.any() else -1
+        steady = slice(last_c + 1, None)
+        ep = self.envelope
+        epochs_per_tick = (active * ep.n_epochs * ep.n_episodes
+                           if ep is not None else active * 0)
+        steady_wall = float(wall[steady].sum())
+        return {
+            "ticks": self.ticks,
+            "n_slots": self.n_slots,
+            "n_devices": partition.mesh_desc(self.mesh)["n_devices"],
+            "tenants_submitted": len(self._tenants),
+            "tenants_done": sum(t.done for t in self._tenants.values()),
+            "tenants_removed": sum(t.removed for t in self._tenants.values()),
+            "phases_served": self._phases_served,
+            "phase_latency_p50_s": (float(np.percentile(lat, 50))
+                                    if lat.size else None),
+            "phase_latency_p99_s": (float(np.percentile(lat, 99))
+                                    if lat.size else None),
+            "slot_occupancy": (float((active / self.n_slots).mean())
+                               if active.size else 0.0),
+            "recompiles_total": int(compiles.sum()),
+            "recompiles_after_first_tick": (int(compiles[1:].sum())
+                                            if compiles.size else 0),
+            "steady_ticks": int(wall[steady].size),
+            "steady_epochs_per_sec": (
+                float(epochs_per_tick[steady].sum() / steady_wall)
+                if steady_wall > 0 and wall[steady].size else None),
+            "store": {"tags": len(self.store), "capacity":
+                      self.store.capacity, "evictions":
+                      self.store.evictions},
+        }

@@ -256,6 +256,58 @@ def _warm_agent_batch(group, n_lanes_padded: int, store, agent_cfg):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
 
 
+def prepare_group_batch(plan: GridPlan, group, group_cfg: NMPConfig, mesh,
+                        n_lanes: int | None = None):
+    """Host-side build + device placement of one group's input batch.
+
+    `n_lanes` forces the padded lane count (the serving layer's fixed slot
+    programs); by default the group is padded to the smallest
+    device-divisible lane count.  Returns (device batch, padded lane count).
+    The host->device transfer happens here, so a caller can overlap it with
+    a previously dispatched compiled call (double buffering)."""
+    n_lanes_padded = (partition.padded_lane_count(group.n_lanes, mesh)
+                      if n_lanes is None else n_lanes)
+    if n_lanes_padded < group.n_lanes:
+        raise ValueError(f"n_lanes={n_lanes_padded} < group lane count "
+                         f"{group.n_lanes}")
+    if n_lanes_padded != partition.padded_lane_count(n_lanes_padded, mesh):
+        raise ValueError(f"n_lanes={n_lanes_padded} is not divisible by the "
+                         "device mesh width")
+    batch_np = plan_mod.build_group_batch(plan, group, group_cfg)
+    batch_np = partition.pad_group_batch(batch_np, n_lanes_padded)
+    return partition.shard_group_batch(batch_np, mesh), n_lanes_padded
+
+
+def dispatch_sweep(batch, tom_cands, group_cfg: NMPConfig, spec, agent_cfg,
+                   n_epochs: int, n_episodes: int, ring_len: int, flags,
+                   warm_agent=None, want_agent: bool = False):
+    """Dispatch the compiled sweep for one prepared group batch.
+
+    The call is asynchronous: the returned (outs, final env, final agent)
+    leaves are unmaterialized jax arrays — block (`jax.block_until_ready`)
+    when the values are needed, and build the *next* batch in between to
+    hide its host->device transfer behind the running program."""
+    with warnings.catch_warnings():
+        # int trace/ctx buffers have no same-shaped outputs to reuse;
+        # their donation being unusable is expected, not a leak.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _run_sweep(batch, tom_cands, group_cfg, spec, agent_cfg,
+                          n_epochs, n_episodes, ring_len, flags,
+                          warm_agent=warm_agent, want_agent=want_agent)
+
+
+def compiled_sweep_programs() -> int:
+    """Number of distinct compiled sweep programs resident in the jit cache.
+
+    The serving layer's steady-state guarantee is that this stays constant
+    across service ticks once the slot programs are warm."""
+    try:
+        return int(_run_sweep._cache_size())
+    except AttributeError:                     # pragma: no cover - jax API
+        return 0
+
+
 def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
              agent_cfg=None, store=None) -> SweepResult:
     """Run every scenario cell of a grid through the plan -> partition ->
@@ -297,21 +349,14 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
     envs: list = [None] * len(scenarios)
     for group in plan.groups:
         group_cfg = dataclasses.replace(cfg, topology=group.topology)
-        n_lanes_padded = partition.padded_lane_count(group.n_lanes, mesh)
-        batch_np = plan_mod.build_group_batch(plan, group, group_cfg)
-        batch_np = partition.pad_group_batch(batch_np, n_lanes_padded)
-        batch = partition.shard_group_batch(batch_np, mesh)
+        batch, n_lanes_padded = prepare_group_batch(plan, group, group_cfg,
+                                                    mesh)
         warm = (_warm_agent_batch(group, n_lanes_padded, store, agent_cfg)
                 if group.lineage else None)
-        with warnings.catch_warnings():
-            # int trace/ctx buffers have no same-shaped outputs to reuse;
-            # their donation being unusable is expected, not a leak.
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            out, env_fin, agent_fin = _run_sweep(
-                batch, tom_cands, group_cfg, spec, agent_cfg, plan.n_epochs,
-                group.n_episodes, plan.ring_len, group.flags,
-                warm_agent=warm, want_agent=group.lineage)
+        out, env_fin, agent_fin = dispatch_sweep(
+            batch, tom_cands, group_cfg, spec, agent_cfg, plan.n_epochs,
+            group.n_episodes, plan.ring_len, group.flags,
+            warm_agent=warm, want_agent=group.lineage)
         out = jax.block_until_ready(out)
         pad_l = n_links_max - get_topology(group_cfg).n_links
         if pad_l:

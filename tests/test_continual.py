@@ -92,6 +92,51 @@ def test_store_put_get_checkout_and_tag_validation():
             store.put(bad, ag)
 
 
+def test_store_capacity_lru_eviction_and_versioning():
+    """A bounded store evicts the least-recently-used lineage on overflow;
+    `put` and `checkout` both refresh recency, the just-put tag is never the
+    victim (capacity=1 works), and a tag's `version` keeps counting across
+    eviction so a returning lineage is observably a later incarnation."""
+    with pytest.raises(ValueError, match="capacity"):
+        PolicyStore(capacity=0)
+    ag = A.cold_start(0, ACFG)
+    store = PolicyStore(capacity=2)
+    store.put("a", ag)
+    store.put("b", ag)
+    store.checkout("a")                      # recency now: b < a
+    store.put("c", ag)                       # overflow -> evict LRU "b"
+    assert store.tags == ["a", "c"] and "b" not in store
+    assert store.evictions == 1
+    assert store.meta["b"]["evicted"] == 1   # provenance survives eviction
+    store.put("b", ag)                       # returning tag -> evict "a"
+    assert store.tags == ["b", "c"]
+    assert store.version("b") == 2           # version continued across evict
+    # capacity=1: every put displaces the previous resident, never itself
+    one = PolicyStore(capacity=1)
+    for t in ("x", "y", "x"):
+        one.put(t, ag)
+    assert one.tags == ["x"] and one.evictions == 2
+    # a pre-populated over-capacity store trims on construction
+    trimmed = PolicyStore(agents={"a": A.export_agent(ag),
+                                  "b": A.export_agent(ag)}, capacity=1)
+    assert len(trimmed) == 1
+
+
+def test_store_capacity_and_evictions_survive_checkpoint(tmp_path):
+    """save/restore round-trips the capacity bound and the lifetime eviction
+    counter, and the restored store remembers its checkpoint step (the hook
+    run_stream uses to realign resumed histories)."""
+    ag = A.cold_start(0, ACFG)
+    store = PolicyStore(capacity=2)
+    for t in ("a", "b", "c"):
+        store.put(t, ag)
+    step = store.save(str(tmp_path))
+    back = PolicyStore.restore(str(tmp_path), ACFG, step=step)
+    assert back.capacity == 2 and back.evictions == 1
+    assert back.tags == store.tags
+    assert back.restored_step == step and store.restored_step is None
+
+
 # ---------------------------------------------------------------------------
 # Warm-start grids
 # ---------------------------------------------------------------------------
@@ -196,6 +241,38 @@ def test_store_checkpoint_roundtrip_bit_exact(tmp_path):
     assert CheckpointManager(str(tmp_path)).all_steps() == [0, 1, 2, 3, 4]
     assert _leaves_equal(
         PolicyStore.restore(str(tmp_path), ACFG, step=0).get("t"), a)
+
+
+def test_resume_from_older_step_realigns_checkpoint_history(tmp_path):
+    """The stop/resume bugfix: resuming a checkpointed stream from an older
+    step `k` must write the re-run phases at `k+1, k+2, ...` — overwriting
+    the now-stale later steps — not append them at `latest+1`, which left
+    the directory's step <-> phase mapping silently misaligned."""
+    ck = str(tmp_path / "ck")
+    stream = build_stream("switch", n_ops_per_app=384, episodes=1,
+                          include_baseline=False)
+    full = run_stream(stream, CFG, checkpoint_dir=ck)
+    from repro.train.checkpoint import CheckpointManager
+    assert CheckpointManager(ck).all_steps() == [0, 1, 2]
+
+    # resume from step 0 (end of phase 0) and re-run phases 1..2
+    store = PolicyStore.restore(ck, ACFG, step=0)
+    res = run_stream(stream[1:], CFG, store=store, checkpoint_dir=ck)
+    # steps 1 and 2 were overwritten in place — nothing appended at 3, 4
+    assert CheckpointManager(ck).all_steps() == [0, 1, 2]
+    for pi in (0, 1):
+        for k in ("cycles", "ops", "opc_t"):
+            np.testing.assert_array_equal(res.phases[pi].metrics[k],
+                                          full.phases[pi + 1].metrics[k],
+                                          err_msg=f"phase{pi + 1} {k}")
+    # step 2 now again holds the end-of-stream store, bit-exactly
+    assert _leaves_equal(
+        PolicyStore.restore(ck, ACFG, step=2).get("stream"),
+        full.store.get("stream"))
+    # an explicit base step wins over the restored-step default
+    run_stream(stream[2:], CFG, store=PolicyStore.restore(ck, ACFG, step=1),
+               checkpoint_base_step=7, checkpoint_dir=ck)
+    assert CheckpointManager(ck).all_steps() == [0, 1, 2, 7]
 
 
 _RESUME_SCRIPT = textwrap.dedent("""

@@ -97,6 +97,17 @@ def test_hoard_alloc_skips_zero_page_programs():
     assert occupancy.max() <= 2                        # balanced, not piled
 
 
+def test_hoard_alloc_zero_page_trace_and_owner_mismatch():
+    """A zero-page trace used to crash hoard_alloc (empty bincount/argmax);
+    it must degrade to an empty allocation.  A program-owner vector whose
+    length disagrees with n_pages is a caller bug and must be a clear
+    ValueError, not a silent mis-allocation."""
+    table = hoard_alloc(0, CFG, np.zeros(0, np.int32))
+    assert table.shape == (0,) and table.dtype == np.int32
+    with pytest.raises(ValueError, match="one owner per page"):
+        hoard_alloc(16, CFG, np.zeros(8, np.int32))
+
+
 def test_page_cache_depths_follow_config():
     """PageInfoCache history depths come from NMPConfig (satellite): custom
     depths resize the cache rows AND the matching state-vector slices, and

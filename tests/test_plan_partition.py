@@ -7,6 +7,7 @@ because `XLA_FLAGS=--xla_force_host_platform_device_count=4` must be set
 before jax initializes.  The same path runs in-process for the whole suite
 on the CI job that exports that flag globally (see .github/workflows/ci.yml).
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -162,6 +163,55 @@ def test_plan_rejects_ragged_lineage_episode_counts():
     assert plan_grid(cold, CFG).groups[0].n_episodes == 3
 
 
+def test_empty_grid_raises_clear_error():
+    """`run_grid([])` historically died with a bare IndexError deep in the
+    plan layer; an empty grid (or an empty stream phase) must fail at
+    `plan_grid` with an actionable message instead."""
+    from repro.nmp.continual import run_stream
+    from repro.nmp.plan import plan_envelope
+    from repro.nmp.sweep import run_grid
+    with pytest.raises(ValueError, match="empty scenario grid"):
+        plan_grid([], CFG)
+    with pytest.raises(ValueError, match="empty scenario grid"):
+        run_grid([], CFG)
+    with pytest.raises(ValueError, match="empty scenario grid"):
+        run_stream([[]], CFG)               # a stream with an empty phase
+    with pytest.raises(ValueError, match="empty scenario grid"):
+        plan_envelope([], CFG)
+
+
+def test_envelope_dominance_and_forced_plan():
+    """A forced envelope must dominate the grid's own; when it does, its
+    padded dims replace the derived ones (the serving layer's fixed-shape
+    contract) — and episode padding of lineage lanes is still refused."""
+    from repro.nmp.plan import Envelope, plan_envelope
+    small = make_trace("KM", n_ops=256)
+    big = make_trace("KM", n_ops=512)
+    need = plan_envelope([Scenario(name="s", trace=small, mapper="aimm")],
+                         CFG)
+    env = plan_envelope([Scenario(name="b", trace=big, mapper="aimm",
+                                  episodes=1)], CFG)
+    assert env.dominates(need) and not need.dominates(env)
+    forced = plan_grid([Scenario(name="s", trace=small, mapper="aimm")],
+                       CFG, envelope=env)
+    assert (forced.n_ops_max, forced.n_pages_max) == (env.n_ops_max,
+                                                      env.n_pages_max)
+    assert forced.n_epochs == env.n_epochs
+    assert forced.groups[0].n_episodes == env.n_episodes
+    with pytest.raises(ValueError, match="does not cover"):
+        plan_grid([Scenario(name="b", trace=big, mapper="aimm")], CFG,
+                  envelope=need)
+    # a forced envelope must not pad a lineage lane's episode schedule
+    wide = dataclasses.replace(env, n_episodes=3)
+    with pytest.raises(ValueError, match="past its schedule"):
+        plan_grid([Scenario(name="s", trace=small, mapper="aimm",
+                            lineage="t", episodes=1)], CFG, envelope=wide)
+    # ...but cold lanes simply pad (no agent schedule to corrupt)
+    cold = plan_grid([Scenario(name="s", trace=small, mapper="none")], CFG,
+                     envelope=wide)
+    assert cold.groups[0].n_episodes == 3
+
+
 # ---------------------------------------------------------------------------
 # Partition layer
 # ---------------------------------------------------------------------------
@@ -179,6 +229,14 @@ def test_pad_group_batch_repeats_lane_zero():
     np.testing.assert_array_equal(out["x"][3], batch["x"][0])
     same = partition.pad_group_batch(batch, 3)
     assert same["x"].shape == (3, 2)
+
+
+def test_pad_group_batch_rejects_empty_batch():
+    """An empty group batch used to escape as a bare StopIteration from
+    `next(iter(...))` (which a surrounding generator would silently swallow
+    as exhaustion); it must be a clear ValueError."""
+    with pytest.raises(ValueError, match="empty group batch"):
+        partition.pad_group_batch({}, 4)
 
 
 def test_sweep_devices_env_validation(monkeypatch):

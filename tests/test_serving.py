@@ -1,0 +1,220 @@
+"""Streaming multi-tenant mapping service (nmp.serving).
+
+Pins the serving layer's contract: per-tenant phase results bit-identical to
+running the tenant's stream alone via `continual.run_stream`; resident
+compiled programs that never recompile at steady state as tenants churn;
+slot recycling under arrival/departure; duplicate lineage tags rejected; and
+a capacity-bounded PolicyStore serving more tenants than its capacity —
+surviving lineages bit-exact, evicted ones cold-restarting transparently.
+"""
+import numpy as np
+import pytest
+
+from repro.nmp import NMPConfig, partition, sweep
+from repro.nmp.continual import PolicyStore, run_stream
+from repro.nmp.scenarios import Scenario, tenant_fleet, tenant_stream
+from repro.nmp.serving import MappingServer, solo_stream
+from repro.nmp.traces import make_trace
+
+CFG = NMPConfig()
+N_OPS = 384
+# n_slots rounds up to the device-mesh width, so slot-count-sensitive
+# assertions must use the effective count (the forced-4-device CI lane runs
+# this file with every slot program sharded over a 4-wide lane mesh)
+SLOTS2 = partition.padded_lane_count(2, partition.build_mesh())
+
+
+def _fleet(n_tenants, n_phases=2, apps=("KM", "SC")):
+    return tenant_fleet(n_tenants=n_tenants, apps=apps, n_phases=n_phases,
+                        n_ops_per_app=N_OPS)
+
+
+def _submit_all(srv, fleet):
+    for tid, stream in fleet.items():
+        srv.submit(tid, stream)
+
+
+def _assert_tenant_matches_solo(srv, tid, stream, cfg=CFG):
+    solo = run_stream(solo_stream(tid, stream), cfg)
+    for pi in range(len(stream)):
+        served = srv.tenant_metrics(tid, pi)
+        want = solo.phases[pi].metrics
+        for k in sorted(want):
+            np.testing.assert_array_equal(served[k], want[k][0],
+                                          err_msg=f"{tid} phase{pi} {k}")
+
+
+def test_serving_bit_identical_to_solo_run_stream():
+    """Every tenant's per-phase metric arrays — served through shared slot
+    programs, mixed with other tenants, warm-started via the store — must
+    equal the tenant's solo run_stream bit-for-bit (the acceptance bar)."""
+    fleet = _fleet(3)
+    srv = MappingServer(CFG, n_slots=2)
+    _submit_all(srv, fleet)
+    srv.run()
+    assert all(srv.tenant(t).done for t in fleet)
+    for tid, stream in fleet.items():
+        _assert_tenant_matches_solo(srv, tid, stream)
+
+
+def test_zero_recompiles_at_steady_state():
+    """After the first tick compiles the resident slot program, further
+    ticks — tenant churn included — must not add compiled programs."""
+    fleet = _fleet(4, n_phases=2)
+    srv = MappingServer(CFG, n_slots=2)
+    _submit_all(srv, fleet)
+    served = srv.tick()
+    assert served == min(4, SLOTS2)
+    n_prog = sweep.compiled_sweep_programs()
+    while srv.tick():
+        pass
+    assert sweep.compiled_sweep_programs() == n_prog
+    st = srv.stats()
+    assert st["recompiles_after_first_tick"] == 0
+    assert st["phases_served"] == 8 and st["tenants_done"] == 4
+
+
+def test_tenant_churn_arrive_depart_mid_stream():
+    """Tenants arriving mid-service get recycled slots; a removed tenant
+    frees its slot without serving its remaining phases, and the remaining
+    tenants' results stay bit-identical to their solo runs."""
+    fleet = _fleet(2, n_phases=3)
+    srv = MappingServer(CFG, n_slots=2)
+    _submit_all(srv, fleet)
+    assert srv.tick() == 2
+    # depart t000 mid-stream; its slot must be recycled to the new arrival
+    srv.remove("t000")
+    late = tenant_stream(apps=("KM",), n_phases=1, n_ops_per_app=N_OPS,
+                         seed=9)
+    srv.submit("late", late)
+    srv.run()
+    t0, t1 = srv.tenant("t000"), srv.tenant("t001")
+    assert t0.removed and t0.done and len(t0.results) == 1
+    assert t1.done and len(t1.results) == 3
+    assert srv.tenant("late").done
+    _assert_tenant_matches_solo(srv, "t001", fleet["t001"])
+    _assert_tenant_matches_solo(srv, "late", late)
+    # removing a queued (never-scheduled) tenant works too
+    srv2 = MappingServer(CFG, n_slots=1)
+    _submit_all(srv2, _fleet(2, n_phases=1))
+    srv2.remove("t001")           # still queued: slot 0 holds t000
+    srv2.run()
+    assert srv2.tenant("t001").removed
+    assert len(srv2.tenant("t001").results) == 0
+
+
+def test_duplicate_tenant_ids_rejected_while_live():
+    fleet = _fleet(1)
+    srv = MappingServer(CFG, n_slots=2)
+    srv.submit("dup", fleet["t000"])
+    with pytest.raises(ValueError, match="already live"):
+        srv.submit("dup", fleet["t000"])
+    srv.run()
+    # a drained id may be reused (its lineage continues in the store)
+    srv.submit("dup", fleet["t000"])
+    srv.run()
+    assert srv.stats()["phases_served"] == 4
+
+
+def test_store_eviction_under_capacity_pressure():
+    """More tenants than store capacity: the server keeps serving, reports
+    evictions, and tenants that were never evicted mid-stream stay
+    bit-exact vs an unbounded-store run of the same fleet."""
+    fleet = _fleet(6, n_phases=2)
+    cap = SLOTS2 + 1                         # >= slots (warm actives), < 6
+    bounded = MappingServer(CFG, n_slots=2, store_capacity=cap)
+    _submit_all(bounded, fleet)
+    bounded.run()
+    st = bounded.stats()
+    assert st["store"]["evictions"] > 0
+    assert len(bounded.store) <= cap
+    assert st["tenants_done"] == 6
+    # slots hold a tenant to completion and capacity >= n_slots, so active
+    # lineages are always most-recent => never evicted mid-stream: every
+    # tenant must match its solo (= unbounded) run bit-exactly
+    for tid, stream in fleet.items():
+        _assert_tenant_matches_solo(bounded, tid, stream)
+
+
+def test_evicted_lineage_cold_restarts_transparently():
+    """capacity=1 with two interleaving tenants: each put evicts the other
+    tag, so every phase after the first cold-restarts its lineage — without
+    error, and bit-identical to a per-phase cold (fresh-lineage) run."""
+    tr = make_trace("KM", n_ops=N_OPS)
+    phases = [Scenario(name=f"p{i}:KM/aimm", trace=tr, mapper="aimm",
+                       seed=s) for i, s in ((0, 0), (1, 1))]
+    srv = MappingServer(CFG, n_slots=2, store_capacity=1)
+    srv.submit("a", [[p] for p in phases])
+    srv.submit("b", [[p] for p in phases])
+    srv.run()
+    assert srv.store.evictions > 0 and len(srv.store) == 1
+    # puts land in slot order (a then b) each tick, so with capacity=1 the
+    # store holds only "b" between ticks: "a" was evicted before its phase-1
+    # warm lookup and must equal a cold run of that phase alone, while "b"
+    # survived and must equal its warm solo run
+    from repro.nmp.sweep import run_grid
+    import dataclasses
+    cold = run_grid([dataclasses.replace(phases[1], lineage="fresh")], CFG)
+    got = srv.tenant_metrics("a", 1)
+    for k in ("cycles", "ops", "opc_t", "invoke_t"):
+        np.testing.assert_array_equal(got[k], cold.metrics[k][0],
+                                      err_msg=f"evicted a {k}")
+    _assert_tenant_matches_solo(srv, "b", [[p] for p in phases])
+
+
+def test_submit_validation():
+    tr = make_trace("KM", n_ops=N_OPS)
+    srv = MappingServer(CFG, n_slots=2)
+    with pytest.raises(ValueError, match="lineage tag"):
+        srv.submit("a/b", [[Scenario(name="x", trace=tr, mapper="aimm")]])
+    with pytest.raises(ValueError, match="empty stream"):
+        srv.submit("a", [])
+    with pytest.raises(ValueError, match="learned-AIMM"):
+        srv.submit("a", [[Scenario(name="x", trace=tr, mapper="none")]])
+    with pytest.raises(ValueError, match="single-lane"):
+        srv.submit("a", [[Scenario(name="x", trace=tr, mapper="aimm")] * 2])
+    srv.submit("a", [[Scenario(name="x", trace=tr, mapper="aimm",
+                               episodes=2)]])
+    with pytest.raises(ValueError, match="episode count"):
+        srv.submit("b", [[Scenario(name="x", trace=tr, mapper="aimm",
+                                   episodes=1)]])
+    with pytest.raises(ValueError, match="topology"):
+        srv.submit("c", [[Scenario(name="x", trace=tr, mapper="aimm",
+                                   episodes=2, topology="ring")]])
+
+
+def test_frozen_envelope_rejects_oversized_latecomer():
+    """Once the envelope freezes at the first tick, a tenant whose trace
+    exceeds it is rejected at submit (clear error, no recompile)."""
+    srv = MappingServer(CFG, n_slots=2)
+    srv.submit("small", tenant_stream(apps=("KM",), n_phases=1,
+                                      n_ops_per_app=N_OPS))
+    srv.tick()
+    with pytest.raises(ValueError, match="frozen"):
+        srv.submit("big", tenant_stream(apps=("KM",), n_phases=1,
+                                        n_ops_per_app=4 * N_OPS))
+
+
+def test_forced_envelope_and_slot_rounding():
+    """An explicit envelope admits anything it dominates from tick one, and
+    n_slots rounds up to the device-mesh width (1 on a single device)."""
+    from repro.nmp.plan import plan_envelope
+    big = tenant_stream(apps=("KM", "SC"), n_phases=2,
+                        n_ops_per_app=2 * N_OPS)
+    env = plan_envelope([sc for ph in big for sc in ph], CFG)
+    srv = MappingServer(CFG, n_slots=3, envelope=env)
+    srv.submit("small", tenant_stream(apps=("KM",), n_phases=1,
+                                      n_ops_per_app=N_OPS))
+    srv.submit("big", big)
+    srv.run()
+    assert srv.tenant("small").done and srv.tenant("big").done
+    _assert_tenant_matches_solo(srv, "big", big)
+
+
+def test_tenant_fleet_builder_shares_traces():
+    fleet = _fleet(4, n_phases=2)
+    assert len(fleet) == 4
+    traces = {id(sc.trace) for s in fleet.values() for ph in s for sc in ph}
+    assert len(traces) <= 2          # one Trace per (app, n_ops)
+    seeds = {sc.seed for s in fleet.values() for ph in s for sc in ph}
+    assert len(seeds) == 4           # heterogeneous tenants
