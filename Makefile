@@ -6,14 +6,21 @@
 #                     partition layer shards every grid over a 4-wide mesh,
 #                     and the serving tests multiplex tenants over slot-
 #                     sharded resident programs)
+#   make test-faults  the fault-injection suite (tests/test_faults.py) on the
+#                     default platform AND the forced 4-device platform —
+#                     tenant quarantine/rollback isolation, crash-safe
+#                     checkpoint durability (kill-resume), shrink-devices
 #   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record
 #                     + the continual warm-vs-cold record + the multi-tenant
-#                     serving record + the topology-axis record: writes
-#                     bench_out/BENCH_engine.json, BENCH_continual.json,
-#                     BENCH_serving.json and BENCH_topology.json)
+#                     serving record + the fault-tolerance record + the
+#                     topology-axis record: writes bench_out/BENCH_engine.json,
+#                     BENCH_continual.json, BENCH_serving.json,
+#                     BENCH_faults.json and BENCH_topology.json)
 #   make bench-continual  just the continual-stream warm-vs-cold benchmark
 #   make bench-serving    just the multi-tenant serving benchmark (64 tenant
 #                         streams through 16 resident slot programs)
+#   make bench-faults     just the fault-tolerance benchmark (recovery drills
+#                         + the divergence guard's no-fault overhead)
 #   make bench-topology   just the topology-axis benchmark (per-interconnect
 #                         learned-AIMM vs baseline + mesh warm-grid guard)
 #   make bench        every benchmark figure (BENCH_FULL=1 for paper scale)
@@ -24,8 +31,8 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast test-4dev bench-smoke bench-continual bench-serving \
-	bench-topology bench profile
+.PHONY: test test-fast test-4dev test-faults bench-smoke bench-continual \
+	bench-serving bench-faults bench-topology bench profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -40,14 +47,25 @@ test-4dev:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4 $$XLA_FLAGS" \
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q -m "not slow"
 
+# The fault-injection suite on both platforms: single-device and a forced
+# 4-device host (the quarantine/rollback isolation and the shrink-devices
+# re-mesh path are only fully exercised when lanes are device-sharded).
+test-faults:
+	$(PY) -m pytest -x -q tests/test_faults.py
+	XLA_FLAGS="--xla_force_host_platform_device_count=4 $$XLA_FLAGS" \
+	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q tests/test_faults.py
+
 bench-smoke:
-	BENCH_ONLY=fig5,engine,continual,serving,topology $(PY) benchmarks/run.py
+	BENCH_ONLY=fig5,engine,continual,serving,faults,topology $(PY) benchmarks/run.py
 
 bench-continual:
 	BENCH_ONLY=continual $(PY) benchmarks/run.py
 
 bench-serving:
 	BENCH_ONLY=serving $(PY) benchmarks/run.py
+
+bench-faults:
+	BENCH_ONLY=faults $(PY) benchmarks/run.py
 
 bench-topology:
 	BENCH_ONLY=topology $(PY) benchmarks/run.py

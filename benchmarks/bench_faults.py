@@ -1,0 +1,184 @@
+"""Fault-tolerance benchmark: recovery drills plus the no-fault overhead of
+the serving layer's divergence guard (nmp.faults + nmp.serving).
+
+Protocol, two halves:
+
+  * **Overhead** — the same `N_TENANTS`-tenant fleet is drained through
+    identical servers with no faults armed, alternating
+    `divergence_guard=False` and guard-on (the default) for
+    `OVERHEAD_REPS` pairs after a warmup drain; each arm keeps its fastest
+    steady-state epochs/sec (host scheduling noise between whole drains far
+    exceeds the guard's true cost).  The guard is the only standing cost of
+    the robustness layer — every fault hook is a plain `is not None` check
+    when unarmed — so the best-of ratio IS the robustness tax.  Target:
+    < 2% (`overhead_pct` in the record; only post-compile ticks count).
+
+  * **Recovery drills** — a fleet served under an armed `FaultPlan`: a
+    transiently poisoned warm agent (caught by the guard, retried
+    bit-identically), a persistently failing tenant (bounded retry ->
+    quarantine, co-tenants unaffected), silent store corruption (lineage
+    rollback to last-good version), and an on-disk checkpoint corruption
+    (restore falls back to the newest intact step).  The counters from
+    `MappingServer.stats()["faults"]` and the store land in the record,
+    plus a bit-identical spot check of an unaffected tenant against its
+    solo `run_stream`.
+
+Rows are emitted as CSV like every benchmark; the machine-readable record
+lands in ``bench_out/BENCH_faults.json`` (schema: benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import FULL, Timer, emit
+
+JSON_PATH = os.environ.get("BENCH_FAULTS_JSON",
+                           "bench_out/BENCH_faults.json")
+SERVING_JSON = os.environ.get("BENCH_SERVING_JSON",
+                              "bench_out/BENCH_serving.json")
+
+N_TENANTS = 24 if FULL else 12
+N_SLOTS = 4
+N_PHASES = 4
+N_OPS_PER_APP = 1024 if FULL else 512
+OVERHEAD_TARGET_PCT = 2.0
+OVERHEAD_REPS = 3
+
+
+def _drain(fleet, cfg, **server_kw):
+    from repro.nmp.serving import MappingServer
+    srv = MappingServer(cfg, n_slots=N_SLOTS, **server_kw)
+    for tid, stream in fleet.items():
+        srv.submit(tid, stream)
+    srv.run()
+    return srv
+
+
+def run():
+    from repro.nmp import NMPConfig, faults
+    from repro.nmp.continual import PolicyStore, run_stream
+    from repro.nmp.engine import default_agent_cfg
+    from repro.nmp.faults import FaultEvent, FaultPlan
+    from repro.nmp.scenarios import tenant_fleet
+    from repro.nmp.serving import solo_stream
+
+    cfg = NMPConfig()
+    fleet = tenant_fleet(n_tenants=N_TENANTS, n_phases=N_PHASES,
+                         n_ops_per_app=N_OPS_PER_APP)
+
+    # -- overhead: guard off vs guard on, no faults armed ---------------
+    # Alternating best-of-N: host scheduling noise between whole drains far
+    # exceeds the guard's true cost, so each arm keeps its fastest run.
+    _drain(fleet, cfg)               # warmup: both arms start with the
+                                     # resident programs compiled
+    reps_off, reps_on = [], []
+    with Timer() as t_on:
+        for rep in range(OVERHEAD_REPS):
+            # alternate which arm goes first: whichever drain runs second in
+            # a pair tends to see a warmer host, which would bias a fixed
+            # order by more than the guard costs
+            arms = [False, True] if rep % 2 == 0 else [True, False]
+            for guard in arms:
+                st = _drain(fleet, cfg, divergence_guard=guard).stats()
+                assert st["tenants_done"] == N_TENANTS
+                (reps_on if guard else reps_off).append(
+                    st["steady_epochs_per_sec"] or 0.0)
+            on = st                 # any stats dict: server shape for record
+    eps_off, eps_on = max(reps_off), max(reps_on)
+    overhead_pct = (100.0 * (eps_off - eps_on) / eps_off) if eps_off else 0.0
+
+    # -- recovery drills ------------------------------------------------
+    plan = FaultPlan([
+        FaultEvent("poison_agent", at=2, tenant="t001"),   # transient NaN
+    ] + [FaultEvent("fail_tick", at=i, tenant="t000")      # persistent fail
+         for i in range(3, 12)])
+    srv = _drain(fleet, cfg, faults=plan, max_phase_retries=1,
+                 backoff_base_s=0.001)
+    # silent store corruption mid-service on a fresh server
+    from repro.nmp.serving import MappingServer
+    srv2 = MappingServer(cfg, n_slots=N_SLOTS, backoff_base_s=0.001)
+    srv2.submit("t", fleet["t002"])
+    srv2.tick()
+    srv2.tick()
+    faults.poison_store_agent(srv2.store, "t")
+    srv2.run()
+    drill = srv.stats()["faults"]
+    drill["rollbacks"] += srv2.stats()["faults"]["rollbacks"]
+    recovered = (srv.tenant("t001").health == "healthy"
+                 and srv.tenant("t001").done
+                 and srv.tenant("t000").quarantined
+                 and srv2.tenant("t").done)
+
+    # bit-identical spot check of an unaffected tenant (after stats)
+    spot = "t002"
+    solo = run_stream(solo_stream(spot, fleet[spot]), cfg)
+    identical = all(
+        np.array_equal(srv.tenant_metrics(spot, pi)[k],
+                       solo.phases[pi].metrics[k][0])
+        for pi in range(N_PHASES) for k in solo.phases[pi].metrics)
+
+    # -- checkpoint corruption fallback drill ---------------------------
+    import tempfile
+    with tempfile.TemporaryDirectory() as ckdir:
+        cplan = FaultPlan([FaultEvent("corrupt_checkpoint", at=N_PHASES - 1,
+                                      n_bytes=64)], seed=3)
+        run_stream(solo_stream("ck", fleet["t003"]), cfg,
+                   checkpoint_dir=ckdir, faults=cplan)
+        restored = PolicyStore.restore(ckdir, default_agent_cfg(cfg))
+        ck_fallbacks = restored.restore_fallbacks
+        ck_step = restored.restored_step
+
+    name = f"faults/{N_TENANTS}tenants_{on['n_slots']}slots"
+    emit(f"{name}/guard_overhead_pct", t_on.us, round(overhead_pct, 3))
+    emit(f"{name}/steady_eps_guard_off", t_on.us, round(eps_off, 1))
+    emit(f"{name}/steady_eps_guard_on", t_on.us, round(eps_on, 1))
+    emit(f"{name}/divergences_caught", t_on.us, drill["divergences"])
+    emit(f"{name}/retries", t_on.us, drill["retries"])
+    emit(f"{name}/quarantines", t_on.us, drill["quarantines"])
+    emit(f"{name}/rollbacks", t_on.us, drill["rollbacks"])
+    emit(f"{name}/checkpoint_fallback_steps", t_on.us, ck_fallbacks)
+    emit(f"{name}/recovered_and_drained", t_on.us, recovered)
+    emit(f"{name}/spot_check_bit_identical", t_on.us, identical)
+
+    reference_eps = None
+    if os.path.exists(SERVING_JSON):
+        try:
+            with open(SERVING_JSON) as f:
+                reference_eps = json.load(f)["service"][
+                    "steady_epochs_per_sec"]
+        except (OSError, KeyError, json.JSONDecodeError):
+            pass
+
+    record = {
+        "fleet": {"n_tenants": N_TENANTS, "n_phases": N_PHASES,
+                  "n_ops_per_app": N_OPS_PER_APP, "full": FULL},
+        "server": {"n_slots": on["n_slots"], "n_devices": on["n_devices"]},
+        "overhead": {
+            "steady_epochs_per_sec_guard_off": eps_off,
+            "steady_epochs_per_sec_guard_on": eps_on,
+            "overhead_pct": round(overhead_pct, 3),
+            "target_pct": OVERHEAD_TARGET_PCT,
+            "within_target": bool(overhead_pct <= OVERHEAD_TARGET_PCT),
+            "reference_serving_eps": reference_eps,
+        },
+        "recovery": {
+            **{k: int(v) for k, v in drill.items()},
+            "checkpoint_fallback_steps": int(ck_fallbacks),
+            "checkpoint_restored_step": int(ck_step),
+            "recovered_and_drained": bool(recovered),
+            "spot_check_bit_identical": bool(identical),
+        },
+        "wall_s": round(t_on.us / 1e6, 3),
+    }
+    os.makedirs(os.path.dirname(JSON_PATH) or ".", exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

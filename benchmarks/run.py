@@ -20,6 +20,7 @@ MODULES = [
     ("fig12_multiprogram", "benchmarks.bench_multiprogram"),
     ("continual_stream", "benchmarks.bench_continual"),
     ("serving", "benchmarks.bench_serving"),
+    ("faults", "benchmarks.bench_faults"),
     ("topology_axis", "benchmarks.bench_topology"),
     ("fig13_sensitivity", "benchmarks.bench_sensitivity"),
     ("fig14_energy", "benchmarks.bench_energy"),

@@ -36,11 +36,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Sequence
 
+import numpy as np
+
 from repro.core import agent as agent_mod
 from repro.core.agent import AgentConfig, AgentState
 from repro.nmp.config import NMPConfig
 from repro.nmp.scenarios import Scenario
-from repro.train.checkpoint import CheckpointManager
+from repro.train.checkpoint import (CheckpointCorruptError, CheckpointManager,
+                                    decode_leaf)
 
 
 def check_tag(tag: str) -> str:
@@ -80,11 +83,17 @@ class PolicyStore:
                              f"(got {capacity})")
         self.capacity = capacity
         self.evictions = 0               # lifetime eviction count
+        self.rollbacks = 0               # lifetime rollback count
         self.restored_step = None        # checkpoint step this store came
                                          # from (set by `restore`), used by
                                          # run_stream to realign resumed
                                          # checkpoint histories
+        self.restore_fallbacks = 0       # corrupt steps skipped by `restore`
+        self.corrupt_tags: list[str] = []  # lineages dropped (cold-start) by
+                                           # `restore` on per-tag corruption
         self._agents: dict[str, AgentState] = dict(agents or {})
+        self._prev: dict[str, AgentState] = {}   # last-good snapshots
+                                                 # (rollback depth 1)
         self.meta: dict[str, dict] = {t: dict(m)
                                       for t, m in (meta or {}).items()}
         self._evict_to_capacity()
@@ -110,7 +119,9 @@ class PolicyStore:
         bounded store this may evict least-recently-used other tags."""
         check_tag(tag)
         snap = agent_mod.export_agent(agent)
-        self._agents.pop(tag, None)          # re-insert = most recent
+        prev = self._agents.pop(tag, None)   # re-insert = most recent
+        if prev is not None:
+            self._prev[tag] = prev           # last-good rollback snapshot
         self._agents[tag] = snap
         rec = self.meta.setdefault(tag, {"phases": 0})
         rec["phases"] = rec.get("phases", 0) + 1
@@ -132,12 +143,30 @@ class PolicyStore:
         """Lifetime `put` count of a lineage (survives eviction)."""
         return int(self.meta[tag].get("version", 0))
 
+    def rollback(self, tag: str) -> bool:
+        """Revert a lineage to its last-good version (the snapshot the most
+        recent `put` replaced) — the divergence-recovery path: a poisoned or
+        diverged current snapshot is discarded and the lineage resumes from
+        the version before it.  With no prior version the current snapshot
+        is simply dropped, so the lineage cold-restarts on its next lookup.
+        Returns True when a prior snapshot was restored."""
+        self.rollbacks += 1
+        rec = self.meta.setdefault(tag, {})
+        rec["rollbacks"] = rec.get("rollbacks", 0) + 1
+        self._agents.pop(tag, None)          # discard the bad current
+        prev = self._prev.pop(tag, None)
+        if prev is None:
+            return False
+        self._agents[tag] = prev             # restored = most recent
+        return True
+
     # -- bounded capacity ----------------------------------------------
     def evict(self, tag: str) -> None:
         """Drop a lineage's resident agent.  Its `meta` record stays (with
         an `evicted` count), so versioning continues if the tag returns; a
         later warm-start lookup simply misses and cold-restarts."""
         del self._agents[tag]
+        self._prev.pop(tag, None)
         self.evictions += 1
         rec = self.meta.setdefault(tag, {})
         rec["evicted"] = rec.get("evicted", 0) + 1
@@ -168,7 +197,8 @@ class PolicyStore:
         mgr.save(step, dict(self._agents),
                  extras={"tags": self.tags, "meta": self.meta,
                          "capacity": self.capacity,
-                         "evictions": self.evictions})
+                         "evictions": self.evictions,
+                         "rollbacks": self.rollbacks})
         return step
 
     @classmethod
@@ -179,18 +209,78 @@ class PolicyStore:
         the saved leaves back on bit-exactly.  `agent_cfg` must describe the
         same agent architecture the store was saved with.
 
+        Corruption tolerance: with `step=None`, unreadable steps (torn
+        commit, garbage meta, unopenable shard) are skipped newest-first —
+        counted in `restore_fallbacks` — until an intact one restores.
+        Within a readable step, a lineage whose own leaves fail their
+        recorded checksums is dropped from the store (listed in
+        `corrupt_tags`; its `meta` record survives with a `corrupt_restore`
+        mark) while every other lineage restores bit-exactly, so one
+        corrupted tag cold-starts instead of poisoning the whole store.
+        An explicitly requested bad `step` raises `CheckpointCorruptError`.
+
         The restored store remembers the checkpoint step it came from
         (`restored_step`), which `run_stream` uses to keep the step <-> phase
         alignment when a stream resumes from a non-latest step."""
         mgr = CheckpointManager(directory)
-        meta = mgr.read_meta(step)
-        template = {t: agent_mod.agent_template(agent_cfg)
-                    for t in meta["extras"]["tags"]}
-        tree, extras = mgr.restore(template, step)
-        agents = {t: agent_mod.export_agent(a) for t, a in tree.items()}
+        explicit = step is not None
+        steps = [step] if explicit else list(reversed(mgr.all_steps()))
+        if not steps:
+            raise FileNotFoundError(
+                f"no checkpoints in {directory!r}: the directory holds no "
+                "committed step_<k> entries")
+        skipped = 0
+        last_err: Exception | None = None
+        for s in steps:
+            try:
+                store = cls._restore_step(mgr, s, agent_cfg)
+                store.restore_fallbacks = skipped
+                return store
+            except CheckpointCorruptError as e:
+                if explicit:
+                    raise
+                skipped += 1
+                last_err = e
+        raise CheckpointCorruptError(
+            f"no intact checkpoint step in {directory!r} "
+            f"({skipped} corrupt step(s) skipped): {last_err}")
+
+    @classmethod
+    def _restore_step(cls, mgr: CheckpointManager, step: int,
+                      agent_cfg: AgentConfig) -> "PolicyStore":
+        import jax
+        arrays, meta, bad = mgr.load_arrays(step)
+        extras = meta["extras"]
+        agents: dict[str, AgentState] = {}
+        corrupt: list[str] = []
+        for tag in extras["tags"]:
+            tmpl = agent_mod.agent_template(agent_cfg)
+            flat, treedef = jax.tree_util.tree_flatten_with_path({tag: tmpl})
+            leaves, ok = [], True
+            for path, _leaf in flat:
+                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                               for p in path)
+                if key in bad or key not in arrays:
+                    ok = False
+                    break
+                leaves.append(np.asarray(decode_leaf(
+                    arrays[key], meta["leaves"][key]["dtype"])))
+            if ok:
+                tree = jax.tree_util.tree_unflatten(treedef, leaves)
+                agents[tag] = agent_mod.export_agent(tree[tag])
+            else:
+                corrupt.append(tag)
+        if not agents and extras["tags"]:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step}: every lineage failed verification")
         store = cls(agents=agents, meta=extras.get("meta", {}),
                     capacity=extras.get("capacity"))
+        for tag in corrupt:
+            rec = store.meta.setdefault(tag, {})
+            rec["corrupt_restore"] = rec.get("corrupt_restore", 0) + 1
+        store.corrupt_tags = corrupt
         store.evictions = int(extras.get("evictions", 0))
+        store.rollbacks = int(extras.get("rollbacks", 0))
         store.restored_step = int(meta["step"])
         return store
 
@@ -212,7 +302,8 @@ def run_stream(stream: Sequence[Sequence[Scenario]],
                agent_cfg: AgentConfig | None = None,
                store: PolicyStore | None = None,
                checkpoint_dir: str | None = None,
-               checkpoint_base_step: int | None = None) -> StreamResult:
+               checkpoint_base_step: int | None = None,
+               faults=None) -> StreamResult:
     """Execute an ordered program-phase stream as chained `run_grid` calls.
 
     Each phase is one grid (see `scenarios.continual_stream`); the store is
@@ -236,7 +327,14 @@ def run_stream(stream: Sequence[Sequence[Scenario]],
     `PolicyStore.restore(dir, agent_cfg, step=k)` +
     `run_stream(stream[k+1:], store=..., checkpoint_dir=dir)` reproduces the
     remaining phases bit-exactly, with every step in the directory mapping
-    to the phase of the same index."""
+    to the phase of the same index.
+
+    `faults` is an optional `nmp.faults.FaultPlan` — the deterministic
+    fault-injection harness.  Its `on_phase` hook fires before each phase
+    (poisoning stored lineages, stalling, or failing the phase) and its
+    `on_checkpoint` hook fires after each save (corrupting checkpoint bytes
+    on disk), so recovery paths can be exercised end to end.  With
+    `faults=None` (the default) neither hook site costs anything."""
     from repro.nmp.sweep import run_grid
     store = store if store is not None else PolicyStore()
     base = checkpoint_base_step
@@ -244,8 +342,12 @@ def run_stream(stream: Sequence[Sequence[Scenario]],
         base = store.restored_step + 1
     results = []
     for pi, phase in enumerate(stream):
+        if faults is not None:
+            faults.on_phase(pi, store)
         results.append(run_grid(phase, cfg, agent_cfg, store=store))
         if checkpoint_dir is not None:
             store.save(checkpoint_dir,
                        step=None if base is None else base + pi)
+            if faults is not None:
+                faults.on_checkpoint(checkpoint_dir)
     return StreamResult(phases=results, store=store)

@@ -35,10 +35,46 @@ the engine never idles on host->device I/O.  The schedule of tick t+1 is a
 pure function of the queue/slot bookkeeping — it never waits on tick t's
 results; only the warm agent batch does.
 
+Fault tolerance — the tenant health state machine:
+
+  healthy ──failure──> degraded ──(> max_phase_retries failures)──> quarantined
+     ^                    │
+     └────one success─────┘
+
+A *failure* is any of: the lane's completed tick diverged (the once-per-tick
+batched `isfinite` guard over per-lane float metrics and final agent params,
+see `sweep.lane_finite_mask` — checked at host sync, never per epoch); an
+injected/attributed tick exception (`faults.InjectedFault`); or the tick
+overran `phase_deadline_s` with the stall attributed to the tenant.  A
+failed phase attempt is *not* consumed: the tenant's cursor rewinds, its
+result is discarded, its agent is NOT written to the store, and the phase is
+retried after an exponential backoff (`backoff_base_s * 2**(retries-1)`).
+If the tenant's *stored* snapshot itself is non-finite (silent store
+corruption), the lineage first rolls back to its last-good PolicyStore
+version (`PolicyStore.rollback`).  After `max_phase_retries` consecutive
+failures the tenant is quarantined: removed from the slot schedule (its
+slot recycles to the queue) and never scheduled again, while every other
+tenant's results remain bit-identical to a fault-free run — lanes are
+independent, retried compiled calls are deterministic, and a transient
+fault's retry therefore reproduces the fault-free result exactly.
+
+Removal semantics: `remove()` marks the tenant; a phase already sitting in
+the double-buffered prepared batch is *dropped on advance* — its lane still
+executes (static shapes), but its result is discarded and its agent is not
+written back, so nothing a removed tenant did after removal is observable.
+
+Fault injection: pass a `faults.FaultPlan` to arm deterministic faults
+(poisoned warm agents, failed/stalled ticks, shrunken device visibility) at
+explicit hook sites; with `faults=None` every hook site is a single `is
+not None` check, and the only standing cost is the once-per-tick finite
+guard (disable with `divergence_guard=False`; measured < 2% in
+benchmarks/bench_faults.py).
+
 Metrics: `MappingServer.stats()` reports per-phase latency p50/p99,
 steady-state epochs/sec (ticks after the last compile), slot occupancy,
-recompile and eviction counts, plus a per-tenant table — the record
-`benchmarks/bench_serving.py` writes to bench_out/BENCH_serving.json.
+recompile and eviction counts, plus fault/retry/quarantine/rollback/
+fallback counters — the records `benchmarks/bench_serving.py` and
+`benchmarks/bench_faults.py` write to bench_out/.
 """
 from __future__ import annotations
 
@@ -51,12 +87,14 @@ import jax
 import numpy as np
 
 from repro.nmp import baselines, partition
+from repro.nmp import faults as faults_mod
 from repro.nmp import plan as plan_mod
 from repro.nmp import sweep as sweep_mod
 from repro.nmp.config import NMPConfig
 from repro.nmp.continual import PolicyStore, check_tag
 from repro.nmp.engine import (BodyFlags, default_agent_cfg, pei_top_k,
                               state_spec_for)
+from repro.nmp.faults import FaultPlan, InjectedFault
 from repro.nmp.plan import Envelope, needs_agent, plan_envelope, plan_grid
 from repro.nmp.scenarios import Scenario
 from repro.nmp.sweep import SweepResult
@@ -95,6 +133,11 @@ class Tenant:
     slot: int | None = None
     done: bool = False
     removed: bool = False
+    health: str = "healthy"          # healthy | degraded | quarantined
+    quarantined: bool = False
+    retries: int = 0                 # consecutive failed attempts
+    backoff_until: float = 0.0       # monotonic time gating the next attempt
+    last_error: str | None = None
     latencies: list = dataclasses.field(default_factory=list)
     results: list = dataclasses.field(default_factory=list)
                                      # per served phase: (SweepResult, lane)
@@ -102,6 +145,12 @@ class Tenant:
     @property
     def remaining(self) -> int:
         return len(self.phases) - self.cursor
+
+    @property
+    def stale(self) -> bool:
+        """True when a prepared-batch entry for this tenant must be dropped
+        (removed or quarantined after the batch was built)."""
+        return self.removed or self.quarantined
 
 
 class MappingServer:
@@ -113,15 +162,30 @@ class MappingServer:
     inferred (and frozen) from everything submitted before the first tick,
     and later submissions must fit it.  `store` (or `store_capacity`)
     bounds the lineage store; `keep_results=False` drops per-phase metric
-    arrays after recording latencies (long-running servers)."""
+    arrays after recording latencies (long-running servers).
+
+    Robustness knobs: `divergence_guard` runs the once-per-tick finite
+    check; `max_phase_retries` bounds consecutive failed attempts before a
+    tenant is quarantined; `backoff_base_s` seeds the exponential retry
+    backoff; `phase_deadline_s` flags ticks that overran their deadline
+    (an attributed stall counts as a failed attempt for that tenant);
+    `faults` arms a deterministic `faults.FaultPlan` (tests/benchmarks)."""
 
     def __init__(self, cfg: NMPConfig = NMPConfig(), n_slots: int = 8,
                  envelope: Envelope | None = None,
                  agent_cfg=None, store: PolicyStore | None = None,
                  store_capacity: int | None = None,
-                 keep_results: bool = True):
+                 keep_results: bool = True,
+                 divergence_guard: bool = True,
+                 max_phase_retries: int = 2,
+                 backoff_base_s: float = 0.02,
+                 phase_deadline_s: float | None = None,
+                 faults: FaultPlan | None = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1 (got {n_slots})")
+        if max_phase_retries < 0:
+            raise ValueError(
+                f"max_phase_retries must be >= 0 (got {max_phase_retries})")
         self.cfg = cfg
         self.mesh = partition.build_mesh()
         self.n_slots = partition.padded_lane_count(n_slots, self.mesh)
@@ -133,6 +197,11 @@ class MappingServer:
                       else PolicyStore(capacity=store_capacity))
         self.envelope = envelope
         self.keep_results = keep_results
+        self.guard = divergence_guard
+        self.max_phase_retries = max_phase_retries
+        self.backoff_base_s = backoff_base_s
+        self.phase_deadline_s = phase_deadline_s
+        self.faults = faults
 
         self._tenants: dict[str, Tenant] = {}
         self._queue: deque[str] = deque()
@@ -145,10 +214,21 @@ class MappingServer:
         self._pending = None             # prepared-but-unserved next tick
         # service metrics
         self.ticks = 0
+        self._attempts = 0               # dispatch attempts (ticks + retries)
         self._tick_wall: list[float] = []
         self._tick_active: list[int] = []
         self._tick_compiles: list[int] = []
         self._phases_served = 0
+        # fault / recovery counters
+        self._tick_failures = 0          # dispatch attempts that raised
+        self._global_failure_streak = 0  # consecutive unattributed failures
+        self._divergences = 0            # non-finite lanes caught by guard
+        self._deadline_misses = 0        # ticks over phase_deadline_s
+        self._retries_total = 0
+        self._quarantines = 0
+        self._stale_dropped = 0          # prepared entries dropped on advance
+        self._device_shrinks = 0
+        self._validation_rejects = 0
 
     # -- tenant lifecycle ----------------------------------------------
 
@@ -156,10 +236,14 @@ class MappingServer:
                stream: Sequence[Sequence[Scenario] | Scenario]) -> None:
         """Enqueue a tenant stream.  The tenant id becomes the lineage tag
         of every phase (duplicate ids — which would silently share one DQN
-        across tenants — are rejected while the earlier tenant is live)."""
+        across tenants — are rejected while the earlier tenant is live).
+        Streams are validated at this boundary: malformed traces (NaN/Inf,
+        negative or out-of-range page ids, empty op/page counts) raise a
+        `ValueError` naming the tenant and phase instead of flowing into
+        the compiled program."""
         check_tag(tenant_id)
         prev = self._tenants.get(tenant_id)
-        if prev is not None and not prev.done:
+        if prev is not None and not prev.done and not prev.quarantined:
             raise ValueError(
                 f"tenant {tenant_id!r} is already live (queued or in a "
                 "slot); duplicate lineage tags would share one DQN across "
@@ -168,8 +252,12 @@ class MappingServer:
                                       lineage=tenant_id) for ph in stream]
         if not phases:
             raise ValueError(f"tenant {tenant_id!r}: empty stream")
-        for sc in phases:
-            self._validate_scenario(tenant_id, sc)
+        for pi, sc in enumerate(phases):
+            try:
+                self._validate_scenario(tenant_id, pi, sc)
+            except ValueError:
+                self._validation_rejects += 1
+                raise
         for sc in phases:
             self._absorb_flags(sc)
         self._tenants[tenant_id] = Tenant(tenant_id=tenant_id, phases=phases)
@@ -177,8 +265,11 @@ class MappingServer:
         self._pending = None             # schedule changed; re-prepare
 
     def remove(self, tenant_id: str) -> None:
-        """Depart a tenant mid-stream: frees its slot (or queue entry) at
-        the next tick.  Its lineage stays in the store until evicted."""
+        """Depart a tenant mid-stream: frees its slot (or queue entry)
+        immediately.  A phase of the tenant already sitting in the prepared
+        (double-buffered) next batch is dropped on advance — it can neither
+        complete into `results` nor write its agent back to the store.  The
+        lineage stays in the store until evicted."""
         t = self._tenants[tenant_id]
         if t.done:
             return
@@ -186,11 +277,14 @@ class MappingServer:
         if t.slot is not None:
             self._slots[t.slot] = None
             t.slot = None
+            # the prepared batch (if any) may still hold this tenant's
+            # phase: kept — its entry is stale-dropped at advance/complete
         else:
             self._queue = deque(q for q in self._queue if q != tenant_id)
-        self._pending = None             # schedule changed; re-prepare
 
-    def _validate_scenario(self, tenant_id: str, sc: Scenario) -> None:
+    def _validate_scenario(self, tenant_id: str, phase_idx: int,
+                           sc: Scenario) -> None:
+        self._validate_trace(tenant_id, phase_idx, sc)
         if not needs_agent(sc):
             raise ValueError(
                 f"tenant {tenant_id!r}: serving slots run learned-AIMM "
@@ -215,6 +309,31 @@ class MappingServer:
                 raise ValueError(
                     f"tenant {tenant_id!r}: phase needs envelope {need} "
                     f"but the server's is frozen at {self.envelope}")
+
+    def _validate_trace(self, tenant_id: str, phase_idx: int,
+                        sc: Scenario) -> None:
+        """Input validation at the submit boundary: reject trace arrays that
+        would silently flow into the compiled program as garbage."""
+        tr = sc.trace
+        where = f"tenant {tenant_id!r} phase {phase_idx} ({sc.name!r})"
+        if tr.n_pages <= 0:
+            raise ValueError(f"{where}: non-positive page count "
+                             f"{tr.n_pages}")
+        if tr.n_ops <= 0:
+            raise ValueError(f"{where}: empty op trace")
+        for field in ("dest", "src1", "src2"):
+            a = np.asarray(getattr(tr, field))
+            if np.issubdtype(a.dtype, np.floating):
+                if not np.isfinite(a).all():
+                    raise ValueError(
+                        f"{where}: trace {field!r} contains NaN/Inf entries")
+            if a.size and int(a.min()) < 0:
+                raise ValueError(
+                    f"{where}: trace {field!r} contains negative page ids")
+            if a.size and int(a.max()) >= tr.n_pages:
+                raise ValueError(
+                    f"{where}: trace {field!r} references page "
+                    f"{int(a.max())} outside the {tr.n_pages}-page space")
 
     def _absorb_flags(self, sc: Scenario) -> None:
         """Grow the resident programs' static BodyFlags monotonically (a new
@@ -245,20 +364,38 @@ class MappingServer:
     def _schedule(self) -> list[tuple[int, Tenant]]:
         """Assign queued tenants to free slots and return the active
         (slot, tenant) pairs in slot order — the lane order of the tick's
-        compiled call.  Pure bookkeeping: never waits on device results."""
+        compiled call.  Pure bookkeeping: never waits on device results.
+        Slot holders inside their retry backoff window are skipped (their
+        slot idles until the backoff expires)."""
+        now = time.monotonic()
         for i, tid in enumerate(self._slots):
             if tid is None and self._queue:
                 nxt = self._queue.popleft()
                 self._slots[i] = nxt
                 self._tenants[nxt].slot = i
         return [(i, self._tenants[tid])
-                for i, tid in enumerate(self._slots) if tid is not None]
+                for i, tid in enumerate(self._slots)
+                if tid is not None
+                and self._tenants[tid].backoff_until <= now]
+
+    def _backoff_wait(self) -> bool:
+        """When every slotted tenant is inside its backoff window, sleep
+        until the earliest one expires.  True if a wait happened."""
+        waits = [self._tenants[tid].backoff_until - time.monotonic()
+                 for tid in self._slots if tid is not None]
+        waits = [w for w in waits if w > 0]
+        if not waits:
+            return False
+        time.sleep(min(waits) + 1e-4)
+        return True
 
     def _prepare_next(self):
         """Build (and host->device transfer) the next tick's batch, or None
         when no tenant has work.  Callable while a previous tick is still
         executing on device (double buffering)."""
         sched = self._schedule()
+        if not sched and self._backoff_wait():
+            sched = self._schedule()
         if not sched:
             return None
         self._freeze_envelope()
@@ -275,46 +412,178 @@ class MappingServer:
     def _advance(self, sched: list[tuple[int, Tenant]]) -> None:
         """Consume the served phase of every scheduled tenant and recycle
         the slots of drained tenants (deterministic — usable before the
-        tick's results land)."""
+        tick's results land).  Entries whose tenant was removed or
+        quarantined after the batch was prepared are dropped here: their
+        phase is NOT consumed and their lane's result will be discarded."""
         for slot, t in sched:
+            if t.stale:
+                continue
             t.cursor += 1
             if t.cursor >= len(t.phases):
                 t.done = True
                 t.slot = None
                 self._slots[slot] = None
 
+    # -- fault handling ------------------------------------------------
+
+    def _maybe_shrink(self) -> bool:
+        """Apply an armed shrink_devices fault: rebuild the mesh over the
+        surviving devices.  The resident slot count is fixed, so it must
+        stay divisible by the new width; the next dispatch re-places (one
+        recompile) and per-lane results stay bit-identical — the partition
+        layer's standing invariant."""
+        if self.faults is None:
+            return False
+        keep = self.faults.shrink_devices_now(self._attempts)
+        if keep is None:
+            return False
+        devs = partition.sweep_devices()
+        keep = max(1, min(int(keep), len(devs)))
+        if self.n_slots % keep:
+            raise ValueError(
+                f"cannot shrink to {keep} devices: the resident slot count "
+                f"{self.n_slots} must stay device-divisible")
+        self.mesh = partition.build_mesh(devs[:keep])
+        self._tom_cands = None           # re-replicated on next freeze
+        self._device_shrinks += 1
+        self._pending = None             # placed on the old mesh; rebuild
+        return True
+
+    def _degrade(self, t: Tenant, reason: str) -> None:
+        """One failed phase attempt: bounded retry with exponential backoff,
+        escalating to quarantine."""
+        t.retries += 1
+        t.last_error = reason
+        self._retries_total += 1
+        if t.retries > self.max_phase_retries:
+            self._quarantine(t, reason)
+        else:
+            t.health = "degraded"
+            t.backoff_until = (time.monotonic()
+                               + self.backoff_base_s * 2 ** (t.retries - 1))
+
+    def _quarantine(self, t: Tenant, reason: str) -> None:
+        """Remove a repeatedly failing tenant from the slot schedule for
+        good; every other tenant keeps serving."""
+        t.health = "quarantined"
+        t.quarantined = True
+        t.last_error = reason
+        self._quarantines += 1
+        if t.slot is not None:
+            self._slots[t.slot] = None
+            t.slot = None
+        else:
+            self._queue = deque(q for q in self._queue
+                                if q != t.tenant_id)
+
+    def _rewind(self, t: Tenant, reason: str) -> None:
+        """Un-consume a diverged/stalled lane's phase (the advance already
+        ran) so the attempt can be retried, triaging the stored snapshot:
+        a non-finite store entry rolls the lineage back to its last-good
+        version first."""
+        t.cursor -= 1
+        if t.done:                       # advance drained it; revive
+            t.done = False
+            self._queue.appendleft(t.tenant_id)
+        tag = t.tenant_id
+        if tag in self.store and not faults_mod.params_finite(
+                self.store.get(tag)):
+            self.store.rollback(tag)
+        self._degrade(t, reason)
+
+    def _fail_attempt(self, sched, tenant_id: str | None,
+                      reason: str) -> None:
+        """A dispatch attempt raised before completing.  Attributed faults
+        degrade only their tenant; unattributed ones are retried whole-tick
+        with a bounded consecutive-failure budget."""
+        self._tick_failures += 1
+        if tenant_id is not None and tenant_id in self._tenants:
+            self._global_failure_streak = 0
+            self._degrade(self._tenants[tenant_id], reason)
+            return
+        self._global_failure_streak += 1
+        if self._global_failure_streak > self.max_phase_retries:
+            raise InjectedFault(
+                f"service tick failed {self._global_failure_streak} "
+                f"consecutive times without tenant attribution: {reason}")
+        time.sleep(self.backoff_base_s
+                   * 2 ** (self._global_failure_streak - 1))
+
     # -- serving -------------------------------------------------------
 
     def _serve_one(self, prepared, overlap: bool):
         sched, scs, plan, group, batch = prepared
+        tenant_ids = [t.tenant_id for _, t in sched]
+        attempt = self._attempts
+        self._attempts += 1
         warm = sweep_mod._warm_agent_batch(group, self.n_slots, self.store,
                                            self.agent_cfg)
+        stalled: tuple[str, ...] = ()
+        if self.faults is not None:
+            warm = self.faults.poison_warm_agents(attempt, tenant_ids, warm,
+                                                  group.n_seeds)
         n_prog0 = sweep_mod.compiled_sweep_programs()
         t0 = time.perf_counter()
-        out, _env_fin, agent_fin = sweep_mod.dispatch_sweep(
-            batch, self._tom_cands, self.cfg, self.spec, self.agent_cfg,
-            self.envelope.n_epochs, group.n_episodes, self.envelope.ring_len,
-            self._flags, warm_agent=warm, want_agent=True)
-        self._advance(sched)
-        # the devices are executing this tick: overlap the next tick's host
-        # batch build + transfer with it
-        nxt = self._prepare_next() if overlap else None
-        out = jax.block_until_ready(out)
-        agent_fin = jax.block_until_ready(agent_fin)
+        try:
+            if self.faults is not None:
+                stalled = self.faults.on_dispatch(attempt, tenant_ids)
+            out, _env_fin, agent_fin = sweep_mod.dispatch_sweep(
+                batch, self._tom_cands, self.cfg, self.spec, self.agent_cfg,
+                self.envelope.n_epochs, group.n_episodes,
+                self.envelope.ring_len, self._flags, warm_agent=warm,
+                want_agent=True)
+            self._advance(sched)
+            # the devices are executing this tick: overlap the next tick's
+            # host batch build + transfer with it
+            nxt = self._prepare_next() if overlap else None
+            out = jax.block_until_ready(out)
+            agent_fin = jax.block_until_ready(agent_fin)
+        except InjectedFault as e:
+            self._fail_attempt(sched, e.tenant, str(e))
+            return self._prepare_next() if overlap else None
         wall = time.perf_counter() - t0
-        self._complete(sched, scs, out, agent_fin, group, wall,
-                       sweep_mod.compiled_sweep_programs() - n_prog0)
+        self._global_failure_streak = 0
+        dirty = self._complete(sched, scs, out, agent_fin, group, wall,
+                               sweep_mod.compiled_sweep_programs() - n_prog0,
+                               stalled)
+        if dirty:
+            # a lane failed after the next batch was prepared: its schedule
+            # (and the failed tenant's cursor) changed — rebuild
+            nxt = self._prepare_next() if overlap else None
         return nxt
 
     def _complete(self, sched, scs, out, agent_fin, group, wall: float,
-                  compiles: int) -> None:
+                  compiles: int, stalled: Sequence[str] = ()) -> bool:
         S = group.n_seeds            # always 1: tenants never fold together
+        missed = (self.phase_deadline_s is not None
+                  and wall > self.phase_deadline_s)
+        if missed:
+            self._deadline_misses += 1
+        finite = (sweep_mod.lane_finite_mask(out, agent_fin, len(sched), S)
+                  if self.guard else np.ones(len(sched), bool))
         res = SweepResult(
             scenarios=scs, cfg=self.cfg,
             metrics={k: np.stack([np.asarray(v[li, 0]) for li in
                                   range(len(sched))]) for k, v in out.items()},
             final_env=None, n_episodes=group.n_episodes, wall_s=wall)
+        served = 0
+        dirty = False
         for li, (slot, t) in enumerate(sched):
+            if t.stale:                  # removed/quarantined after prepare
+                self._stale_dropped += 1
+                continue
+            if not finite[li]:
+                self._divergences += 1
+                self._rewind(t, f"divergence: non-finite metrics or agent "
+                                f"params in phase {t.cursor - 1}")
+                dirty = True
+                continue
+            if missed and t.tenant_id in stalled:
+                self._rewind(t, f"deadline: tick ran {wall:.3f}s > "
+                                f"{self.phase_deadline_s}s (attributed "
+                                "stall)")
+                dirty = True
+                continue
             cell = jax.tree.map(
                 lambda a, li=li: np.asarray(a[li * S]), agent_fin)
             self.store.put(t.tenant_id, cell, scenario=scs[li].name,
@@ -322,29 +591,39 @@ class MappingServer:
             t.latencies.append(wall)
             if self.keep_results:
                 t.results.append((res, li))
+            t.retries = 0
+            t.health = "healthy"
+            t.backoff_until = 0.0
+            served += 1
         self.ticks += 1
-        self._phases_served += len(sched)
+        self._phases_served += served
         self._tick_wall.append(wall)
-        self._tick_active.append(len(sched))
+        self._tick_active.append(served)
         self._tick_compiles.append(compiles)
+        return dirty
 
     def tick(self) -> int:
         """Run one synchronous service step.  Returns the number of tenant
         phases served (0 = no work pending)."""
+        self._maybe_shrink()
         prepared = self._pending or self._prepare_next()
         self._pending = None
         if prepared is None:
             return 0
+        before = self._phases_served
         self._serve_one(prepared, overlap=False)
-        return self._tick_active[-1]
+        return self._phases_served - before
 
     def run(self, max_ticks: int | None = None) -> int:
         """Drain every submitted stream, double-buffering the next tick's
-        host batch against the current device step.  Returns ticks run."""
+        host batch against the current device step.  Returns dispatch
+        attempts run (ticks + retries)."""
         n = 0
-        if self._pending is None:
-            self._pending = self._prepare_next()
-        while self._pending is not None:
+        while True:
+            if self._maybe_shrink() or self._pending is None:
+                self._pending = self._prepare_next()
+            if self._pending is None:
+                break
             if max_ticks is not None and n >= max_ticks:
                 break
             self._pending = self._serve_one(self._pending, overlap=True)
@@ -382,6 +661,10 @@ class MappingServer:
         epochs_per_tick = (active * ep.n_epochs * ep.n_episodes
                            if ep is not None else active * 0)
         steady_wall = float(wall[steady].sum())
+        health: dict[str, int] = {"healthy": 0, "degraded": 0,
+                                  "quarantined": 0}
+        for t in self._tenants.values():
+            health[t.health] = health.get(t.health, 0) + 1
         return {
             "ticks": self.ticks,
             "n_slots": self.n_slots,
@@ -389,6 +672,9 @@ class MappingServer:
             "tenants_submitted": len(self._tenants),
             "tenants_done": sum(t.done for t in self._tenants.values()),
             "tenants_removed": sum(t.removed for t in self._tenants.values()),
+            "tenants_quarantined": sum(t.quarantined
+                                       for t in self._tenants.values()),
+            "tenant_health": health,
             "phases_served": self._phases_served,
             "phase_latency_p50_s": (float(np.percentile(lat, 50))
                                     if lat.size else None),
@@ -406,4 +692,18 @@ class MappingServer:
             "store": {"tags": len(self.store), "capacity":
                       self.store.capacity, "evictions":
                       self.store.evictions},
+            "faults": {
+                "injected": (len(self.faults.injected)
+                             if self.faults is not None else 0),
+                "tick_failures": self._tick_failures,
+                "divergences": self._divergences,
+                "deadline_misses": self._deadline_misses,
+                "retries": self._retries_total,
+                "quarantines": self._quarantines,
+                "stale_dropped": self._stale_dropped,
+                "device_shrinks": self._device_shrinks,
+                "validation_rejects": self._validation_rejects,
+                "rollbacks": self.store.rollbacks,
+                "restore_fallbacks": self.store.restore_fallbacks,
+            },
         }

@@ -297,6 +297,46 @@ def dispatch_sweep(batch, tom_cands, group_cfg: NMPConfig, spec, agent_cfg,
                           warm_agent=warm_agent, want_agent=want_agent)
 
 
+def lane_finite_mask(out: dict, agent_fin, n_lanes: int,
+                     n_seeds: int = 1) -> np.ndarray:
+    """Per-lane divergence guard: True where every float metric of the lane
+    AND every float param leaf of its final agent cells is finite.
+
+    One batched `isfinite` reduction per completed tick, evaluated at host
+    sync — never per epoch.  The whole check is ONE jitted program (fused
+    reductions; compiles once per resident shape set, cached separately from
+    the sweep programs), so the steady-state cost is a single tiny device
+    call over already-materialized outputs.  `out` leaves are
+    (L_padded, S, ...) metric arrays; `agent_fin` leaves (when given) are
+    flat (L_padded*S, ...) cells.  Only the first `n_lanes` lanes are
+    reported (padding lanes repeat lane 0 and are dropped by callers)."""
+    lanes_padded = None
+    floats = []
+    for v in out.values():
+        if jnp.issubdtype(v.dtype, jnp.floating):
+            floats.append(v)
+            lanes_padded = v.shape[0]
+    if agent_fin is not None:
+        for leaf in jax.tree.leaves(agent_fin.params):
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                floats.append(leaf)
+                if lanes_padded is None:
+                    lanes_padded = leaf.shape[0] // n_seeds
+    if not floats:
+        return np.ones(n_lanes, bool)
+    return np.asarray(_finite_mask_prog(floats, lanes_padded))[:n_lanes]
+
+
+@partial(jax.jit, static_argnames=("lanes_padded",))
+def _finite_mask_prog(floats, lanes_padded: int):
+    # every leaf is lane-major: (L_padded, S, ...) metrics and (L_padded*S,
+    # ...) agent cells both collapse to (lanes_padded, -1)
+    ok = jnp.ones((lanes_padded,), bool)
+    for v in floats:
+        ok = ok & jnp.isfinite(v).reshape(lanes_padded, -1).all(axis=1)
+    return ok
+
+
 def compiled_sweep_programs() -> int:
     """Number of distinct compiled sweep programs resident in the jit cache.
 

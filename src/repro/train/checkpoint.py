@@ -1,11 +1,21 @@
 """Sharded checkpointing with atomic commits, retention, resharding restore,
-and async writes — the fault-tolerance substrate for the train loop.
+async writes, and corruption-detecting restore — the fault-tolerance
+substrate for the train loop and the continual-learning PolicyStore.
 
 Layout:
   <dir>/step_<k>.tmp/...   while writing
   <dir>/step_<k>/          after atomic rename (commit point)
-      meta.json            tree structure, shapes, dtypes, step, extras
+      meta.json            tree structure, shapes, dtypes, checksums, extras
       shard_<i>.npz        leaf arrays (one file per host in multi-host runs)
+
+Crash safety: every file is flushed and fsync'd before the tmp directory is
+renamed over the final name (and the parent directory fsync'd after), so a
+process killed at ANY byte boundary leaves either no `step_<k>` directory or
+a complete one — never a torn commit.  Each leaf's crc32 is recorded in
+`meta.json`; `restore` verifies leaves against it and, when no explicit step
+was requested, falls back to the newest *intact* step (raising
+`CheckpointCorruptError` only when an explicitly named step is bad or no
+intact step exists).
 
 Restore maps saved leaves back onto the requested shardings via
 `jax.device_put`, so a checkpoint written on one mesh restores onto another
@@ -17,6 +27,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any
 
 import jax
@@ -24,6 +35,11 @@ import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step failed integrity verification (unreadable meta or
+    shard, missing leaf, or per-leaf checksum mismatch)."""
 
 
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
@@ -36,12 +52,38 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
     return out
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                      # pragma: no cover - exotic fs
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def decode_leaf(a: np.ndarray, dtype_str: str):
+    """Undo the on-disk encoding of one leaf (bf16 is stored as a uint16
+    view + dtype tag, since numpy has no native bfloat16)."""
+    return a.view(jnp.bfloat16) if dtype_str == "bfloat16" else a
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_write = async_write
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     # -- write ----------------------------------------------------------
@@ -57,15 +99,23 @@ class CheckpointManager:
         self.wait()
         if self.async_write:
             self._thread = threading.Thread(
-                target=self._write, args=(step, arrays, meta, host_id))
+                target=self._write_guarded, args=(step, arrays, meta, host_id))
             self._thread.start()
         else:
             self._write(step, arrays, meta, host_id)
 
+    def _write_guarded(self, *args):
+        try:
+            self._write(*args)
+        except BaseException as e:       # re-raised by wait()
+            self._exc = e
+
     def _write(self, step, arrays, meta, host_id):
         tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
         final = os.path.join(self.dir, f"step_{step:09d}")
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):          # stale tmp from a killed writer
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         # bf16 has no numpy dtype; store as uint16 view + dtype tag
         store = {}
         for k, a in arrays.items():
@@ -74,18 +124,35 @@ class CheckpointManager:
                 meta["leaves"][k]["dtype"] = "bfloat16"
             else:
                 store[k] = a
-        np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **store)
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            meta["leaves"][k]["crc32"] = zlib.crc32(store[k].tobytes())
+        shard = os.path.join(tmp, f"shard_{host_id}.npz")
+        np.savez(shard, **store)
+        _fsync_file(shard)
+        meta_path = os.path.join(tmp, "meta.json")
+        with open(meta_path, "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
         if os.path.exists(final):
+            # overwrite (resume-from-older-step rewrites stale later steps);
+            # a kill between these two calls loses only the stale step —
+            # restore falls back to the next newest intact one.
             shutil.rmtree(final)
         os.rename(tmp, final)           # atomic commit
+        _fsync_dir(self.dir)
         self._gc()
 
     def wait(self):
+        """Block until the in-flight async write finishes.  Re-raises the
+        writer's exception if it failed, so a failed save cannot masquerade
+        as success."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _gc(self):
         steps = self.all_steps()
@@ -97,8 +164,9 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                out.append(int(d.split("_")[1]))
+            if (d.startswith("step_") and not d.endswith(".tmp")
+                    and d.split("_", 1)[1].isdigit()):
+                out.append(int(d.split("_", 1)[1]))
         return sorted(out)
 
     def latest_step(self) -> int | None:
@@ -106,29 +174,114 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def read_meta(self, step: int | None = None) -> dict:
-        """Checkpoint metadata (step, extras, per-leaf shapes/dtypes) without
-        loading any arrays.  Restore targets whose tree *structure* is data-
-        dependent (e.g. a PolicyStore's tag -> agent map) read this first to
-        build the template `restore` maps leaves onto."""
+        """Checkpoint metadata (step, extras, per-leaf shapes/dtypes/crcs)
+        without loading any arrays.  Restore targets whose tree *structure*
+        is data-dependent (e.g. a PolicyStore's tag -> agent map) read this
+        first to build the template `restore` maps leaves onto.  Raises
+        `CheckpointCorruptError` on unreadable/garbage metadata."""
         step = step if step is not None else self.latest_step()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        with open(os.path.join(self.dir, f"step_{step:09d}",
-                               "meta.json")) as f:
-            return json.load(f)
+            raise FileNotFoundError(
+                f"no checkpoints in {self.dir!r}: the directory holds no "
+                "committed step_<k> entries (nothing was ever saved here, "
+                "or every save was torn before its atomic commit)")
+        path = os.path.join(self.dir, f"step_{step:09d}", "meta.json")
+        try:
+            with open(path) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable checkpoint metadata {path}: {e}") from e
+        if not isinstance(meta, dict) or "leaves" not in meta:
+            raise CheckpointCorruptError(
+                f"malformed checkpoint metadata {path}")
+        return meta
+
+    def load_arrays(self, step: int, host_id: int = 0
+                    ) -> tuple[dict, dict, set[str]]:
+        """Load one step's raw (still-encoded) arrays with integrity checks.
+
+        Returns `(arrays, meta, bad_keys)` where `bad_keys` holds every leaf
+        that is missing, unreadable, or fails its recorded crc32.  Raises
+        `CheckpointCorruptError` only when the step is unreadable as a whole
+        (garbage meta, missing/unopenable shard file)."""
+        meta = self.read_meta(step)
+        path = os.path.join(self.dir, f"step_{step:09d}",
+                            f"shard_{host_id}.npz")
+        try:
+            data = np.load(path)
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"unreadable checkpoint shard {path}: {e}") from e
+        arrays: dict[str, np.ndarray] = {}
+        bad: set[str] = set()
+        try:
+            for key, rec in meta["leaves"].items():
+                try:
+                    a = data[key]
+                except Exception:
+                    bad.add(key)
+                    continue
+                crc = rec.get("crc32")
+                if crc is not None and zlib.crc32(a.tobytes()) != crc:
+                    bad.add(key)
+                    continue
+                arrays[key] = a
+        finally:
+            data.close()
+        return arrays, meta, bad
+
+    def verify(self, step: int, host_id: int = 0) -> bool:
+        """True iff every leaf of `step` loads and matches its checksum."""
+        try:
+            _, _, bad = self.load_arrays(step, host_id)
+        except (CheckpointCorruptError, FileNotFoundError):
+            return False
+        return not bad
+
+    def newest_intact_step(self, host_id: int = 0) -> int | None:
+        for s in reversed(self.all_steps()):
+            if self.verify(s, host_id):
+                return s
+        return None
 
     def restore(self, template: PyTree, step: int | None = None,
                 shardings: PyTree | None = None, host_id: int = 0
                 ) -> tuple[PyTree, dict]:
         """Restore onto `template`'s structure; place per `shardings` if given
-        (resharding restore for elastic meshes)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
-        data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+        (resharding restore for elastic meshes).
+
+        An explicitly requested corrupt `step` raises
+        `CheckpointCorruptError`.  With `step=None`, corrupt steps are
+        skipped newest-first until an intact one restores (the count of
+        skipped steps is reported as `fallback_steps_skipped` in the
+        returned info dict)."""
+        explicit = step is not None
+        steps = [step] if explicit else list(reversed(self.all_steps()))
+        if not steps:
+            raise FileNotFoundError(
+                f"no checkpoints in {self.dir!r}: the directory holds no "
+                "committed step_<k> entries")
+        skipped = 0
+        last_err: Exception | None = None
+        for s in steps:
+            try:
+                tree, info = self._restore_step(template, s, shardings,
+                                                host_id)
+                info["fallback_steps_skipped"] = skipped
+                return tree, info
+            except CheckpointCorruptError as e:
+                if explicit:
+                    raise
+                skipped += 1
+                last_err = e
+        raise CheckpointCorruptError(
+            f"no intact checkpoint step in {self.dir!r} "
+            f"({skipped} corrupt step(s) skipped): {last_err}")
+
+    def _restore_step(self, template: PyTree, step: int, shardings,
+                      host_id: int) -> tuple[PyTree, dict]:
+        arrays, meta, bad = self.load_arrays(step, host_id)
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         shard_flat = (jax.tree.leaves(shardings)
                       if shardings is not None else [None] * len(flat))
@@ -136,9 +289,11 @@ class CheckpointManager:
         for (p, leaf), sh in zip(flat, shard_flat):
             key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                            for q in p)
-            a = data[key]
-            if meta["leaves"][key]["dtype"] == "bfloat16":
-                a = a.view(jnp.bfloat16)
+            if key in bad or key not in arrays:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step} leaf {key!r} is missing or "
+                    "fails its checksum")
+            a = decode_leaf(arrays[key], meta["leaves"][key]["dtype"])
             if sh is not None:
                 leaves.append(jax.device_put(a, sh))
             else:

@@ -375,3 +375,85 @@ def test_sharded_restore_bit_identical_on_forced_host_devices(tmp_path):
                           capture_output=True, text=True, timeout=1200)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "SHARDED-RESTORE-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Restore-path edge cases (corruption tolerance) and rollback
+
+
+def _two_tag_store_dir(tmp_path):
+    """Two steps of a two-lineage store: step 0 holds cold_start(0)/(1),
+    step 1 holds cold_start(2)/(3)."""
+    d = str(tmp_path / "ck")
+    store = PolicyStore()
+    store.put("a", A.cold_start(0, ACFG))
+    store.put("b", A.cold_start(1, ACFG))
+    store.save(d, step=0)
+    store.put("a", A.cold_start(2, ACFG))
+    store.put("b", A.cold_start(3, ACFG))
+    store.save(d, step=1)
+    return d
+
+
+def test_restore_falls_back_past_garbage_newest_step(tmp_path):
+    """A torn/garbage newest checkpoint (truncated shard) is skipped: the
+    store restores from the previous step bit-exactly and reports the
+    fallback."""
+    from repro.nmp import faults
+    d = _two_tag_store_dir(tmp_path)
+    shard = os.path.join(d, "step_000000001", "shard_0.npz")
+    with open(shard, "r+b") as f:              # truncate: torn write
+        f.truncate(os.path.getsize(shard) // 3)
+    store = PolicyStore.restore(d, ACFG)
+    assert store.restored_step == 0 and store.restore_fallbacks == 1
+    assert store.corrupt_tags == []
+    assert _leaves_equal(store.get("a"), A.export_agent(A.cold_start(0, ACFG)))
+    assert _leaves_equal(store.get("b"), A.export_agent(A.cold_start(1, ACFG)))
+    # an explicitly requested garbage step raises instead of falling back
+    from repro.train.checkpoint import CheckpointCorruptError
+    with pytest.raises(CheckpointCorruptError):
+        PolicyStore.restore(d, ACFG, step=1)
+
+
+def test_restore_empty_dir_clear_error(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        PolicyStore.restore(str(tmp_path), ACFG)
+
+
+def test_restore_corrupted_lineage_cold_starts_only_that_tag(tmp_path):
+    """A single lineage whose leaves fail their checksums (silent bit-flip
+    that keeps the npz container valid) is dropped — cold-starting on its
+    next lookup — while every other lineage restores bit-exactly."""
+    from repro.nmp import faults
+    from repro.train.checkpoint import CheckpointManager
+    d = _two_tag_store_dir(tmp_path)
+    meta = CheckpointManager(d).read_meta(1)
+    key = next(k for k in meta["leaves"] if k.startswith("a/"))
+    faults.tamper_leaf(d, 1, key)
+    store = PolicyStore.restore(d, ACFG)
+    assert store.restored_step == 1 and store.restore_fallbacks == 0
+    assert store.corrupt_tags == ["a"] and "a" not in store
+    assert store.meta["a"]["corrupt_restore"] == 1
+    assert _leaves_equal(store.get("b"), A.export_agent(A.cold_start(3, ACFG)))
+
+
+def test_store_rollback_restores_last_good_version(tmp_path):
+    """rollback() reverts a lineage to the snapshot its most recent put
+    replaced; with no prior version the bad snapshot is dropped so the next
+    lookup cold-restarts.  Rollback counts persist through save/restore."""
+    store = PolicyStore()
+    store.put("t", A.cold_start(0, ACFG))
+    v1 = store.get("t")
+    store.put("t", A.cold_start(1, ACFG))
+    assert store.rollback("t") is True
+    assert _leaves_equal(store.get("t"), v1)
+    assert store.rollbacks == 1 and store.meta["t"]["rollbacks"] == 1
+    # no older version left: rollback drops the lineage entirely
+    assert store.rollback("t") is False
+    assert "t" not in store
+    # counters survive the checkpoint roundtrip
+    store.put("t", A.cold_start(2, ACFG))
+    d = str(tmp_path / "ck")
+    store.save(d, step=0)
+    restored = PolicyStore.restore(d, ACFG)
+    assert restored.rollbacks == 2

@@ -1,0 +1,395 @@
+"""Fault-injection suite (nmp.faults + the serving/checkpoint recovery paths).
+
+Pins the robustness contract: under each injected fault class only the
+affected tenant degrades (retry -> quarantine) or rolls back, every other
+tenant's results stay bit-identical to a fault-free run; crash-safe
+checkpoints restore from the newest intact step (kill-resume subprocess
+test); and corruption is detected at the per-leaf checksum level.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import agent as agent_mod
+from repro.nmp import NMPConfig, faults, partition
+from repro.nmp.continual import PolicyStore, run_stream
+from repro.nmp.engine import default_agent_cfg
+from repro.nmp.faults import FaultEvent, FaultPlan, InjectedFault
+from repro.nmp.scenarios import tenant_fleet, tenant_stream
+from repro.nmp.serving import MappingServer, solo_stream
+from repro.nmp.traces import make_trace
+from repro.train.checkpoint import CheckpointCorruptError, CheckpointManager
+
+CFG = NMPConfig()
+N_OPS = 384
+SLOTS2 = partition.padded_lane_count(2, partition.build_mesh())
+
+
+def _fleet(n_tenants, n_phases=2, apps=("KM", "SC")):
+    return tenant_fleet(n_tenants=n_tenants, apps=apps, n_phases=n_phases,
+                        n_ops_per_app=N_OPS)
+
+
+def _assert_matches_solo(srv, tid, stream):
+    solo = run_stream(solo_stream(tid, stream), CFG)
+    for pi in range(len(stream)):
+        served = srv.tenant_metrics(tid, pi)
+        want = solo.phases[pi].metrics
+        for k in sorted(want):
+            np.testing.assert_array_equal(served[k], want[k][0],
+                                          err_msg=f"{tid} phase{pi} {k}")
+
+
+# -- the harness itself ---------------------------------------------------
+
+def test_fault_plan_events_are_one_shot_and_deterministic():
+    plan = FaultPlan([FaultEvent("fail_tick", at=1, tenant="x")], seed=7)
+    assert plan.on_dispatch(0, ("x",)) == ()          # wrong ordinal: no fire
+    with pytest.raises(InjectedFault) as ei:
+        plan.on_dispatch(1, ("x", "y"))
+    assert ei.value.tenant == "x"
+    plan.on_dispatch(1, ("x",))                       # one-shot: spent
+    assert plan.injected == [("fail_tick", 1, "x")]
+    # events targeting an absent tenant do not fire (and stay unfired)
+    plan2 = FaultPlan([FaultEvent("fail_tick", at=0, tenant="gone")])
+    plan2.on_dispatch(0, ("other",))
+    assert not plan2.events[0].fired
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("explode")
+
+
+def test_corrupt_bytes_is_seeded_deterministic(tmp_path):
+    p1, p2 = tmp_path / "a.bin", tmp_path / "b.bin"
+    payload = bytes(range(256)) * 8
+    for p in (p1, p2):
+        p.write_bytes(payload)
+        faults.corrupt_bytes(str(p), np.random.default_rng(3), n_bytes=16)
+    assert p1.read_bytes() == p2.read_bytes() != payload
+
+
+# -- submit-boundary validation (satellite: input validation) -------------
+
+def test_submit_rejects_poisoned_traces():
+    tr = make_trace("KM", n_ops=N_OPS)
+    stream = tenant_stream(apps=("KM",), n_phases=2, n_ops_per_app=N_OPS)
+    srv = MappingServer(CFG, n_slots=2)
+    import dataclasses
+    bad_neg = [dataclasses.replace(sc, trace=faults.poison_trace(tr,
+                                                                 "negative"))
+               for (sc,) in stream]
+    with pytest.raises(ValueError, match=r"tenant 'evil' phase 0.*negative"):
+        srv.submit("evil", [[sc] for sc in bad_neg])
+    bad_nan = dataclasses.replace(stream[1][0],
+                                  trace=faults.poison_trace(tr, "nan"))
+    with pytest.raises(ValueError, match=r"tenant 'evil' phase 1.*NaN"):
+        srv.submit("evil", [stream[0], [bad_nan]])
+    out_of_range = dataclasses.replace(
+        tr, dest=np.full_like(np.asarray(tr.dest), tr.n_pages + 5))
+    with pytest.raises(ValueError, match="outside the .*-page space"):
+        srv.submit("evil", [[dataclasses.replace(stream[0][0],
+                                                 trace=out_of_range)]])
+    assert srv.stats()["faults"]["validation_rejects"] == 3
+    # a rejected submit leaves no tenant behind; the id stays usable
+    srv.submit("evil", stream)
+    srv.run()
+    assert srv.tenant("evil").done
+
+
+# -- divergence guard + retry + isolation ---------------------------------
+
+def test_poisoned_warm_agent_retries_bit_identical():
+    """A transiently poisoned warm agent (NaN params at dispatch) must be
+    caught by the per-tick finite guard BEFORE the store is written, and the
+    retry — fault events are one-shot — must reproduce the fault-free
+    results bit-identically for EVERY tenant, poisoned one included."""
+    fleet = _fleet(3, n_phases=2)
+    plan = FaultPlan([FaultEvent("poison_agent", at=1, tenant="t001")])
+    srv = MappingServer(CFG, n_slots=2, faults=plan, backoff_base_s=0.001)
+    for tid, stream in fleet.items():
+        srv.submit(tid, stream)
+    srv.run()
+    st = srv.stats()["faults"]
+    assert st["injected"] == 1 and st["divergences"] >= 1
+    assert st["retries"] >= 1 and st["quarantines"] == 0
+    t = srv.tenant("t001")
+    assert t.done and t.health == "healthy" and len(t.results) == 2
+    for tid, stream in fleet.items():
+        _assert_matches_solo(srv, tid, stream)
+
+
+def test_store_poison_rolls_back_lineage_and_recovers():
+    """Silent store corruption: the lineage's stored phase-1 snapshot goes
+    NaN between ticks (in place — the good bytes are gone).  The next serve
+    diverges, the triage finds the stored snapshot non-finite and rolls the
+    lineage back to its last-good version (the phase-0 snapshot), so the
+    retried phase 2 is bit-identical to a solo stream that runs phase 2
+    directly after phase 0."""
+    stream = tenant_stream(apps=("KM", "SC"), n_phases=3,
+                           n_ops_per_app=N_OPS)
+    srv = MappingServer(CFG, n_slots=2, backoff_base_s=0.001)
+    srv.submit("t", stream)
+    srv.tick()
+    srv.tick()                                   # two puts: _prev is armed
+    faults.poison_store_agent(srv.store, "t")
+    assert not faults.params_finite(srv.store.get("t"))
+    srv.run()
+    st = srv.stats()["faults"]
+    assert st["divergences"] >= 1 and st["rollbacks"] >= 1
+    assert srv.store.rollbacks >= 1
+    t = srv.tenant("t")
+    assert t.done and t.health == "healthy" and len(t.results) == 3
+    # phases 0/1 pre-date the corruption: identical to the 3-phase solo
+    solo3 = run_stream(solo_stream("t", stream), CFG)
+    rolled = run_stream(solo_stream("t", [stream[0], stream[2]]), CFG)
+    for pi, want in ((0, solo3.phases[0]), (1, solo3.phases[1]),
+                     (2, rolled.phases[1])):
+        served = srv.tenant_metrics("t", pi)
+        for k in sorted(want.metrics):
+            np.testing.assert_array_equal(served[k], want.metrics[k][0],
+                                          err_msg=f"phase{pi} {k}")
+
+
+def test_fail_tick_quarantines_only_target_tenant():
+    """Persistent attributed failures exhaust the bounded retry budget and
+    quarantine ONLY the failing tenant; its co-tenants drain normally and
+    stay bit-identical to their solo runs."""
+    fleet = _fleet(3, n_phases=2)
+    plan = FaultPlan([FaultEvent("fail_tick", at=i, tenant="t000")
+                      for i in range(10)])
+    srv = MappingServer(CFG, n_slots=2, faults=plan, max_phase_retries=1,
+                        backoff_base_s=0.001)
+    for tid, stream in fleet.items():
+        srv.submit(tid, stream)
+    srv.run()
+    st = srv.stats()
+    bad = srv.tenant("t000")
+    assert bad.quarantined and bad.health == "quarantined"
+    assert "injected tick failure" in bad.last_error
+    assert st["faults"]["quarantines"] == 1
+    assert st["tenants_quarantined"] == 1
+    assert st["faults"]["tick_failures"] >= 2     # budget exhausted
+    for tid in ("t001", "t002"):
+        assert srv.tenant(tid).done
+        _assert_matches_solo(srv, tid, fleet[tid])
+    # a quarantined id may be resubmitted (fresh stream, same lineage) —
+    # with the fault source gone it drains normally
+    srv.faults = None
+    srv.submit("t000", fleet["t000"])
+    srv.run()
+    assert srv.tenant("t000").done
+
+
+def test_unattributed_fail_tick_retries_whole_tick():
+    fleet = _fleet(2, n_phases=1)
+    plan = FaultPlan([FaultEvent("fail_tick", at=0)])   # tenant=None
+    srv = MappingServer(CFG, n_slots=2, faults=plan, backoff_base_s=0.001)
+    for tid, stream in fleet.items():
+        srv.submit(tid, stream)
+    srv.run()
+    st = srv.stats()["faults"]
+    assert st["tick_failures"] == 1 and st["quarantines"] == 0
+    for tid, stream in fleet.items():
+        assert srv.tenant(tid).done
+        _assert_matches_solo(srv, tid, stream)
+
+
+def test_stall_attributed_deadline_miss_retries():
+    """A host stall attributed to one tenant overruns the per-phase
+    deadline: that tenant's attempt is discarded and retried; the final
+    results still match the fault-free solo run bit-identically."""
+    stream = tenant_stream(apps=("KM",), n_phases=2, n_ops_per_app=N_OPS)
+    warmup = MappingServer(CFG, n_slots=2, backoff_base_s=0.001)
+    warmup.submit("warmup", stream)
+    warmup.run()                        # compile the resident program shapes
+    typical = warmup.stats()["phase_latency_p50_s"]
+    deadline = max(4 * typical, 0.5)
+    plan = FaultPlan([FaultEvent("stall_tick", at=0, tenant="slow",
+                                 stall_s=2.5 * deadline)])
+    srv = MappingServer(CFG, n_slots=2, backoff_base_s=0.001, faults=plan,
+                        phase_deadline_s=deadline)
+    srv.submit("slow", stream)
+    srv.run()
+    st = srv.stats()["faults"]
+    assert st["deadline_misses"] >= 1 and st["retries"] >= 1
+    t = srv.tenant("slow")
+    assert t.done and t.health == "healthy" and len(t.results) == 2
+    _assert_matches_solo(srv, "slow", stream)
+
+
+def test_shrink_devices_mid_service_stays_bit_identical():
+    """An injected device-visibility shrink re-places the resident programs
+    on the surviving mesh (one recompile) and every tenant's results stay
+    bit-identical — the partition layer's sharding invariance, now exercised
+    through a failure path.  Real on the forced-4-device CI lane; a
+    degenerate (1 -> 1) shrink elsewhere."""
+    fleet = _fleet(2, n_phases=3)
+    plan = FaultPlan([FaultEvent("shrink_devices", at=1, keep_devices=1)])
+    srv = MappingServer(CFG, n_slots=2, faults=plan)
+    n_dev0 = partition.mesh_desc(srv.mesh)["n_devices"]
+    for tid, stream in fleet.items():
+        srv.submit(tid, stream)
+    srv.run()
+    st = srv.stats()
+    assert st["faults"]["device_shrinks"] == 1
+    assert st["n_devices"] == 1 and n_dev0 >= 1
+    for tid, stream in fleet.items():
+        assert srv.tenant(tid).done
+        _assert_matches_solo(srv, tid, stream)
+
+
+# -- crash-safe checkpoint durability -------------------------------------
+
+def _tiny_tree(k=3):
+    return {f"w{i}": np.arange(8, dtype=np.float32) * (i + k)
+            for i in range(3)}
+
+
+def test_checkpoint_wait_reraises_async_write_failure(tmp_path,
+                                                      monkeypatch):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    import repro.train.checkpoint as ckpt_mod
+
+    def boom(*a, **kw):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", boom)
+    mgr.save(0, _tiny_tree())
+    with pytest.raises(OSError, match="disk on fire"):
+        mgr.wait()
+    monkeypatch.undo()
+    mgr.save(1, _tiny_tree())                 # the failure does not wedge it
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+
+
+def test_checkpoint_meta_records_per_leaf_checksums(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(0, _tiny_tree())
+    meta = mgr.read_meta(0)
+    for k, rec in meta["leaves"].items():
+        assert isinstance(rec["crc32"], int), k
+    assert mgr.verify(0)
+
+
+def test_corrupt_newest_step_falls_back_to_previous(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=0, async_write=False)
+    mgr.save(0, _tiny_tree(1))
+    mgr.save(1, _tiny_tree(2))
+    plan = FaultPlan(seed=11)
+    path = plan.corrupt_checkpoint(str(tmp_path), n_bytes=64)
+    assert path.endswith("shard_0.npz") and "step_000000001" in path
+    assert mgr.newest_intact_step() == 0
+    tree, info = mgr.restore(_tiny_tree(9))
+    assert info["step"] == 0 and info["fallback_steps_skipped"] == 1
+    np.testing.assert_array_equal(np.asarray(tree["w0"]),
+                                  _tiny_tree(1)["w0"])
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(_tiny_tree(9), step=1)     # explicit bad step raises
+    # corrupted metadata is also detected and skipped
+    plan.corrupt_checkpoint(str(tmp_path), step=0, target="meta")
+    with pytest.raises(CheckpointCorruptError, match="no intact checkpoint"):
+        mgr.restore(_tiny_tree(9))
+
+
+def test_tampered_leaf_caught_by_checksum(tmp_path):
+    """A bit-flip that keeps the npz container valid is invisible to the
+    loader — only the recorded per-leaf crc32 catches it."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(0, _tiny_tree())
+    faults.tamper_leaf(str(tmp_path), 0, "w1")
+    arrays, _, bad = mgr.load_arrays(0)
+    assert bad == {"w1"} and "w0" in arrays
+    assert not mgr.verify(0)
+    with pytest.raises(CheckpointCorruptError, match="w1"):
+        mgr.restore(_tiny_tree(), step=0)
+
+
+def test_empty_checkpoint_dir_clear_error(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        mgr.restore(_tiny_tree())
+    with pytest.raises(FileNotFoundError, match="nothing was ever saved"):
+        mgr.read_meta()
+
+
+def test_run_stream_checkpoint_corruption_hook(tmp_path):
+    """End to end: a stream whose checkpoint is corrupted after a save (the
+    on_checkpoint hook) restores from the newest intact step with the
+    fallback counted."""
+    acfg = default_agent_cfg(CFG)
+    stream = tenant_stream(apps=("KM",), n_phases=2, n_ops_per_app=N_OPS)
+    stream = solo_stream("t", stream)
+    plan = FaultPlan([FaultEvent("corrupt_checkpoint", at=1, n_bytes=64)],
+                     seed=5)
+    run_stream(stream, CFG, checkpoint_dir=str(tmp_path), faults=plan)
+    assert plan.injected and all(k == "corrupt_checkpoint"
+                                 for k, *_ in plan.injected)
+    store = PolicyStore.restore(str(tmp_path), acfg)
+    assert store.restored_step == 0 and store.restore_fallbacks == 1
+    # bit-exact vs the phase-0 store of a fault-free run
+    import jax
+    clean = run_stream(stream[:1], CFG)
+    for la, lb in zip(jax.tree.leaves(store.get("t").params),
+                      jax.tree.leaves(clean.store.get("t").params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+_KILL_CHILD = textwrap.dedent("""
+    import sys
+    import numpy as np
+    from repro.core.agent import cold_start
+    from repro.nmp import NMPConfig
+    from repro.nmp.continual import PolicyStore
+    from repro.nmp.engine import default_agent_cfg
+
+    directory = sys.argv[1]
+    acfg = default_agent_cfg(NMPConfig())
+    store = PolicyStore()
+    for k in range(200):
+        store.put("t", cold_start(k, acfg))
+        store.save(directory, step=k)
+        print(k, flush=True)
+""")
+
+
+def test_kill_resume_restores_newest_intact_step(tmp_path):
+    """Crash safety at any byte boundary: SIGKILL a process mid-save loop,
+    then restore — the newest committed step restores bit-exactly (it is
+    the deterministic cold_start of its own step index), and every printed
+    (= committed) step is still available."""
+    env = dict(os.environ, PYTHONPATH="src",
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    proc = subprocess.Popen([sys.executable, "-c", _KILL_CHILD,
+                             str(tmp_path)], stdout=subprocess.PIPE,
+                            text=True, env=env, cwd="/root/repo")
+    printed = []
+    deadline = time.monotonic() + 120
+    while len(printed) < 3 and time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if line.strip().isdigit():
+            printed.append(int(line))
+    assert len(printed) >= 3, "child never completed 3 saves"
+    proc.send_signal(signal.SIGKILL)
+    proc.wait()
+    acfg = default_agent_cfg(CFG)
+    store = PolicyStore.restore(str(tmp_path), acfg)
+    last_printed = printed[-1]
+    assert store.restored_step >= last_printed
+    assert store.corrupt_tags == []
+    # the stored agent at step k is cold_start(k): bit-exact check
+    import jax
+    want = agent_mod.export_agent(
+        agent_mod.cold_start(store.restored_step, acfg))
+    got = store.get("t")
+    for wa, ga in zip(jax.tree.leaves(want.params),
+                      jax.tree.leaves(got.params)):
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(ga))
+    # an explicitly requested committed earlier step also restores
+    older = PolicyStore.restore(str(tmp_path), acfg, step=printed[0])
+    assert older.restored_step == printed[0]

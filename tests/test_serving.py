@@ -211,6 +211,29 @@ def test_forced_envelope_and_slot_rounding():
     _assert_tenant_matches_solo(srv, "big", big)
 
 
+def test_remove_while_phase_in_flight_drops_prepared_entry():
+    """Removing a tenant whose next phase already sits in the prepared
+    (double-buffered) batch must drop that entry on advance: the lane still
+    executes, but the result is discarded and the lineage is not written
+    back — nothing after the removal is observable — while co-tenants stay
+    bit-identical to their solo runs."""
+    fleet = _fleet(2, n_phases=3)
+    srv = MappingServer(CFG, n_slots=2)
+    _submit_all(srv, fleet)
+    srv.run(max_ticks=1)            # phase 0 served, phase 1 batch prepared
+    assert srv._pending is not None
+    v0 = srv.store.version("t000")
+    srv.remove("t000")              # its phase-1 entry is now in flight
+    assert srv._pending is not None  # prepared batch survives the removal
+    srv.run()
+    t0 = srv.tenant("t000")
+    assert t0.removed and len(t0.results) == 1       # phase 0 only
+    assert srv.store.version("t000") == v0           # no post-removal put
+    assert srv.stats()["faults"]["stale_dropped"] >= 1
+    assert srv.tenant("t001").done
+    _assert_tenant_matches_solo(srv, "t001", fleet["t001"])
+
+
 def test_tenant_fleet_builder_shares_traces():
     fleet = _fleet(4, n_phases=2)
     assert len(fleet) == 4
