@@ -10,12 +10,17 @@
 #                     default platform AND the forced 4-device platform —
 #                     tenant quarantine/rollback isolation, crash-safe
 #                     checkpoint durability (kill-resume), shrink-devices
+#   make test-fleet   the fleet-scale suite (tests/test_fleet.py): 2-D mesh
+#                     bit-identity across shapes (forced 4-device subprocess),
+#                     seed-share on/off equivalence, shard packing, and the
+#                     2-local-process jax.distributed scaffolding
 #   make bench-smoke  smallest benchmark slice (fig5 + the engine perf record
 #                     + the continual warm-vs-cold record + the multi-tenant
 #                     serving record + the fault-tolerance record + the
-#                     topology-axis record: writes bench_out/BENCH_engine.json,
-#                     BENCH_continual.json, BENCH_serving.json,
-#                     BENCH_faults.json and BENCH_topology.json)
+#                     topology-axis record + the fleet-scale record: writes
+#                     bench_out/BENCH_engine.json, BENCH_continual.json,
+#                     BENCH_serving.json, BENCH_faults.json,
+#                     BENCH_topology.json and BENCH_fleet.json)
 #   make bench-continual  just the continual-stream warm-vs-cold benchmark
 #   make bench-serving    just the multi-tenant serving benchmark (64 tenant
 #                         streams through 16 resident slot programs)
@@ -31,8 +36,9 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test test-fast test-4dev test-faults bench-smoke bench-continual \
-	bench-serving bench-faults bench-topology bench profile
+.PHONY: test test-fast test-4dev test-faults test-fleet bench-smoke \
+	bench-continual bench-serving bench-faults bench-topology bench-fleet \
+	bench profile
 
 test:
 	$(PY) -m pytest -x -q
@@ -55,8 +61,13 @@ test-faults:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4 $$XLA_FLAGS" \
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q tests/test_faults.py
 
+# Fleet-scale suite: includes the slow forced-4-device and 2-process
+# subprocess tests regardless of the parent platform.
+test-fleet:
+	$(PY) -m pytest -x -q tests/test_fleet.py
+
 bench-smoke:
-	BENCH_ONLY=fig5,engine,continual,serving,faults,topology $(PY) benchmarks/run.py
+	BENCH_ONLY=fig5,engine,continual,serving,faults,topology,fleet $(PY) benchmarks/run.py
 
 bench-continual:
 	BENCH_ONLY=continual $(PY) benchmarks/run.py
@@ -69,6 +80,9 @@ bench-faults:
 
 bench-topology:
 	BENCH_ONLY=topology $(PY) benchmarks/run.py
+
+bench-fleet:
+	BENCH_ONLY=fleet $(PY) benchmarks/run.py
 
 bench:
 	$(PY) benchmarks/run.py

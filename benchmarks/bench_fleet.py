@@ -1,0 +1,201 @@
+"""Fleet-scale sweep benchmark: a seed-wide grid on the 2-D (lanes x seeds)
+device mesh vs the PR 7 1-D lane-sharded path.
+
+The grid is seed-heavy on purpose — every app carries `SEEDS` AIMM replicas
+(one seed group of L lanes x S seeds) plus one deterministic baseline lane
+per app (a ragged S=1 group) — because that is exactly the shape where the
+1-D path wastes devices: with the seed axis trapped inside the lane, a
+4-device mesh must pad L lanes up to a multiple of 4 while every device
+re-simulates all S seeds.  The 2-D path factors the mesh over both axes
+(auto-chosen to minimize padded cells across the plan's groups), shares the
+seed-invariant per-epoch work (op windows, row-buffer winners, PEI
+thresholds) across the S replicas, and packs ragged groups by padded cost.
+
+Protocol (interleaved A/B, min of warm reps — see benchmarks/README.md):
+
+  A (baseline): REPRO_SWEEP_MESH=<n>x1, REPRO_SEED_SHARE=off — the 1-D
+     lane-sharded inner-vmap path on the same devices.
+  B (new):      auto-factored 2-D mesh, seed sharing on.
+
+Both paths stay resident (distinct compiled programs) so reps alternate
+without recompiling.  Recorded: warm wall, delivered epochs/sec (total and
+per host), padding-waste ratio of both placements, the A/B improvement
+factor, bit-identity of metrics across every tested mesh shape (<n>x1,
+2x2, 1x4, auto), and serial-reference mismatches on a spot-check subset.
+
+The record lands in ``bench_out/BENCH_fleet.json`` (read-modify-write:
+``bench_mesh_scaling`` folds its device-mesh shape sweep into the same
+file under ``device_mesh_sweep``).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, Timer, emit
+
+JSON_PATH = os.environ.get("BENCH_FLEET_JSON", "bench_out/BENCH_fleet.json")
+
+SEEDS = int(os.environ.get("BENCH_FLEET_SEEDS", "32" if FULL else "8"))
+N_OPS = 2048 if FULL else 512
+EPISODES = 2
+REPS = 5
+
+
+@contextlib.contextmanager
+def _env(**kv):
+    """Temporarily set/clear env knobs (None clears)."""
+    old = {k: os.environ.get(k) for k in kv}
+    try:
+        for k, v in kv.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _metrics_equal(a, b) -> bool:
+    return (set(a.metrics) == set(b.metrics)
+            and all(np.array_equal(np.asarray(a.metrics[k]),
+                                   np.asarray(b.metrics[k]))
+                    for k in a.metrics))
+
+
+def run():
+    from repro.nmp import partition
+    from repro.nmp import plan as plan_mod
+    from repro.nmp.scenarios import single_program_grid
+    from repro.nmp.sweep import run_grid, run_grid_serial
+    from repro.nmp.traces import APPS
+
+    apps = APPS if FULL else ("KM", "PR")
+    grid = single_program_grid(apps=apps, mappers=("aimm",), n_ops=N_OPS,
+                               seeds=tuple(range(SEEDS)),
+                               aimm_episodes=EPISODES)
+    grid += single_program_grid(apps=apps, mappers=("none",), n_ops=N_OPS,
+                                seeds=(0,))
+    n_dev = len(partition.sweep_devices())
+    base = {"REPRO_SWEEP_MESH": f"{n_dev}x1", "REPRO_SEED_SHARE": "off"}
+    new = {"REPRO_SWEEP_MESH": None, "REPRO_SEED_SHARE": None}  # auto + on
+
+    # cold runs compile both resident program sets
+    with _env(**base):
+        res_base = run_grid(grid)
+    with _env(**new):
+        res_new = run_grid(grid)
+    bit_1d = _metrics_equal(res_base, res_new)
+
+    # interleaved A/B; the min of the warm reps is the signal on this
+    # 2-core container (benchmarks/README.md)
+    warm_base, warm_new = [], []
+    for _ in range(REPS):
+        with _env(**base):
+            t0 = time.time()
+            res_base = run_grid(grid)
+            warm_base.append(time.time() - t0)
+        with _env(**new):
+            t0 = time.time()
+            res_new = run_grid(grid)
+            warm_new.append(time.time() - t0)
+    warm_b, warm_n = min(warm_base), min(warm_new)
+    improvement = warm_b / warm_n
+
+    # bit-identity across every mesh shape that factors the device count
+    shapes = {}
+    for shape in ("2x2", "1x4"):
+        dl, ds = (int(x) for x in shape.split("x"))
+        if dl * ds != n_dev:
+            continue
+        with _env(REPRO_SWEEP_MESH=shape, REPRO_SEED_SHARE=None):
+            shapes[shape] = _metrics_equal(res_new, run_grid(grid))
+    mesh_identical = bit_1d and all(shapes.values())
+
+    # serial spot check: a strided subset covering every app and both
+    # mapper kinds (full serial at fleet scale would dwarf the benchmark)
+    idxs = sorted(set(list(range(0, len(grid),
+                                 max(1, len(grid) // 8)))[:8]
+                      + [len(grid) - 1]))
+    serial = run_grid_serial([grid[i] for i in idxs])
+    mismatches = sum(
+        1 for j, i in enumerate(idxs)
+        if serial[j]["cycles"] != res_new.episode_summary(i)["cycles"])
+
+    import jax
+    lane_epochs = float(np.sum(res_new.metrics["epochs"]))
+    eps_per_s = lane_epochs / warm_n
+    n_hosts = jax.process_count()
+    groups = [(g.n_lanes, g.n_seeds, g.n_episodes)
+              for g in res_new.plan.groups]
+    waste_new = plan_mod.padding_waste(res_new.plan, *res_new.mesh_shape)
+    waste_base = plan_mod.padding_waste(res_base.plan, *res_base.mesh_shape)
+
+    tag = f"fleet/cells{len(grid)}_s{SEEDS}"
+    emit(f"{tag}/warm_1d_s", warm_b * 1e6, round(warm_b, 3))
+    emit(f"{tag}/warm_2d_s", warm_n * 1e6, round(warm_n, 3))
+    emit(f"{tag}/improvement_vs_1d", warm_n * 1e6, round(improvement, 3))
+    emit(f"{tag}/epoch_steps_per_s", warm_n * 1e6, round(eps_per_s, 1))
+    emit(f"{tag}/padding_waste_2d", warm_n * 1e6, round(waste_new, 4))
+    emit(f"{tag}/padding_waste_1d", warm_b * 1e6, round(waste_base, 4))
+    emit(f"{tag}/mesh_shapes_bit_identical", warm_n * 1e6, mesh_identical)
+    emit(f"{tag}/metric_mismatches_vs_serial", warm_n * 1e6, mismatches)
+    emit(f"{tag}/n_devices", warm_n * 1e6, res_new.n_devices)
+
+    record = {
+        "grid": {"cells": len(grid), "apps": list(apps), "seeds": SEEDS,
+                 "n_ops": N_OPS, "aimm_episodes": EPISODES, "full": FULL,
+                 "folded_lanes": res_new.plan.n_lanes,
+                 "groups_lanes_seeds_episodes": groups},
+        "mesh": {"n_devices": res_new.n_devices,
+                 "shape_2d": list(res_new.mesh_shape),
+                 "shape_1d": list(res_base.mesh_shape),
+                 "n_hosts": n_hosts,
+                 "process_index": jax.process_index()},
+        "throughput": {
+            "warm_1d_s": round(warm_b, 4),
+            "warm_2d_s": round(warm_n, 4),
+            "warm_1d_all": [round(w, 4) for w in warm_base],
+            "warm_2d_all": [round(w, 4) for w in warm_new],
+            "lane_epochs": lane_epochs,
+            "epoch_steps_per_s": round(eps_per_s, 1),
+            "epoch_steps_per_s_per_host": round(eps_per_s / n_hosts, 1),
+            "improvement_vs_1d": round(improvement, 3),
+        },
+        "padding_waste": {"mesh_2d": round(waste_new, 4),
+                          "mesh_1d": round(waste_base, 4)},
+        "exactness": {
+            "bit_identical_vs_1d": bool(bit_1d),
+            "mesh_shapes_bit_identical": {**{f"{n_dev}x1_vs_auto": bool(
+                bit_1d)}, **{f"{s}_vs_auto": bool(v)
+                             for s, v in shapes.items()}},
+            "serial_cells_checked": len(idxs),
+            "metric_mismatches_vs_serial": mismatches,
+        },
+    }
+    os.makedirs(os.path.dirname(JSON_PATH) or ".", exist_ok=True)
+    existing = {}
+    if os.path.exists(JSON_PATH):
+        try:
+            with open(JSON_PATH) as f:
+                existing = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            existing = {}
+    existing.update(record)
+    with open(JSON_PATH, "w") as f:
+        json.dump(existing, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,11 +1,87 @@
-"""Fig. 11: 8x8 memory-cube mesh — AIMM adapts to the larger network without
-retraining hyperparameters (execution time normalized to 8x8 BNMP).  One
-batched sweep under the 8x8 config covers every app's baseline + AIMM lane."""
+"""Mesh scaling along both of the repo's mesh axes.
+
+Fig. 11 (paper): 8x8 *memory-cube* mesh — AIMM adapts to the larger cube
+network without retraining hyperparameters (execution time normalized to
+8x8 BNMP).  One batched sweep under the 8x8 config covers every app's
+baseline + AIMM lane.
+
+Device-mesh shape sweep (fleet axis): the same seed-wide grid timed under
+every (lanes x seeds) device-mesh factorization of the visible device
+count via REPRO_SWEEP_MESH, plus the auto-factored shape — warm wall,
+padded-cell waste (`plan.padding_waste`), and bit-identity vs the auto
+shape per point.  The sweep is folded into ``bench_out/BENCH_fleet.json``
+under ``device_mesh_sweep`` (read-modify-write, so module order relative
+to ``bench_fleet`` does not matter).
+"""
+import json
+import os
+import time
+
 from benchmarks.common import (EPISODES, N_OPS, apps, cached_grid, emit,
                                grid_us, lane_summary)
 from repro.nmp import NMPConfig
 
 CFG8 = NMPConfig(mesh_x=8, mesh_y=8)
+
+FLEET_JSON = os.environ.get("BENCH_FLEET_JSON", "bench_out/BENCH_fleet.json")
+SWEEP_SEEDS = 8
+SWEEP_N_OPS = 512
+SWEEP_REPS = 3
+
+
+def _device_mesh_sweep():
+    from benchmarks.bench_fleet import _env, _metrics_equal
+    from repro.nmp import partition
+    from repro.nmp import plan as plan_mod
+    from repro.nmp.scenarios import single_program_grid
+    from repro.nmp.sweep import run_grid
+
+    n_dev = len(partition.sweep_devices())
+    grid = single_program_grid(apps=("KM", "SPMV"), mappers=("aimm",),
+                               n_ops=SWEEP_N_OPS,
+                               seeds=tuple(range(SWEEP_SEEDS)),
+                               aimm_episodes=2)
+    shapes = [(dl, n_dev // dl) for dl in range(1, n_dev + 1)
+              if n_dev % dl == 0]
+    with _env(REPRO_SWEEP_MESH=None, REPRO_SEED_SHARE=None):
+        auto = run_grid(grid)
+    points = []
+    for dl, ds in shapes:
+        with _env(REPRO_SWEEP_MESH=f"{dl}x{ds}", REPRO_SEED_SHARE=None):
+            res = run_grid(grid)            # compile
+            warm = []
+            for _ in range(SWEEP_REPS):
+                t0 = time.time()
+                res = run_grid(grid)
+                warm.append(time.time() - t0)
+        warm_s = min(warm)
+        waste = plan_mod.padding_waste(res.plan, dl, ds)
+        ident = _metrics_equal(auto, res)
+        emit(f"mesh_sweep/{dl}x{ds}/warm_s", warm_s * 1e6,
+             round(warm_s, 3))
+        points.append({"shape": [dl, ds], "warm_s": round(warm_s, 4),
+                       "padding_waste": round(waste, 4),
+                       "bit_identical_vs_auto": bool(ident)})
+    record = {"device_mesh_sweep": {
+        "grid": {"cells": len(grid), "seeds": SWEEP_SEEDS,
+                 "n_ops": SWEEP_N_OPS},
+        "n_devices": n_dev,
+        "auto_shape": list(auto.mesh_shape),
+        "points": points,
+    }}
+    os.makedirs(os.path.dirname(FLEET_JSON) or ".", exist_ok=True)
+    existing = {}
+    if os.path.exists(FLEET_JSON):
+        try:
+            with open(FLEET_JSON) as f:
+                existing = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            existing = {}
+    existing.update(record)
+    with open(FLEET_JSON, "w") as f:
+        json.dump(existing, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {FLEET_JSON} (device_mesh_sweep)", flush=True)
 
 
 def run():
@@ -18,6 +94,7 @@ def run():
         bcyc = lane_summary(cached, f"{app}/bnmp/none/s0")["cycles"]
         cyc = lane_summary(cached, f"{app}/bnmp/aimm/s0")["cycles"]
         emit(f"fig11/{app}/8x8/AIMM_norm_time", us, round(cyc / bcyc, 4))
+    _device_mesh_sweep()
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ MODULES = [
     ("fig11_mesh_scaling", "benchmarks.bench_mesh_scaling"),
     ("fig12_multiprogram", "benchmarks.bench_multiprogram"),
     ("continual_stream", "benchmarks.bench_continual"),
+    ("fleet", "benchmarks.bench_fleet"),
     ("serving", "benchmarks.bench_serving"),
     ("faults", "benchmarks.bench_faults"),
     ("topology_axis", "benchmarks.bench_topology"),

@@ -124,11 +124,19 @@ class BodyFlags(NamedTuple):
     technique-comparison grid never builds the AIMM action machinery and a
     grid without PEI lanes never computes the hot-page threshold.  `pei_k` is
     the top_k envelope for the PEI threshold order statistic (0 = no PEI
-    lanes)."""
+    lanes).
+
+    `share_seed_inv` switches the epoch driver's folded-seed path to compute
+    the seed-invariant half of the cost model (`SharedEpoch`: op windows,
+    valid masks, row-buffer stamps, PEI thresholds, page-touch counts) once
+    per lane and broadcast it across the S seed replicas instead of
+    recomputing it S times.  Bit-identical either way; compiled out (flag
+    False) when the executed seed axis is width 1."""
     has_agent: bool = False     # a live DQN (aimm lanes with a learned policy)
     any_aimm: bool = False      # hot-page selection / action application
     any_tom: bool = False       # TOM candidate scoring + commit
     pei_k: int = 0              # static top_k width for the PEI threshold
+    share_seed_inv: bool = False  # hoist seed-invariant work out of seed vmap
 
 
 def pei_hot_index(n_pages: int, cfg: NMPConfig) -> int:
@@ -348,10 +356,90 @@ def _fetch_window(env: EnvState, trace: dict, ctx: TraceCtx,
     return dest, src1, src2, valid
 
 
+class SharedEpoch(NamedTuple):
+    """The seed-invariant half of one lane's epoch: every quantity below
+    depends only on the op stream position (`op_ptr`/`epochs`), the trace
+    arrays, and trace-derived accumulators (`page_access_ema`, `rb_stamp`)
+    that evolve identically across seed replicas — never on the data
+    mapping, routing, timing, or RNG, which are seed-dependent.  Under
+    `BodyFlags.share_seed_inv` the epoch driver computes one SharedEpoch per
+    lane and broadcasts it across the folded seed axis (inner vmap
+    `in_axes=None`), so S replicas share one window fetch, one row-buffer
+    stamp scatter, one PEI top_k and one touch-count scatter instead of S."""
+    dest: jnp.ndarray          # (W,) i32 op window destination pages
+    src1: jnp.ndarray          # (W,) i32
+    src2: jnp.ndarray          # (W,) i32
+    valid: jnp.ndarray         # (W,) f32 window validity mask
+    w_valid: jnp.ndarray       # () f32
+    has_ops: jnp.ndarray       # () bool
+    rb_stamp: jnp.ndarray      # (P+1,) i32 updated row-buffer stamps
+    rb_winner: jnp.ndarray     # (3W,) bool first-touch-of-epoch indicators
+    page_ema: jnp.ndarray      # (P,) f32 updated access EMA (PEI programs)
+    pei_hot1: jnp.ndarray | None  # (W,) bool src1 above the PEI threshold
+    pei_hot2: jnp.ndarray | None  # (W,) bool
+    touch_cnt: jnp.ndarray | None  # (P,) f32 window touch counts (AIMM)
+    tom_scores: jnp.ndarray | None  # (K,) f32 TOM candidate scores (TOM)
+
+
+def _shared_epoch(env: EnvState, trace: dict, ctx: TraceCtx, cfg: NMPConfig,
+                  flags: BodyFlags,
+                  tom_scores_all: jnp.ndarray | None = None) -> SharedEpoch:
+    """Compute the seed-invariant epoch quantities from one lane's env (any
+    seed replica — seed slot 0 by convention).  Bit-identical to the inline
+    computations these replaced in `_epoch_sim`."""
+    P = env.page_to_cube.shape[0]
+    W = cfg.w_max
+
+    dest, src1, src2, valid = _fetch_window(env, trace, ctx, cfg)
+    w_valid = valid.sum()
+    has_ops = w_valid > 0
+
+    # Row-buffer stamp race: pages are stamped (not cubes), so winners are
+    # mapping-independent even though the per-cube distinct counts are not.
+    acc_page = jnp.concatenate([dest, src1, src2])
+    acc_valid = jnp.concatenate([valid, valid, valid])
+    tag_base = (env.epochs.astype(jnp.int32) + 1) * (3 * W)
+    stamp_val = jnp.where(acc_valid > 0,
+                          tag_base + jnp.arange(3 * W, dtype=jnp.int32), 0)
+    stamp_idx = jnp.where(acc_valid > 0, acc_page, jnp.int32(P))
+    rb_stamp = env.rb_stamp.at[stamp_idx].max(stamp_val)
+    rb_winner = (rb_stamp[stamp_idx] == stamp_val) & (acc_valid > 0)
+
+    if flags.pei_k > 0:
+        # PEI hot threshold = the m-th largest access EMA among the real
+        # pages (m = n_pages - pei_idx), read from a static top_k envelope
+        # instead of a full O(P log P) sort.  Identical value: padded pages
+        # have EMA 0 and sort to the front, so ascending index
+        # (P - n_pages) + pei_idx is the m-th largest overall.  Thresholds
+        # read the PRE-update EMA; the decayed+scattered EMA is stored.
+        top = jax.lax.top_k(env.page_access_ema, flags.pei_k)[0]
+        m = ctx.n_pages - ctx.pei_idx
+        thresh = top[jnp.clip(m - 1, 0, flags.pei_k - 1)]
+        pei_hot1 = env.page_access_ema[src1] >= jnp.maximum(thresh, 1e-6)
+        pei_hot2 = env.page_access_ema[src2] >= jnp.maximum(thresh, 1e-6)
+        page_ema = 0.9 * env.page_access_ema
+        page_ema = page_ema.at[dest].add(valid).at[src1].add(
+            valid).at[src2].add(valid)
+    else:
+        # Only the PEI threshold reads the access EMA; without PEI lanes the
+        # decay + triple scatter is dead weight.
+        pei_hot1 = pei_hot2 = None
+        page_ema = env.page_access_ema
+
+    touch_cnt = (jnp.zeros((P,)).at[acc_page].add(acc_valid)
+                 if flags.any_aimm else None)
+    return SharedEpoch(dest=dest, src1=src1, src2=src2, valid=valid,
+                       w_valid=w_valid, has_ops=has_ops, rb_stamp=rb_stamp,
+                       rb_winner=rb_winner, page_ema=page_ema,
+                       pei_hot1=pei_hot1, pei_hot2=pei_hot2,
+                       touch_cnt=touch_cnt, tom_scores=tom_scores_all)
+
+
 def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
                ctx: TraceCtx, cfg: NMPConfig, spec: StateSpec,
                agent_cfg: AgentConfig, flags: BodyFlags,
-               tom_scores_all: jnp.ndarray | None = None) -> EpochMid:
+               tom_scores_all: jnp.ndarray | None = None,
+               shared: SharedEpoch | None = None) -> EpochMid:
     """Everything up to (but excluding) the agent's action: window fetch,
     scheduling, routing, timing, reward bookkeeping, hot-page selection and
     the state vector.  Runs per-lane (vmapped by the epoch driver).
@@ -359,7 +447,11 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     `tom_scores_all` is the (K,) candidate-score vector for this lane's
     window, computed by the epoch driver under its profiling-phase `lax.cond`
     (zeros when no lane is profiling — the per-lane select below never reads
-    them in that case)."""
+    them in that case).
+
+    `shared` carries the precomputed seed-invariant half (see SharedEpoch)
+    when the driver hoists it out of the seed vmap; None (serial runs,
+    S==1 programs) computes it inline — same ops, bit-identical."""
     P = env.page_to_cube.shape[0]
     C = cfg.n_cubes
     W = cfg.w_max
@@ -367,10 +459,12 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     is_tom = ctx.mapper == MAPPER_ID["tom"]
     is_aimm = ctx.mapper == MAPPER_ID["aimm"]
 
-    # ---- window fetch (trace arrays pre-padded by W) ----
-    dest, src1, src2, valid = _fetch_window(env, trace, ctx, cfg)
-    w_valid = valid.sum()
-    has_ops = w_valid > 0
+    # ---- seed-invariant half: window fetch, stamps, thresholds, counts ----
+    if shared is None:
+        shared = _shared_epoch(env, trace, ctx, cfg, flags, tom_scores_all)
+    dest, src1, src2, valid = shared.dest, shared.src1, shared.src2, shared.valid
+    w_valid = shared.w_valid
+    has_ops = shared.has_ops
 
     # ---- data mapping (TOM may override the page table) ----
     if flags.any_tom:
@@ -385,18 +479,10 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
 
     # ---- schedule compute cube ----
     if flags.pei_k > 0:
-        # PEI hot threshold = the m-th largest access EMA among the real pages
-        # (m = n_pages - pei_idx), read from a static top_k envelope instead of
-        # a full O(P log P) sort.  Identical value: padded pages have EMA 0 and
-        # sort to the front, so ascending index (P - n_pages) + pei_idx is the
-        # m-th largest overall.
-        top = jax.lax.top_k(env.page_access_ema, flags.pei_k)[0]
-        m = ctx.n_pages - ctx.pei_idx
-        thresh = top[jnp.clip(m - 1, 0, flags.pei_k - 1)]
-        hot1 = env.page_access_ema[src1] >= jnp.maximum(thresh, 1e-6)
-        hot2 = env.page_access_ema[src2] >= jnp.maximum(thresh, 1e-6)
+        # PEI hot indicators come from the shared half (threshold = m-th
+        # largest pre-update access EMA; see _shared_epoch).
         ccube = baselines.schedule_by_id(ctx.technique, dcube, s1cube, s2cube,
-                                         hot1, hot2)
+                                         shared.pei_hot1, shared.pei_hot2)
     else:
         # No PEI lane in this program: schedule_by_id collapses to LDB/BNMP.
         ccube = jnp.where(ctx.technique == TECH_ID["ldb"], s1cube, dcube)
@@ -430,23 +516,17 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
 
     # ---- row-buffer model: distinct (cube,page) pairs accessed per cube ----
     # A page maps to exactly one cube, so distinct pairs == distinct pages.
-    # O(W) scatter-stamp: stamp each accessed page with this epoch's tag; a
-    # page was touched iff its stamp equals the tag.  Invalid accesses land in
-    # the sink row P.  Counts are small integers, so the scatter-adds below
-    # are bit-exact regardless of accumulation order.
+    # O(W) scatter-stamp (shared half): stamp each accessed page with this
+    # epoch's tag; an access is its page's first touch of the epoch iff it
+    # won the stamp race (`rb_winner`).  Only the scatter-add of winner
+    # indicators by the seed-dependent compute cube stays per-seed.  Counts
+    # are small integers, so the scatter-adds below are bit-exact regardless
+    # of accumulation order.
     acc_cube = jnp.concatenate([dcube, s1cube, s2cube])
-    acc_page = jnp.concatenate([dest, src1, src2])
     acc_valid = jnp.concatenate([valid, valid, valid])
-    tag_base = (env.epochs.astype(jnp.int32) + 1) * (3 * W)
-    stamp_val = jnp.where(acc_valid > 0,
-                          tag_base + jnp.arange(3 * W, dtype=jnp.int32), 0)
-    stamp_idx = jnp.where(acc_valid > 0, acc_page, jnp.int32(P))
-    rb_stamp = env.rb_stamp.at[stamp_idx].max(stamp_val)
-    # An access is its page's first touch of the epoch iff it won the stamp
-    # race (holds the page's max access tag), so "distinct pages per cube" is
-    # one O(W) gather + scatter-add of winner indicators.
-    winner = (rb_stamp[stamp_idx] == stamp_val) & (acc_valid > 0)
-    distinct_c = jnp.zeros((C,)).at[acc_cube].add(winner.astype(jnp.float32))
+    rb_stamp = shared.rb_stamp
+    distinct_c = jnp.zeros((C,)).at[acc_cube].add(
+        shared.rb_winner.astype(jnp.float32))
     acc_c = jnp.zeros((C,)).at[acc_cube].add(acc_valid)
     hit_c = jnp.where(acc_c > 0, 1.0 - distinct_c / jnp.maximum(acc_c, 1.0), 0.5)
     lat_c = hit_c * cfg.t_dram_hit + (1 - hit_c) * cfg.t_dram_miss
@@ -503,20 +583,14 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     nmp_occ = d * env.nmp_occ + (1 - d) * ops_c
     rb_hit = d * env.rb_hit + (1 - d) * hit_c
     mc_queue = d * env.mc_queue + (1 - d) * mcq
-    if flags.pei_k > 0:
-        page_ema = 0.9 * env.page_access_ema
-        page_ema = page_ema.at[dest].add(valid).at[src1].add(valid).at[src2].add(valid)
-    else:
-        # Only the PEI threshold reads the access EMA; without PEI lanes the
-        # decay + triple scatter is dead weight.
-        page_ema = env.page_access_ema
+    page_ema = shared.page_ema          # updated in the shared half (PEI only)
 
     # ---- hot page + page-info cache update (AIMM lanes only) ----
     # The MCs take turns feeding the agent page info (§5.1 round-robin); pages
     # acted on in the last few invocations are skipped so invocations cover the
     # hot set instead of hammering one page.
     if flags.any_aimm:
-        touch_cnt = jnp.zeros((P,)).at[acc_page].add(acc_valid)
+        touch_cnt = shared.touch_cnt
         recently = jnp.zeros((P,)).at[env.recent_pages].set(
             (env.recent_pages >= 0).astype(jnp.float32))
         hot_page = jnp.argmax(touch_cnt * (1.0 - recently)).astype(jnp.int32)
@@ -565,7 +639,7 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
         # profiling: candidate `phase` was scored on this window by the epoch
         # driver (under lax.cond on "any lane profiles" — see _epoch_batched);
         # outside profiling phases the scores are unused and may be zeros.
-        scores_all = tom_scores_all
+        scores_all = shared.tom_scores
         tom_scores = jnp.where(is_tom & (phase < K),
                                env.tom_scores.at[jnp.clip(phase, 0, K - 1)].set(
                                    scores_all[jnp.clip(phase, 0, K - 1)]),
@@ -905,29 +979,40 @@ def _epoch_batched(env: EnvState, agent: AgentState | None, trace: dict,
     by the equality test).  TOM's profiling-phase candidate scoring is gated
     the same way: scored only under `lax.cond` on "any lane is in a
     profiling phase" (`tom_gate="masked"` forces the score-every-epoch
-    reference path)."""
+    reference path).
+
+    With `flags.share_seed_inv` (seed grids only) the seed-invariant half of
+    the cost model is computed once per lane from the seed-0 env slice
+    (`_shared_epoch`; every quantity in it evolves identically across seed
+    replicas) and broadcast into the inner seed vmap with `in_axes=None` —
+    S replicas share one window fetch / stamp scatter / PEI top_k, and TOM's
+    profiling scorer runs per lane instead of per cell."""
+    share = seed_axis and flags.share_seed_inv
+    env0 = jax.tree.map(lambda a: a[:, 0], env) if share else None
+
     if flags.any_tom:
         K = tom_cands.shape[0]
 
         def scores_fn(e, t, c):
             return _tom_window_scores(e, t, tom_cands, c, cfg)
 
+        score_env = env0 if share else env
         vscores = (jax.vmap(jax.vmap(scores_fn, in_axes=(0, None, None)))
-                   if seed_axis else jax.vmap(scores_fn))
-        phase = (env.epochs.astype(jnp.int32)
+                   if seed_axis and not share else jax.vmap(scores_fn))
+        phase = (score_env.epochs.astype(jnp.int32)
                  % (K + TOM_COMMIT_WINDOWS))             # (B,) / (B, S)
         is_tom_b = ctx.mapper == MAPPER_ID["tom"]
         n_ops_b = ctx.n_ops
-        if seed_axis:
+        if seed_axis and not share:
             is_tom_b, n_ops_b = is_tom_b[:, None], n_ops_b[:, None]
-        profiling = is_tom_b & (phase < K) & (env.op_ptr < n_ops_b)
+        profiling = is_tom_b & (phase < K) & (score_env.op_ptr < n_ops_b)
         if tom_gate == "cond":
             tom_scores_all = jax.lax.cond(
                 jnp.any(profiling),
-                lambda: vscores(env, trace, ctx),
+                lambda: vscores(score_env, trace, ctx),
                 lambda: jnp.zeros(phase.shape + (K,)))
         else:
-            tom_scores_all = vscores(env, trace, ctx)
+            tom_scores_all = vscores(score_env, trace, ctx)
     else:
         tom_scores_all = None
 
@@ -935,8 +1020,20 @@ def _epoch_batched(env: EnvState, agent: AgentState | None, trace: dict,
         return _epoch_sim(e, t, tom_cands, c, cfg, spec, agent_cfg, flags, ts)
 
     if seed_axis:
-        sim = jax.vmap(jax.vmap(sim_fn, in_axes=(0, None, None, 0)))(
-            env, trace, ctx, tom_scores_all)
+        if share:
+            shared = jax.vmap(
+                lambda e, t, c, ts: _shared_epoch(e, t, c, cfg, flags, ts))(
+                    env0, trace, ctx, tom_scores_all)
+
+            def sim_sh(e, t, c, sh):
+                return _epoch_sim(e, t, tom_cands, c, cfg, spec, agent_cfg,
+                                  flags, shared=sh)
+
+            sim = jax.vmap(jax.vmap(sim_sh, in_axes=(0, None, None, None)))(
+                env, trace, ctx, shared)
+        else:
+            sim = jax.vmap(jax.vmap(sim_fn, in_axes=(0, None, None, 0)))(
+                env, trace, ctx, tom_scores_all)
         B, S = sim.invoke.shape
         flat = lambda a: a.reshape((B * S,) + a.shape[2:])
         rep = lambda a: jnp.repeat(a, S, axis=0)         # per-lane -> per-cell

@@ -33,6 +33,7 @@ layer (`nmp.sweep`) runs it.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Sequence
 
 import numpy as np
@@ -61,6 +62,22 @@ def lane_lineage(sc: Scenario) -> str | None:
     cold-start lane.  Only learned-policy AIMM lanes carry an agent, so a
     lineage tag on any other cell is inert and normalized away here."""
     return sc.lineage if needs_agent(sc) else None
+
+
+_ENV_SEED_SHARE = "REPRO_SEED_SHARE"
+
+
+def seed_share_enabled() -> bool:
+    """Whether seed-invariant work sharing (engine.SharedEpoch hoisted out of
+    the seed vmap) is enabled.  On by default; REPRO_SEED_SHARE=off forces
+    the historical recompute-per-replica path (the A/B baseline in
+    benchmarks/bench_fleet.py).  Bit-identical either way."""
+    raw = os.environ.get(_ENV_SEED_SHARE, "on").strip().lower()
+    if raw in ("", "on", "1"):
+        return True
+    if raw in ("off", "0"):
+        return False
+    raise ValueError(f"{_ENV_SEED_SHARE}={raw!r}: expected 'on' or 'off'")
 
 
 def seed_invariant(sc: Scenario) -> bool:
@@ -159,9 +176,23 @@ class GridPlan:
         raise IndexError(index)
 
 
+def lane_cost(lane: LanePlan) -> int:
+    """Padded device cost proxy of one folded lane: real op count × episode
+    schedule length × simulated seed width.  Drives the throughput-tuned
+    shard packing (`_fold_lanes` ordering, `packed_group_order`)."""
+    sc = lane.scenario
+    return sc.trace.n_ops * sc.total_episodes * lane.n_seeds
+
+
 def _fold_lanes(scenarios: Sequence[Scenario],
                 idxs: Sequence[int]) -> list[LanePlan]:
-    """Fold one group's scenarios by `fold_key`, preserving first-seen order.
+    """Fold one group's scenarios by `fold_key`, then order lanes by
+    descending padded cost (`lane_cost`), stably — first-seen order breaks
+    ties.  Cost-descending order packs the ragged lanes across the mesh's
+    lane shards so the per-device padding (every shard runs the group's
+    common padded shapes) wastes the least work; arrival order used to put
+    cheap lanes first and let one late expensive lane inflate the tail
+    shard.
 
     Seed-invariant lanes (deterministic mappers — see `seed_invariant`)
     collapse their replicas onto a single simulated seed slot."""
@@ -179,6 +210,7 @@ def _fold_lanes(scenarios: Sequence[Scenario],
             slots = tuple(range(len(members)))
         lanes.append(LanePlan(scenario=sc, seeds=seeds,
                               indices=tuple(members), slots=slots))
+    lanes.sort(key=lambda lane: -lane_cost(lane))      # stable
     return lanes
 
 
@@ -202,6 +234,41 @@ def group_flags(group: Sequence[Scenario], cfg: NMPConfig,
         any_tom=any(sc.mapper == "tom" for sc in group),
         pei_k=pei_k,
     )
+
+
+def _pad_to(n: int, d: int) -> int:
+    return ((max(n, 1) + d - 1) // d) * d
+
+
+def group_padded_cells(group: GroupPlan, lane_dim: int = 1,
+                       seed_dim: int = 1) -> int:
+    """Executed (lane, seed, episode) cell count of one group on a
+    (lane_dim, seed_dim) device mesh, padding included."""
+    return (_pad_to(group.n_lanes, lane_dim) * _pad_to(group.n_seeds, seed_dim)
+            * group.n_episodes)
+
+
+def packed_group_order(plan: GridPlan, lane_dim: int = 1,
+                       seed_dim: int = 1) -> list[int]:
+    """Execution order of a plan's groups: heaviest padded device cost
+    first, stable.  Dispatching the big programs first overlaps their device
+    execution with the host-side batch build of the cheap tail groups
+    (run_grid pipelines prepare against compute), and plan.groups itself
+    keeps the historical declaration order — only execution is reordered."""
+    return sorted(range(len(plan.groups)),
+                  key=lambda gi: -group_padded_cells(plan.groups[gi],
+                                                     lane_dim, seed_dim))
+
+
+def padding_waste(plan: GridPlan, lane_dim: int = 1,
+                  seed_dim: int = 1) -> float:
+    """Fraction of executed (lane, seed, episode) cells that are padding on
+    a (lane_dim, seed_dim) mesh — the quantity `auto_mesh_shape` minimizes
+    and BENCH_fleet.json records."""
+    useful = sum(g.n_lanes * g.n_seeds * g.n_episodes for g in plan.groups)
+    executed = sum(group_padded_cells(g, lane_dim, seed_dim)
+                   for g in plan.groups)
+    return 1.0 - useful / executed if executed else 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -329,9 +396,14 @@ def plan_grid(scenarios: Sequence[Scenario], cfg: NMPConfig,
                         f"lineage lanes run {sorted(ragged)} episodes but the "
                         f"forced envelope fixes {group_eps}; padding episodes "
                         "would keep training the lineage past its schedule")
+            # Seed-invariant work sharing pays (and compiles in) only when
+            # the simulated seed axis is wider than 1; the execute layer may
+            # re-widen this after mesh padding (sweep.run_grid).
+            flags = group_flags(members, cfg, has_agent)._replace(
+                share_seed_inv=n_seeds > 1 and seed_share_enabled())
             groups.append(GroupPlan(
                 lanes=tuple(lanes), has_agent=has_agent,
-                flags=group_flags(members, cfg, has_agent),
+                flags=flags,
                 n_episodes=group_eps,
                 n_seeds=n_seeds, lineage=lineage, topology=topo))
     return GridPlan(scenarios=scenarios, groups=tuple(groups),
@@ -361,18 +433,30 @@ def episode_schedule(sc: Scenario, seed: int,
     return (np.asarray(seeds, np.int32), np.asarray(explore, bool))
 
 
-def build_group_batch(plan: GridPlan, group: GroupPlan,
-                      cfg: NMPConfig) -> dict[str, np.ndarray]:
+def build_group_batch(plan: GridPlan, group: GroupPlan, cfg: NMPConfig,
+                      host_cache: dict | None = None) -> dict[str, np.ndarray]:
     """Materialize one group's input batch as numpy arrays.
 
     Trace/ctx/page-table entries carry the lane axis (L, ...); the episode
     seed schedule carries the folded seed axis as (L, S, E) with the
     per-lane exploration schedule at (L, E) — seed replicas of a lane share
     the schedule *shape* by construction (fold_key includes episodes and
-    eval_episode)."""
+    eval_episode).
+
+    `host_cache` (optional, caller-owned dict) memoizes the per-lane arrays
+    across calls, keyed on everything that shapes them (fold key, envelope,
+    episode count, seed axis, config).  The serving layer passes a
+    per-server cache so each tick's host batch build reuses the padded trace
+    ops / page tables / seed schedules of resident tenants instead of
+    re-padding them every tick — only lanes new to the slot map are built."""
     lanes = []
     for lane in group.lanes:
         sc = lane.scenario
+        key = (sc.fold_key(), plan.n_ops_max, plan.n_pages_max,
+               group.n_episodes, lane.seeds, cfg)
+        if host_cache is not None and key in host_cache:
+            lanes.append(host_cache[key])
+            continue
         tr = sc.trace
         ops = {k: np.asarray(v) for k, v in
                pad_trace_ops(tr, plan.n_ops_max, cfg).items()}
@@ -387,7 +471,7 @@ def build_group_batch(plan: GridPlan, group: GroupPlan,
         ctx = make_ctx(tr, cfg, sc.technique, sc.mapper, sc.forced_action)
         scheds = [episode_schedule(sc, seed, group.n_episodes)
                   for seed in lane.seeds]
-        lanes.append({
+        built = {
             **ops, "page_table": pt, "rw": rw,
             "n_ops": np.int32(ctx.n_ops), "n_pages": np.int32(ctx.n_pages),
             "t_ring": np.int32(ctx.t_ring), "pei_idx": np.int32(ctx.pei_idx),
@@ -396,7 +480,10 @@ def build_group_batch(plan: GridPlan, group: GroupPlan,
             "forced_action": np.int32(ctx.forced_action),
             "ep_seed": np.stack([s for s, _ in scheds]),       # (S, E)
             "ep_explore": scheds[0][1],                        # (E,)
-        })
+        }
+        if host_cache is not None:
+            host_cache[key] = built
+        lanes.append(built)
     return {k: np.stack([ln[k] for ln in lanes]) for k in lanes[0]}
 
 

@@ -70,7 +70,9 @@ not None` check, and the only standing cost is the once-per-tick finite
 guard (disable with `divergence_guard=False`; measured < 2% in
 benchmarks/bench_faults.py).
 
-Metrics: `MappingServer.stats()` reports per-phase latency p50/p99,
+Metrics: `MappingServer.stats()` reports per-phase latency p50/p99 over
+steady-state ticks (compile ticks are excluded from the percentiles and
+their total wall is reported separately as `compile_s`),
 steady-state epochs/sec (ticks after the last compile), slot occupancy,
 recompile and eviction counts, plus fault/retry/quarantine/rollback/
 fallback counters — the records `benchmarks/bench_serving.py` and
@@ -95,7 +97,8 @@ from repro.nmp.continual import PolicyStore, check_tag
 from repro.nmp.engine import (BodyFlags, default_agent_cfg, pei_top_k,
                               state_spec_for)
 from repro.nmp.faults import FaultPlan, InjectedFault
-from repro.nmp.plan import Envelope, needs_agent, plan_envelope, plan_grid
+from repro.nmp.plan import (Envelope, needs_agent, plan_envelope, plan_grid,
+                            seed_share_enabled)
 from repro.nmp.scenarios import Scenario
 from repro.nmp.sweep import SweepResult
 
@@ -189,6 +192,9 @@ class MappingServer:
         self.cfg = cfg
         self.mesh = partition.build_mesh()
         self.n_slots = partition.padded_lane_count(n_slots, self.mesh)
+        # Tenants never fold, so every group is seed-width 1; a mesh with a
+        # seed axis wider than 1 (REPRO_SWEEP_MESH=LxS) pads the executed
+        # width up and the padding replicas' outputs are dropped.
         self.spec = state_spec_for(cfg)
         self.agent_cfg = agent_cfg or default_agent_cfg(cfg)
         if store is not None and store_capacity is not None:
@@ -212,6 +218,10 @@ class MappingServer:
                                 pei_k=0)
         self._tom_cands = None
         self._pending = None             # prepared-but-unserved next tick
+        # Memo of host-side per-lane batch arrays keyed by trace identity:
+        # an unchanged phase re-entering the resident shape re-uses the
+        # seed-invariant arrays instead of re-quantizing the trace per tick.
+        self._host_cache: dict = {}
         # service metrics
         self.ticks = 0
         self._attempts = 0               # dispatch attempts (ticks + retries)
@@ -404,10 +414,17 @@ class MappingServer:
         groups = [g for g in plan.groups if g.n_lanes]
         assert len(groups) == 1, "serving lanes form one lineage group"
         group = groups[0]
+        # Plan lanes are cost-sorted for shard packing, so lane position no
+        # longer equals schedule position; tenants never fold (distinct
+        # lineage tags), so each lane maps back to exactly one sched entry.
+        lane_of = [0] * len(sched)
+        for li, lane in enumerate(group.lanes):
+            lane_of[lane.indices[0]] = li
         batch, _ = sweep_mod.prepare_group_batch(plan, group, self.cfg,
                                                  self.mesh,
-                                                 n_lanes=self.n_slots)
-        return (sched, scs, plan, group, batch)
+                                                 n_lanes=self.n_slots,
+                                                 host_cache=self._host_cache)
+        return (sched, scs, plan, group, batch, lane_of)
 
     def _advance(self, sched: list[tuple[int, Tenant]]) -> None:
         """Consume the served phase of every scheduled tenant and recycle
@@ -443,7 +460,9 @@ class MappingServer:
             raise ValueError(
                 f"cannot shrink to {keep} devices: the resident slot count "
                 f"{self.n_slots} must stay device-divisible")
-        self.mesh = partition.build_mesh(devs[:keep])
+        # Shrink to a lane-only mesh explicitly: a REPRO_SWEEP_MESH override
+        # was shaped for the full device count and would not factor `keep`.
+        self.mesh = partition.build_mesh(devs[:keep], shape=(keep, 1))
         self._tom_cands = None           # re-replicated on next freeze
         self._device_shrinks += 1
         self._pending = None             # placed on the old mesh; rebuild
@@ -512,16 +531,22 @@ class MappingServer:
     # -- serving -------------------------------------------------------
 
     def _serve_one(self, prepared, overlap: bool):
-        sched, scs, plan, group, batch = prepared
+        sched, scs, plan, group, batch, lane_of = prepared
         tenant_ids = [t.tenant_id for _, t in sched]
         attempt = self._attempts
         self._attempts += 1
+        s_pad = int(batch["ep_seed"].shape[1])   # executed seed width
         warm = sweep_mod._warm_agent_batch(group, self.n_slots, self.store,
-                                           self.agent_cfg)
+                                           self.agent_cfg, n_seeds=s_pad,
+                                           mesh=self.mesh)
         stalled: tuple[str, ...] = ()
         if self.faults is not None:
-            warm = self.faults.poison_warm_agents(attempt, tenant_ids, warm,
-                                                  group.n_seeds)
+            # poison indexes cells by position in the tenants list, which
+            # must therefore follow lane (not schedule) order
+            lane_tenants = [tenant_ids[lane.indices[0]]
+                            for lane in group.lanes]
+            warm = self.faults.poison_warm_agents(attempt, lane_tenants,
+                                                  warm, s_pad)
         n_prog0 = sweep_mod.compiled_sweep_programs()
         t0 = time.perf_counter()
         try:
@@ -530,8 +555,10 @@ class MappingServer:
             out, _env_fin, agent_fin = sweep_mod.dispatch_sweep(
                 batch, self._tom_cands, self.cfg, self.spec, self.agent_cfg,
                 self.envelope.n_epochs, group.n_episodes,
-                self.envelope.ring_len, self._flags, warm_agent=warm,
-                want_agent=True)
+                self.envelope.ring_len,
+                self._flags._replace(
+                    share_seed_inv=s_pad > 1 and seed_share_enabled()),
+                warm_agent=warm, want_agent=True)
             self._advance(sched)
             # the devices are executing this tick: overlap the next tick's
             # host batch build + transfer with it
@@ -545,7 +572,7 @@ class MappingServer:
         self._global_failure_streak = 0
         dirty = self._complete(sched, scs, out, agent_fin, group, wall,
                                sweep_mod.compiled_sweep_programs() - n_prog0,
-                               stalled)
+                               stalled, s_pad, lane_of)
         if dirty:
             # a lane failed after the next batch was prepared: its schedule
             # (and the failed tenant's cursor) changed — rebuild
@@ -553,17 +580,24 @@ class MappingServer:
         return nxt
 
     def _complete(self, sched, scs, out, agent_fin, group, wall: float,
-                  compiles: int, stalled: Sequence[str] = ()) -> bool:
-        S = group.n_seeds            # always 1: tenants never fold together
+                  compiles: int, stalled: Sequence[str] = (),
+                  s_pad: int = 1,
+                  lane_of: Sequence[int] | None = None) -> bool:
+        # s_pad is the *executed* seed width: logically always 1 (tenants
+        # never fold together) but padded up to the mesh seed dim; the
+        # padding replicas repeat seed 0 and slot 0 of each lane is real.
         missed = (self.phase_deadline_s is not None
                   and wall > self.phase_deadline_s)
         if missed:
             self._deadline_misses += 1
-        finite = (sweep_mod.lane_finite_mask(out, agent_fin, len(sched), S)
+        if lane_of is None:
+            lane_of = list(range(len(sched)))
+        finite = (sweep_mod.lane_finite_mask(out, agent_fin, len(sched),
+                                             s_pad)
                   if self.guard else np.ones(len(sched), bool))
         res = SweepResult(
             scenarios=scs, cfg=self.cfg,
-            metrics={k: np.stack([np.asarray(v[li, 0]) for li in
+            metrics={k: np.stack([np.asarray(v[lane_of[li], 0]) for li in
                                   range(len(sched))]) for k, v in out.items()},
             final_env=None, n_episodes=group.n_episodes, wall_s=wall)
         served = 0
@@ -572,7 +606,7 @@ class MappingServer:
             if t.stale:                  # removed/quarantined after prepare
                 self._stale_dropped += 1
                 continue
-            if not finite[li]:
+            if not finite[lane_of[li]]:
                 self._divergences += 1
                 self._rewind(t, f"divergence: non-finite metrics or agent "
                                 f"params in phase {t.cursor - 1}")
@@ -585,7 +619,8 @@ class MappingServer:
                 dirty = True
                 continue
             cell = jax.tree.map(
-                lambda a, li=li: np.asarray(a[li * S]), agent_fin)
+                lambda a, li=li: np.asarray(a[lane_of[li] * s_pad]),
+                agent_fin)
             self.store.put(t.tenant_id, cell, scenario=scs[li].name,
                            tenant=t.tenant_id)
             t.latencies.append(wall)
@@ -648,15 +683,23 @@ class MappingServer:
         return res.episode_summary(lane, episode)
 
     def stats(self) -> dict:
-        """Service-level metrics surface (the BENCH_serving.json record)."""
-        lat = np.asarray([w for t in self._tenants.values()
-                          for w in t.latencies], np.float64)
+        """Service-level metrics surface (the BENCH_serving.json record).
+
+        Phase-latency percentiles are computed over *steady-state* ticks
+        only (ticks after the last one that compiled anything), weighted by
+        the phases each tick served — a tick-1 compile is a one-off cost
+        the resident programs amortize away, and folding it into p99 made
+        the tail look ~100x worse than the service actually runs.  The
+        compile cost is reported separately as `compile_s` (total wall of
+        every tick that compiled at least one program)."""
         wall = np.asarray(self._tick_wall, np.float64)
         active = np.asarray(self._tick_active, np.float64)
         compiles = np.asarray(self._tick_compiles, int)
         # steady state: ticks after the last one that compiled anything
         last_c = int(np.max(np.nonzero(compiles)[0])) if compiles.any() else -1
         steady = slice(last_c + 1, None)
+        # one latency sample per phase served in a steady-state tick
+        lat = np.repeat(wall[steady], active[steady].astype(int))
         ep = self.envelope
         epochs_per_tick = (active * ep.n_epochs * ep.n_episodes
                            if ep is not None else active * 0)
@@ -680,6 +723,7 @@ class MappingServer:
                                     if lat.size else None),
             "phase_latency_p99_s": (float(np.percentile(lat, 99))
                                     if lat.size else None),
+            "compile_s": float(wall[compiles > 0].sum()),
             "slot_occupancy": (float((active / self.n_slots).mean())
                                if active.size else 0.0),
             "recompiles_total": int(compiles.sum()),

@@ -7,10 +7,14 @@
                               grouped by DQN-liveness and cube topology
                               (one program per topology group; the routing
                               tensors are trace-time constants), seeds
-                              folded into a per-lane seed axis;
-  partition (nmp.partition) : build a device mesh, pad each group to a
-                              device-divisible lane count and shard the lane
-                              axis (`NamedSharding`); degrades to a plain
+                              folded into a per-lane seed axis, lanes
+                              cost-ordered for shard packing;
+  partition (nmp.partition) : build a 2-D (lanes × seeds) device mesh —
+                              shape auto-factored from the plan's padded
+                              cell counts (`auto_mesh_shape`) or forced via
+                              REPRO_SWEEP_MESH — pad each group to
+                              mesh-divisible lane/seed counts and shard both
+                              axes (`NamedSharding`); degrades to a plain
                               transfer on one device;
   execute   (this module)   : jit one program per lane group — episode
                               chaining as `lax.scan`, the epoch scan outside
@@ -18,6 +22,10 @@
                               inner vmap, so S seed replicas of a lane share
                               one copy of its trace arrays and every lane
                               reports mean±std variance bands for free.
+                              Groups are *dispatched* heaviest-first
+                              (`plan.packed_group_order`) with the next
+                              group's host batch built while the previous
+                              one runs on device.
 
 Hot-path layout: the epoch `lax.scan` sits *outside* the (lane, seed) vmaps
 (scan-of-vmap, not vmap-of-scan), so the agent invocation inside one epoch is
@@ -26,6 +34,19 @@ lane is between invocations skip the whole DQN machinery at run time (and TOM
 candidate scoring is gated the same way on "any lane profiles").  The input
 batch is donated to the compiled sweep (`donate_argnames`) and per-epoch
 metric timelines are stored at slim dtypes (`valid_t` as uint16).
+
+2-D mesh layout: the env/metric grid inside the program is (L, S, ...) with
+L sharded over the mesh's lane axis and S over its seed axis — a (lane,
+seed) cell never crosses a device, so per-cell results are bit-identical for
+every mesh shape (4x1, 2x2, 1x4, or no mesh at all).  The agent batch stays
+*flat* lane-major (L*S, ...): a reshape of a P(lanes, seeds)-sharded (L, S)
+array to (L*S,) is exactly GSPMD's dimension-merge P((lanes, seeds))
+sharding, so flattening costs no resharding and the whole DQN machinery is
+layout-oblivious.  When the executed seed width exceeds 1 the epoch body
+hoists the seed-invariant half of the cost model out of the inner seed vmap
+(`BodyFlags.share_seed_inv` -> engine.SharedEpoch): window fetches, validity
+masks, row-buffer stamp races, PEI thresholds and page-touch counts are
+computed once per lane and broadcast across the S replicas.
 
 Agent lifecycle: cold-start lanes are born and die inside the compiled
 program (the historical path, bit-identical by construction); lanes that
@@ -145,6 +166,7 @@ class SweepResult:
     wall_s: float                    # build + compile + run wall time
     plan: GridPlan | None = None     # the executed plan (seed folding, groups)
     n_devices: int = 1               # mesh width the sweep ran on
+    mesh_shape: tuple[int, int] = (1, 1)   # (lane, seed) device mesh dims
     store: Any = None                # the PolicyStore holding the grid's
                                      # final agent lineages (None when no
                                      # lane declared a lineage)
@@ -232,14 +254,20 @@ class SweepResult:
         return tls.mean(axis=0), tls.std(axis=0)
 
 
-def _warm_agent_batch(group, n_lanes_padded: int, store, agent_cfg):
+def _warm_agent_batch(group, n_lanes_padded: int, store, agent_cfg,
+                      n_seeds: int | None = None, mesh=None):
     """Initial agent batch for a lineage group: flat (L*S,) cells, lane-major.
 
     A cell whose lineage tag is in the store warm-starts from the stored
     agent (via `PolicyStore.checkout`, which applies the scenario-boundary
     handoff); a fresh tag cold-starts the lineage with the cell's own seed.
-    Device-divisibility padding lanes repeat lane 0's cells, mirroring
-    `partition.pad_group_batch`."""
+    `n_seeds` is the *executed* seed width (the group's, padded up to the
+    mesh seed dim by repeating seed slot 0 — mirroring
+    `partition.pad_seed_axis`); device-divisibility padding lanes repeat
+    lane 0's cells, mirroring `partition.pad_group_batch`.  With a mesh the
+    stacked cells are placed on the merged (lanes, seeds) sharding up
+    front."""
+    S = group.n_seeds if n_seeds is None else n_seeds
     cells = []
     for lane in group.lanes:
         tag = lane.scenario.lineage
@@ -247,24 +275,32 @@ def _warm_agent_batch(group, n_lanes_padded: int, store, agent_cfg):
         # read-only cell and jnp.stack below gives each its own copy
         warm = (store.checkout(tag)
                 if store is not None and tag in store else None)
-        for seed in lane.seeds:
+        seeds = lane.seeds + (lane.seeds[0],) * (S - group.n_seeds)
+        for seed in seeds:
             cells.append(warm if warm is not None
                          else agent_mod.cold_start(int(seed), agent_cfg))
-    lane0 = cells[:group.n_seeds]
+    lane0 = cells[:S]
     for _ in range(n_lanes_padded - group.n_lanes):
         cells.extend(lane0)
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
+    return partition.shard_agent_batch(stacked, mesh)
 
 
 def prepare_group_batch(plan: GridPlan, group, group_cfg: NMPConfig, mesh,
-                        n_lanes: int | None = None):
+                        n_lanes: int | None = None, host_cache=None):
     """Host-side build + device placement of one group's input batch.
 
     `n_lanes` forces the padded lane count (the serving layer's fixed slot
     programs); by default the group is padded to the smallest
-    device-divisible lane count.  Returns (device batch, padded lane count).
-    The host->device transfer happens here, so a caller can overlap it with
-    a previously dispatched compiled call (double buffering)."""
+    mesh-divisible lane count, and the folded seed axis to the smallest
+    mesh-divisible seed width (`partition.padded_seed_count`; padding slots
+    re-simulate seed slot 0 and are dropped).  `host_cache` is threaded to
+    `plan.build_group_batch` for per-lane host-array reuse across calls.
+    Returns (device batch, padded lane count) — read the executed seed width
+    off `batch["ep_seed"].shape[1]` (shape metadata stays readable after the
+    batch is donated).  The host->device transfer happens here, so a caller
+    can overlap it with a previously dispatched compiled call (double
+    buffering)."""
     n_lanes_padded = (partition.padded_lane_count(group.n_lanes, mesh)
                       if n_lanes is None else n_lanes)
     if n_lanes_padded < group.n_lanes:
@@ -273,9 +309,23 @@ def prepare_group_batch(plan: GridPlan, group, group_cfg: NMPConfig, mesh,
     if n_lanes_padded != partition.padded_lane_count(n_lanes_padded, mesh):
         raise ValueError(f"n_lanes={n_lanes_padded} is not divisible by the "
                          "device mesh width")
-    batch_np = plan_mod.build_group_batch(plan, group, group_cfg)
+    batch_np = plan_mod.build_group_batch(plan, group, group_cfg,
+                                          host_cache=host_cache)
+    batch_np = partition.pad_seed_axis(
+        batch_np, partition.padded_seed_count(group.n_seeds, mesh))
     batch_np = partition.pad_group_batch(batch_np, n_lanes_padded)
     return partition.shard_group_batch(batch_np, mesh), n_lanes_padded
+
+
+def executed_flags(group, n_seeds: int):
+    """The BodyFlags a group actually compiles with for an executed seed
+    width of `n_seeds`: mesh seed-padding can widen a width-1 group's seed
+    axis, in which case the seed-invariant sharing pays even though the plan
+    compiled it out — and a width-1 execution always compiles it out."""
+    share = n_seeds > 1 and plan_mod.seed_share_enabled()
+    if group.flags.share_seed_inv == share:
+        return group.flags
+    return group.flags._replace(share_seed_inv=share)
 
 
 def dispatch_sweep(batch, tom_cands, group_cfg: NMPConfig, spec, agent_cfg,
@@ -370,7 +420,12 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
     plan = plan_grid(scenarios, cfg)
     spec = state_spec_for(cfg)
     agent_cfg = agent_cfg or default_agent_cfg(cfg)
-    mesh = partition.build_mesh()
+    devices = partition.sweep_devices()
+    shape = (partition.sweep_mesh_shape(len(devices))
+             or partition.auto_mesh_shape(
+                 len(devices), [(g.n_lanes, g.n_seeds, g.n_episodes)
+                                for g in plan.groups]))
+    mesh = partition.build_mesh(devices, shape)
     tom_cands = partition.replicate(plan_mod.plan_tom_candidates(plan, cfg),
                                     mesh)
     if store is None and plan.lineage_tags():
@@ -387,20 +442,30 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
 
     outs: list = [None] * len(scenarios)
     envs: list = [None] * len(scenarios)
-    for group in plan.groups:
+
+    def launch(group):
+        """Host batch build + async dispatch of one group's program."""
         group_cfg = dataclasses.replace(cfg, topology=group.topology)
         batch, n_lanes_padded = prepare_group_batch(plan, group, group_cfg,
                                                     mesh)
-        warm = (_warm_agent_batch(group, n_lanes_padded, store, agent_cfg)
+        s_pad = int(batch["ep_seed"].shape[1])
+        warm = (_warm_agent_batch(group, n_lanes_padded, store, agent_cfg,
+                                  n_seeds=s_pad, mesh=mesh)
                 if group.lineage else None)
         out, env_fin, agent_fin = dispatch_sweep(
             batch, tom_cands, group_cfg, spec, agent_cfg, plan.n_epochs,
-            group.n_episodes, plan.ring_len, group.flags,
+            group.n_episodes, plan.ring_len, executed_flags(group, s_pad),
             warm_agent=warm, want_agent=group.lineage)
-        out = jax.block_until_ready(out)
+        return group, group_cfg, s_pad, out, env_fin, agent_fin
+
+    def land(state):
+        """Block on a dispatched group, fetch to host, unfold its lanes."""
+        group, group_cfg, s_pad, out, env_fin, agent_fin = state
+        out = partition.host_fetch(jax.block_until_ready(out))
+        env_fin = partition.host_fetch(env_fin)
         pad_l = n_links_max - get_topology(group_cfg).n_links
         if pad_l:
-            env_fin = env_fin._replace(pending_mig_loads=jnp.pad(
+            env_fin = env_fin._replace(pending_mig_loads=np.pad(
                 env_fin.pending_mig_loads, [(0, 0)] * 2 + [(0, pad_l)]))
         pad_e = plan.n_episodes - group.n_episodes
         for li, lane in enumerate(group.lanes):
@@ -420,20 +485,36 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
             # Hand every tag's final agent back to the store.  When several
             # cells share a tag (seed replicas, repeated tags), the lineage
             # continues from the first cell of the last lane declaring it.
-            S = group.n_seeds
+            agent_fin = partition.host_fetch(agent_fin)
             for li, lane in enumerate(group.lanes):
                 cell = jax.tree.map(
-                    lambda a, li=li, s=lane.slots[0]: np.asarray(a[li * S + s]),
+                    lambda a, li=li, s=lane.slots[0]:
+                        np.asarray(a[li * s_pad + s]),
                     agent_fin)
                 store.put(lane.scenario.lineage, cell,
                           scenario=lane.scenario.name)
 
+    # Heaviest group first; one group in flight while the next group's host
+    # batch is built (a tag never spans groups, so warm checkouts in launch()
+    # can't race the lineage write-back in land()).
+    pending = None
+    for gi in plan_mod.packed_group_order(plan, partition.mesh_lane_dim(mesh),
+                                          partition.mesh_seed_dim(mesh)):
+        launched = launch(plan.groups[gi])
+        if pending is not None:
+            land(pending)
+        pending = launched
+    if pending is not None:
+        land(pending)
+
     metrics = {k: np.stack([o[k] for o in outs]) for k in outs[0]}
     final_env = jax.tree.map(lambda *xs: np.stack(xs), *envs)
+    desc = partition.mesh_desc(mesh)
     return SweepResult(scenarios=scenarios, cfg=cfg, metrics=metrics,
                        final_env=final_env, n_episodes=plan.n_episodes,
                        wall_s=time.time() - t0, plan=plan,
-                       n_devices=partition.mesh_desc(mesh)["n_devices"],
+                       n_devices=desc["n_devices"],
+                       mesh_shape=tuple(desc["shape"]),
                        store=store)
 
 

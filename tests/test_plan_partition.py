@@ -253,6 +253,37 @@ def test_sweep_devices_env_validation(monkeypatch):
     assert len(partition.sweep_devices()) >= 1
 
 
+def test_sweep_mesh_env_validation(monkeypatch):
+    """REPRO_SWEEP_MESH misuse must raise a ValueError naming the knob, the
+    value, and the devices — never an opaque mesh-construction error."""
+    for bad in ("banana", "2x2x2", "4", "0x4", "2x-2"):
+        monkeypatch.setenv("REPRO_SWEEP_MESH", bad)
+        with pytest.raises(ValueError, match="REPRO_SWEEP_MESH"):
+            partition.sweep_mesh_shape(4)
+    # a shape that doesn't factor the selected device count
+    monkeypatch.setenv("REPRO_SWEEP_MESH", "3x2")
+    with pytest.raises(ValueError) as ei:
+        partition.sweep_mesh_shape(4)
+    msg = str(ei.value)
+    assert "REPRO_SWEEP_MESH" in msg and "3x2" in msg
+    assert "6 devices" in msg and "4 device(s)" in msg
+    # valid shapes parse; ""/"auto" defer to auto-factoring
+    monkeypatch.setenv("REPRO_SWEEP_MESH", "2x2")
+    assert partition.sweep_mesh_shape(4) == (2, 2)
+    for auto in ("", "auto"):
+        monkeypatch.setenv("REPRO_SWEEP_MESH", auto)
+        assert partition.sweep_mesh_shape(4) is None
+
+
+def test_auto_mesh_shape_minimizes_padded_cells():
+    # all-S=1 plans keep the historical 1-D lane mesh
+    assert partition.auto_mesh_shape(4, [(8, 1, 2)]) == (4, 1)
+    # a seed-wide 2-lane group wants the seed axis sharded
+    assert partition.auto_mesh_shape(4, [(2, 8, 2)]) in ((2, 2), (1, 4))
+    assert partition.auto_mesh_shape(4, [(2, 8, 2), (2, 1, 1)]) == (2, 2)
+    assert partition.auto_mesh_shape(1, [(3, 2, 1)]) == (1, 1)
+
+
 # ---------------------------------------------------------------------------
 # Sharded execution (forced 4-device host platform, subprocess)
 # ---------------------------------------------------------------------------
