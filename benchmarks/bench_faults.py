@@ -33,7 +33,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import FULL, Timer, emit
+from benchmarks.common import FULL, Timer, ab_orders, emit
 
 JSON_PATH = os.environ.get("BENCH_FAULTS_JSON",
                            "bench_out/BENCH_faults.json")
@@ -76,12 +76,11 @@ def run():
                                      # resident programs compiled
     reps_off, reps_on = [], []
     with Timer() as t_on:
-        for rep in range(OVERHEAD_REPS):
-            # alternate which arm goes first: whichever drain runs second in
-            # a pair tends to see a warmer host, which would bias a fixed
-            # order by more than the guard costs
-            arms = [False, True] if rep % 2 == 0 else [True, False]
-            for guard in arms:
+        for order in ab_orders(OVERHEAD_REPS):
+            # ab_orders alternates which arm goes first: whichever drain runs
+            # second in a pair tends to see a warmer host, which would bias a
+            # fixed order by more than the guard costs
+            for guard in (bool(i) for i in order):
                 st = _drain(fleet, cfg, divergence_guard=guard).stats()
                 assert st["tenants_done"] == N_TENANTS
                 (reps_on if guard else reps_off).append(

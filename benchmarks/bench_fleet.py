@@ -29,14 +29,13 @@ file under ``device_mesh_sweep``).
 """
 from __future__ import annotations
 
-import contextlib
 import json
 import os
-import time
 
 import numpy as np
 
-from benchmarks.common import FULL, Timer, emit
+from benchmarks.common import (FULL, ab_compare, emit, env_overrides,
+                               metrics_equal)
 
 JSON_PATH = os.environ.get("BENCH_FLEET_JSON", "bench_out/BENCH_fleet.json")
 
@@ -44,32 +43,6 @@ SEEDS = int(os.environ.get("BENCH_FLEET_SEEDS", "32" if FULL else "8"))
 N_OPS = 2048 if FULL else 512
 EPISODES = 2
 REPS = 5
-
-
-@contextlib.contextmanager
-def _env(**kv):
-    """Temporarily set/clear env knobs (None clears)."""
-    old = {k: os.environ.get(k) for k in kv}
-    try:
-        for k, v in kv.items():
-            if v is None:
-                os.environ.pop(k, None)
-            else:
-                os.environ[k] = v
-        yield
-    finally:
-        for k, v in old.items():
-            if v is None:
-                os.environ.pop(k, None)
-            else:
-                os.environ[k] = v
-
-
-def _metrics_equal(a, b) -> bool:
-    return (set(a.metrics) == set(b.metrics)
-            and all(np.array_equal(np.asarray(a.metrics[k]),
-                                   np.asarray(b.metrics[k]))
-                    for k in a.metrics))
 
 
 def run():
@@ -89,27 +62,16 @@ def run():
     base = {"REPRO_SWEEP_MESH": f"{n_dev}x1", "REPRO_SEED_SHARE": "off"}
     new = {"REPRO_SWEEP_MESH": None, "REPRO_SEED_SHARE": None}  # auto + on
 
-    # cold runs compile both resident program sets
-    with _env(**base):
-        res_base = run_grid(grid)
-    with _env(**new):
-        res_new = run_grid(grid)
-    bit_1d = _metrics_equal(res_base, res_new)
-
-    # interleaved A/B; the min of the warm reps is the signal on this
-    # 2-core container (benchmarks/README.md)
-    warm_base, warm_new = [], []
-    for _ in range(REPS):
-        with _env(**base):
-            t0 = time.time()
-            res_base = run_grid(grid)
-            warm_base.append(time.time() - t0)
-        with _env(**new):
-            t0 = time.time()
-            res_new = run_grid(grid)
-            warm_new.append(time.time() - t0)
-    warm_b, warm_n = min(warm_base), min(warm_new)
-    improvement = warm_b / warm_n
+    # cold warmup (compiles both resident program sets) + interleaved A/B;
+    # the min of the warm reps is the signal on this 2-core container
+    # (benchmarks/README.md, shared harness in benchmarks/common.py)
+    ab = ab_compare(lambda: run_grid(grid), lambda: run_grid(grid),
+                    reps=REPS, env_a=base, env_b=new)
+    res_base, res_new = ab["last_a"], ab["last_b"]
+    bit_1d = metrics_equal(res_base, res_new)
+    warm_base, warm_new = ab["a_all"], ab["b_all"]
+    warm_b, warm_n = ab["a_s"], ab["b_s"]
+    improvement = ab["improvement"]
 
     # bit-identity across every mesh shape that factors the device count
     shapes = {}
@@ -117,8 +79,8 @@ def run():
         dl, ds = (int(x) for x in shape.split("x"))
         if dl * ds != n_dev:
             continue
-        with _env(REPRO_SWEEP_MESH=shape, REPRO_SEED_SHARE=None):
-            shapes[shape] = _metrics_equal(res_new, run_grid(grid))
+        with env_overrides(REPRO_SWEEP_MESH=shape, REPRO_SEED_SHARE=None):
+            shapes[shape] = metrics_equal(res_new, run_grid(grid))
     mesh_identical = bit_1d and all(shapes.values())
 
     # serial spot check: a strided subset covering every app and both

@@ -30,7 +30,7 @@ SWEEP_REPS = 3
 
 
 def _device_mesh_sweep():
-    from benchmarks.bench_fleet import _env, _metrics_equal
+    from benchmarks.common import env_overrides, metrics_equal, min_warm
     from repro.nmp import partition
     from repro.nmp import plan as plan_mod
     from repro.nmp.scenarios import single_program_grid
@@ -43,20 +43,19 @@ def _device_mesh_sweep():
                                aimm_episodes=2)
     shapes = [(dl, n_dev // dl) for dl in range(1, n_dev + 1)
               if n_dev % dl == 0]
-    with _env(REPRO_SWEEP_MESH=None, REPRO_SEED_SHARE=None):
+    with env_overrides(REPRO_SWEEP_MESH=None, REPRO_SEED_SHARE=None):
         auto = run_grid(grid)
     points = []
     for dl, ds in shapes:
-        with _env(REPRO_SWEEP_MESH=f"{dl}x{ds}", REPRO_SEED_SHARE=None):
+        with env_overrides(REPRO_SWEEP_MESH=f"{dl}x{ds}",
+                           REPRO_SEED_SHARE=None):
             res = run_grid(grid)            # compile
-            warm = []
-            for _ in range(SWEEP_REPS):
-                t0 = time.time()
+            def rerun():
+                nonlocal res
                 res = run_grid(grid)
-                warm.append(time.time() - t0)
-        warm_s = min(warm)
+            warm_s, warm = min_warm(rerun, SWEEP_REPS)
         waste = plan_mod.padding_waste(res.plan, dl, ds)
-        ident = _metrics_equal(auto, res)
+        ident = metrics_equal(auto, res)
         emit(f"mesh_sweep/{dl}x{ds}/warm_s", warm_s * 1e6,
              round(warm_s, 3))
         points.append({"shape": [dl, ds], "warm_s": round(warm_s, 4),

@@ -26,9 +26,8 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
-from benchmarks.common import FULL, N_OPS, emit
+from benchmarks.common import FULL, N_OPS, emit, min_warm
 
 JSON_PATH = os.environ.get("BENCH_TOPOLOGY_JSON",
                            "bench_out/BENCH_topology.json")
@@ -85,12 +84,7 @@ def run():
     mesh_n_ops, mesh_grid = _grid()
     run_grid(mesh_grid)                         # compile + first dispatch
     reps = 9 if FULL else 5
-    warm = []
-    for _ in range(reps):
-        t0 = time.time()
-        run_grid(mesh_grid)
-        warm.append(time.time() - t0)
-    warm_s = min(warm)
+    warm_s, warm = min_warm(lambda: run_grid(mesh_grid), reps)
     emit("topology/mesh_grid/warm_s", warm_s * 1e6, round(warm_s, 3))
 
     record = {

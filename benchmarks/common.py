@@ -15,6 +15,7 @@ Two execution paths are provided:
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import time
 
@@ -55,6 +56,89 @@ class Timer:
 
     def __exit__(self, *a):
         self.us = (time.time() - self.t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Interleaved A/B harness (benchmarks/README.md "measurement protocol").
+# The performance benchmarks used to hand-roll this loop; they share one
+# implementation so every A/B record means the same thing.
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def env_overrides(**kv):
+    """Temporarily set/clear env knobs (None clears).  Knobs like
+    REPRO_SWEEP_MESH / REPRO_EPOCH_BACKEND are read per run_grid call (the
+    resolved value is a static jit argument), so flipping them between calls
+    selects distinct resident programs without recompiling."""
+    old = {k: os.environ.get(k) for k in kv}
+    try:
+        for k, v in kv.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def metrics_equal(a, b) -> bool:
+    """Exact metric-dict equality of two SweepResults (same keys, every
+    array bit-identical) — the exactness check each A/B record reports."""
+    return (set(a.metrics) == set(b.metrics)
+            and all(np.array_equal(np.asarray(a.metrics[k]),
+                                   np.asarray(b.metrics[k]))
+                    for k in a.metrics))
+
+
+def ab_orders(reps: int):
+    """Arm orders for an interleaved best-of A/B: alternate which arm runs
+    first each rep, so neither arm systematically sees the warmer host."""
+    for rep in range(reps):
+        yield (0, 1) if rep % 2 == 0 else (1, 0)
+
+
+def ab_compare(run_a, run_b, reps: int = 5, env_a: dict | None = None,
+               env_b: dict | None = None, warmup: bool = True) -> dict:
+    """Interleaved A/B, min-of-warm-reps: both arms stay resident (distinct
+    compiled programs) and alternate, the min of each arm's warm reps is the
+    signal on a noisy shared-core container.  `env_a`/`env_b` are
+    env-override dicts applied around the corresponding arm (None values
+    clear).  Returns {"a_s", "b_s", "a_all", "b_all", "improvement",
+    "last_a", "last_b"} — improvement = a_s / b_s (B is the new path)."""
+    def arm(fn, env):
+        with env_overrides(**(env or {})):
+            t0 = time.time()
+            out = fn()
+            return time.time() - t0, out
+    last = [None, None]
+    if warmup:                           # compile both resident program sets
+        _, last[0] = arm(run_a, env_a)
+        _, last[1] = arm(run_b, env_b)
+    walls: list[list[float]] = [[], []]
+    for order in ab_orders(reps):
+        for i in order:
+            w, last[i] = arm((run_a, run_b)[i], (env_a, env_b)[i])
+            walls[i].append(w)
+    a_s, b_s = min(walls[0]), min(walls[1])
+    return {"a_s": a_s, "b_s": b_s, "a_all": walls[0], "b_all": walls[1],
+            "improvement": a_s / b_s if b_s else float("inf"),
+            "last_a": last[0], "last_b": last[1]}
+
+
+def min_warm(fn, reps: int) -> tuple[float, list[float]]:
+    """Min-of-N warm wall time of a single resident path (the single-arm
+    guard rows); returns (min_s, all_s)."""
+    walls = []
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        walls.append(time.time() - t0)
+    return min(walls), walls
 
 
 _EPISODE_CACHE: dict = {}

@@ -1,0 +1,6 @@
+"""Fused Pallas epoch kernel: the NMP epoch simulation core (row-buffer
+stamp-and-count, PEI thresholding, EMA update, schedule/route/count) as one
+kernel, selected via REPRO_EPOCH_BACKEND.  See ops.py for the dispatch
+contract and kernel.py for the Pallas entry points."""
+from repro.kernels.epoch_fused.ops import (EPOCH_BACKENDS,  # noqa: F401
+                                           resolve_backend)

@@ -139,6 +139,17 @@ class PolicyStore:
         self._agents[tag] = self._agents.pop(tag)
         return agent_mod.hand_off(agent_mod.import_agent(self._agents[tag]))
 
+    def checkout_host(self, tag: str) -> AgentState:
+        """`checkout` without the device import: the stored numpy snapshot
+        with the scenario-boundary handoff applied host-side (LRU recency
+        refreshed the same way).  The staging-buffer warm-batch path
+        (`sweep.AgentStaging`) fills preallocated host buffers from these
+        and pays one device transfer per *leaf* instead of one per cell —
+        the leaf values (incl. the zeroed `step`) are bit-identical to
+        `checkout`'s."""
+        self._agents[tag] = self._agents.pop(tag)
+        return self._agents[tag]._replace(step=np.zeros((), np.int32))
+
     def version(self, tag: str) -> int:
         """Lifetime `put` count of a lineage (survives eviction)."""
         return int(self.meta[tag].get("version", 0))

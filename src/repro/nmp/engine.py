@@ -79,12 +79,13 @@ from repro.core.agent import AgentConfig, AgentState
 from repro.core.dqn import DQNConfig
 from repro.core.reward import compute_reward
 from repro.core.state import StateSpec, build_state
+from repro.kernels.epoch_fused import ops as epoch_ops
 from repro.nmp import baselines
 from repro.nmp.config import NMPConfig
 from repro.nmp.migration import migration_cost
 from repro.nmp.paging import (PageInfoCache, default_alloc, init_page_cache,
                               lookup_or_insert, push_hist)
-from repro.nmp.topology import get_topology, hop_count, link_loads
+from repro.nmp.topology import get_topology
 from repro.nmp.traces import Trace
 
 MAPPERS = ("none", "tom", "aimm")
@@ -131,12 +132,20 @@ class BodyFlags(NamedTuple):
     valid masks, row-buffer stamps, PEI thresholds, page-touch counts) once
     per lane and broadcast it across the S seed replicas instead of
     recomputing it S times.  Bit-identical either way; compiled out (flag
-    False) when the executed seed axis is width 1."""
+    False) when the executed seed axis is width 1.
+
+    `epoch_backend` is the resolved REPRO_EPOCH_BACKEND (one of jnp /
+    pallas / pallas_interpret — see repro.kernels.epoch_fused.ops): the
+    epoch simulation core runs either as the historical gather/einsum jnp
+    path or as the fused Pallas kernel.  Carrying it here (a static jit
+    argument everywhere flags flow) means flipping the knob selects a
+    distinct compiled program instead of being frozen into a resident one."""
     has_agent: bool = False     # a live DQN (aimm lanes with a learned policy)
     any_aimm: bool = False      # hot-page selection / action application
     any_tom: bool = False       # TOM candidate scoring + commit
     pei_k: int = 0              # static top_k width for the PEI threshold
     share_seed_inv: bool = False  # hoist seed-invariant work out of seed vmap
+    epoch_backend: str = "jnp"  # resolved epoch-core backend (see above)
 
 
 def pei_hot_index(n_pages: int, cfg: NMPConfig) -> int:
@@ -161,6 +170,7 @@ def episode_flags(trace: Trace, cfg: NMPConfig, technique: str, mapper: str,
         any_aimm=mapper == "aimm",
         any_tom=mapper == "tom",
         pei_k=pei_top_k(trace.n_pages, cfg) if technique == "pei" else 0,
+        epoch_backend=epoch_ops.resolve_backend(),
     )
 
 
@@ -385,54 +395,29 @@ def _shared_epoch(env: EnvState, trace: dict, ctx: TraceCtx, cfg: NMPConfig,
                   flags: BodyFlags,
                   tom_scores_all: jnp.ndarray | None = None) -> SharedEpoch:
     """Compute the seed-invariant epoch quantities from one lane's env (any
-    seed replica — seed slot 0 by convention).  Bit-identical to the inline
-    computations these replaced in `_epoch_sim`."""
-    P = env.page_to_cube.shape[0]
-    W = cfg.w_max
-
+    seed replica — seed slot 0 by convention).  The stage math lives in
+    repro.kernels.epoch_fused.ref (one source for the jnp path and the
+    Pallas kernel body); bit-identical to the inline computations these
+    replaced in `_epoch_sim`, on any backend."""
     dest, src1, src2, valid = _fetch_window(env, trace, ctx, cfg)
     w_valid = valid.sum()
     has_ops = w_valid > 0
 
-    # Row-buffer stamp race: pages are stamped (not cubes), so winners are
-    # mapping-independent even though the per-cube distinct counts are not.
-    acc_page = jnp.concatenate([dest, src1, src2])
-    acc_valid = jnp.concatenate([valid, valid, valid])
-    tag_base = (env.epochs.astype(jnp.int32) + 1) * (3 * W)
-    stamp_val = jnp.where(acc_valid > 0,
-                          tag_base + jnp.arange(3 * W, dtype=jnp.int32), 0)
-    stamp_idx = jnp.where(acc_valid > 0, acc_page, jnp.int32(P))
-    rb_stamp = env.rb_stamp.at[stamp_idx].max(stamp_val)
-    rb_winner = (rb_stamp[stamp_idx] == stamp_val) & (acc_valid > 0)
-
-    if flags.pei_k > 0:
-        # PEI hot threshold = the m-th largest access EMA among the real
-        # pages (m = n_pages - pei_idx), read from a static top_k envelope
-        # instead of a full O(P log P) sort.  Identical value: padded pages
-        # have EMA 0 and sort to the front, so ascending index
-        # (P - n_pages) + pei_idx is the m-th largest overall.  Thresholds
-        # read the PRE-update EMA; the decayed+scattered EMA is stored.
-        top = jax.lax.top_k(env.page_access_ema, flags.pei_k)[0]
-        m = ctx.n_pages - ctx.pei_idx
-        thresh = top[jnp.clip(m - 1, 0, flags.pei_k - 1)]
-        pei_hot1 = env.page_access_ema[src1] >= jnp.maximum(thresh, 1e-6)
-        pei_hot2 = env.page_access_ema[src2] >= jnp.maximum(thresh, 1e-6)
-        page_ema = 0.9 * env.page_access_ema
-        page_ema = page_ema.at[dest].add(valid).at[src1].add(
-            valid).at[src2].add(valid)
-    else:
-        # Only the PEI threshold reads the access EMA; without PEI lanes the
-        # decay + triple scatter is dead weight.
-        pei_hot1 = pei_hot2 = None
-        page_ema = env.page_access_ema
-
-    touch_cnt = (jnp.zeros((P,)).at[acc_page].add(acc_valid)
-                 if flags.any_aimm else None)
+    parts = epoch_ops.shared_parts(
+        dest, src1, src2, valid, env.epochs, env.rb_stamp,
+        env.page_access_ema, ctx.n_pages, ctx.pei_idx,
+        pei_k=flags.pei_k, aimm=flags.any_aimm,
+        backend=flags.epoch_backend)
+    # Only the PEI threshold reads the access EMA; without PEI lanes the
+    # decay + triple scatter is compiled out and the EMA rides unchanged.
+    page_ema = (parts.page_ema if parts.page_ema is not None
+                else env.page_access_ema)
     return SharedEpoch(dest=dest, src1=src1, src2=src2, valid=valid,
-                       w_valid=w_valid, has_ops=has_ops, rb_stamp=rb_stamp,
-                       rb_winner=rb_winner, page_ema=page_ema,
-                       pei_hot1=pei_hot1, pei_hot2=pei_hot2,
-                       touch_cnt=touch_cnt, tom_scores=tom_scores_all)
+                       w_valid=w_valid, has_ops=has_ops,
+                       rb_stamp=parts.rb_stamp, rb_winner=parts.rb_winner,
+                       page_ema=page_ema, pei_hot1=parts.pei_hot1,
+                       pei_hot2=parts.pei_hot2, touch_cnt=parts.touch_cnt,
+                       tom_scores=tom_scores_all)
 
 
 def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
@@ -454,17 +439,26 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     S==1 programs) computes it inline — same ops, bit-identical."""
     P = env.page_to_cube.shape[0]
     C = cfg.n_cubes
-    W = cfg.w_max
     topo = get_topology(cfg)     # host-side tensors, trace-time constants
     is_tom = ctx.mapper == MAPPER_ID["tom"]
     is_aimm = ctx.mapper == MAPPER_ID["aimm"]
 
     # ---- seed-invariant half: window fetch, stamps, thresholds, counts ----
-    if shared is None:
+    # On a non-jnp backend with no precomputed SharedEpoch (serial runs,
+    # S==1 programs), the shared half fuses into the same kernel launch as
+    # the route half below instead of running as a separate stage.
+    fused = shared is None and flags.epoch_backend != "jnp"
+    if shared is None and not fused:
         shared = _shared_epoch(env, trace, ctx, cfg, flags, tom_scores_all)
-    dest, src1, src2, valid = shared.dest, shared.src1, shared.src2, shared.valid
-    w_valid = shared.w_valid
-    has_ops = shared.has_ops
+    if fused:
+        dest, src1, src2, valid = _fetch_window(env, trace, ctx, cfg)
+        w_valid = valid.sum()
+        has_ops = w_valid > 0
+    else:
+        dest, src1, src2, valid = (shared.dest, shared.src1, shared.src2,
+                                   shared.valid)
+        w_valid = shared.w_valid
+        has_ops = shared.has_ops
 
     # ---- data mapping (TOM may override the page table) ----
     if flags.any_tom:
@@ -473,42 +467,44 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
                               env.page_to_cube)
     else:
         eff_table = env.page_to_cube
-    dcube = eff_table[dest]
-    s1cube = eff_table[src1]
-    s2cube = eff_table[src2]
-
-    # ---- schedule compute cube ----
-    if flags.pei_k > 0:
-        # PEI hot indicators come from the shared half (threshold = m-th
-        # largest pre-update access EMA; see _shared_epoch).
-        ccube = baselines.schedule_by_id(ctx.technique, dcube, s1cube, s2cube,
-                                         shared.pei_hot1, shared.pei_hot2)
+    # ---- schedule + route + per-cube counts: the fused epoch core ----
+    # Stage math lives in repro.kernels.epoch_fused (ref.py is the single
+    # source for the jnp path and the Pallas kernel body): effective-table
+    # gathers, technique scheduling (PEI hot-source placement, AIMM
+    # compute-remap override), per-link flit loads, hop counts, and the
+    # per-cube compute/access/row-buffer-distinct/MC-queue counts.  Counts
+    # and route weights are exact small integers in f32, so every reduction
+    # is bit-exact regardless of accumulation order or backend.
+    if fused:
+        sparts, rparts = epoch_ops.fused_parts(
+            dest, src1, src2, valid, env.epochs, env.rb_stamp,
+            env.page_access_ema, ctx.n_pages, ctx.pei_idx, eff_table,
+            env.compute_remap, ctx.technique, is_aimm,
+            env.pending_mig_loads, topo, pei_k=flags.pei_k,
+            aimm=flags.any_aimm, n_mcs=cfg.n_mcs,
+            packet_flits=cfg.packet_flits, backend=flags.epoch_backend)
+        shared = SharedEpoch(
+            dest=dest, src1=src1, src2=src2, valid=valid, w_valid=w_valid,
+            has_ops=has_ops, rb_stamp=sparts.rb_stamp,
+            rb_winner=sparts.rb_winner,
+            page_ema=(sparts.page_ema if sparts.page_ema is not None
+                      else env.page_access_ema),
+            pei_hot1=sparts.pei_hot1, pei_hot2=sparts.pei_hot2,
+            touch_cnt=sparts.touch_cnt, tom_scores=tom_scores_all)
     else:
-        # No PEI lane in this program: schedule_by_id collapses to LDB/BNMP.
-        ccube = jnp.where(ctx.technique == TECH_ID["ldb"], s1cube, dcube)
-    if flags.any_aimm:
-        # compute-remap table: -1 none, 0..C-1 fixed cube, C = "source mode"
-        # (schedule at the op's own first-source cube, paper action (vi)).
-        cr = env.compute_remap[dest]
-        cr = jnp.where(cr >= 0, cr, env.compute_remap[src1])
-        cr = jnp.where(cr >= 0, cr, env.compute_remap[src2])
-        aimm_cc = jnp.where(cr == C, s1cube, jnp.where(cr >= 0, cr, ccube))
-        ccube = jnp.where(is_aimm, aimm_cc, ccube)
-
-    # ---- route: flows s1->c, s2->c, c->d (skip zero-hop flows implicitly) ----
-    fsrc = jnp.concatenate([s1cube, s2cube, ccube])
-    fdst = jnp.concatenate([ccube, ccube, dcube])
-    fw = jnp.concatenate([valid, valid, valid]) * cfg.packet_flits
-    loads = link_loads(topo, fsrc, fdst, fw) + env.pending_mig_loads
-
-    hops_op = (hop_count(topo, s1cube, ccube)
-               + hop_count(topo, s2cube, ccube)
-               + hop_count(topo, ccube, dcube)).astype(jnp.float32)
+        rparts = epoch_ops.route_parts(
+            dest, src1, src2, valid, shared.rb_winner, shared.pei_hot1,
+            shared.pei_hot2, eff_table, env.compute_remap, ctx.technique,
+            is_aimm, env.pending_mig_loads, topo, pei_k=flags.pei_k,
+            aimm=flags.any_aimm, n_mcs=cfg.n_mcs,
+            packet_flits=cfg.packet_flits, backend=flags.epoch_backend)
+    ccube, loads, hops_op = rparts.ccube, rparts.loads, rparts.hops_op
+    ops_c, acc_c, distinct_c, mcq = (rparts.ops_c, rparts.acc_c,
+                                     rparts.distinct_c, rparts.mcq)
     hops_total = jnp.sum(hops_op * valid)
     mean_hops = hops_total / jnp.maximum(w_valid, 1.0)
 
     # ---- per-cube compute load & NMP-table occupancy ----
-    ops_c = jnp.zeros((C,)).at[ccube].add(valid)
     table_excess = jnp.maximum(ops_c - cfg.nmp_table_size, 0.0).sum()
     compute_serial = jnp.max(ops_c) * cfg.t_op / cfg.cube_issue_rate
     eff_cubes = jnp.square(ops_c.sum()) / jnp.maximum(jnp.sum(ops_c ** 2), 1.0)
@@ -519,22 +515,13 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
     # O(W) scatter-stamp (shared half): stamp each accessed page with this
     # epoch's tag; an access is its page's first touch of the epoch iff it
     # won the stamp race (`rb_winner`).  Only the scatter-add of winner
-    # indicators by the seed-dependent compute cube stays per-seed.  Counts
-    # are small integers, so the scatter-adds below are bit-exact regardless
-    # of accumulation order.
-    acc_cube = jnp.concatenate([dcube, s1cube, s2cube])
-    acc_valid = jnp.concatenate([valid, valid, valid])
+    # indicators by the seed-dependent compute cube stays per-seed.
     rb_stamp = shared.rb_stamp
-    distinct_c = jnp.zeros((C,)).at[acc_cube].add(
-        shared.rb_winner.astype(jnp.float32))
-    acc_c = jnp.zeros((C,)).at[acc_cube].add(acc_valid)
     hit_c = jnp.where(acc_c > 0, 1.0 - distinct_c / jnp.maximum(acc_c, 1.0), 0.5)
     lat_c = hit_c * cfg.t_dram_hit + (1 - hit_c) * cfg.t_dram_miss
     dram_serial = jnp.max(acc_c * lat_c) / (cfg.n_vaults * 4.0)
 
     # ---- epoch cycles & OPC ----
-    mcq = jnp.zeros((cfg.n_mcs,)).at[
-        jnp.asarray(topo.nearest_mc)[dcube]].add(valid)
     mc_inject = w_valid / (cfg.n_mcs * cfg.mc_issue_rate)
     # Hottest-link serialization with superlinear queuing amplification: a link
     # loaded far above the network average queues disproportionately (3-stage
@@ -697,20 +684,19 @@ def _epoch_sim(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
 
 
 def _tom_window_scores(env: EnvState, trace: dict, tom_cands: jnp.ndarray,
-                       ctx: TraceCtx, cfg: NMPConfig) -> jnp.ndarray:
+                       ctx: TraceCtx, cfg: NMPConfig,
+                       backend: str = "jnp") -> jnp.ndarray:
     """Co-location scores of every TOM candidate mapping on this lane's
     current window: the expensive profiling-phase work, split out of
     `_epoch_sim` so the epoch driver can gate it under `lax.cond` on "any
     lane is in a profiling phase" (the same shape as the DQN invocation
     gate).  Recomputes the window fetch (`_fetch_window`, three slices + the
     mask) — cheap next to scoring K candidates — and is bit-identical to the
-    historical inline computation."""
+    historical inline computation on any backend (the scoring math lives in
+    repro.kernels.epoch_fused.ref)."""
     dest, src1, src2, valid = _fetch_window(env, trace, ctx, cfg)
-
-    def score_k(k):
-        return baselines.tom_colocation_score(tom_cands[k], dest, src1, src2,
-                                              valid, cfg.n_cubes)
-    return jax.vmap(score_k)(jnp.arange(tom_cands.shape[0]))
+    return epoch_ops.tom_scores(dest, src1, src2, valid, tom_cands,
+                                cfg.n_cubes, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -994,7 +980,8 @@ def _epoch_batched(env: EnvState, agent: AgentState | None, trace: dict,
         K = tom_cands.shape[0]
 
         def scores_fn(e, t, c):
-            return _tom_window_scores(e, t, tom_cands, c, cfg)
+            return _tom_window_scores(e, t, tom_cands, c, cfg,
+                                      flags.epoch_backend)
 
         score_env = env0 if share else env
         vscores = (jax.vmap(jax.vmap(scores_fn, in_axes=(0, None, None)))

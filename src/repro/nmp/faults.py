@@ -151,7 +151,9 @@ class FaultPlan:
         def nan_fill(leaf):
             if not jnp.issubdtype(leaf.dtype, jnp.floating):
                 return leaf
-            return leaf.at[cells].set(jnp.nan)
+            # staging-buffer batches arrive as host numpy; never scribble
+            # NaNs into a reused staging buffer in place
+            return jnp.asarray(leaf).at[cells].set(jnp.nan)
 
         return warm._replace(params=jax.tree.map(nan_fill, warm.params))
 

@@ -88,6 +88,7 @@ from typing import Sequence
 import jax
 import numpy as np
 
+from repro.kernels.epoch_fused import ops as epoch_ops
 from repro.nmp import baselines, partition
 from repro.nmp import faults as faults_mod
 from repro.nmp import plan as plan_mod
@@ -215,13 +216,21 @@ class MappingServer:
         self._episodes: int | None = (envelope.n_episodes
                                       if envelope is not None else None)
         self._flags = BodyFlags(has_agent=True, any_aimm=True, any_tom=False,
-                                pei_k=0)
+                                pei_k=0,
+                                epoch_backend=epoch_ops.resolve_backend())
         self._tom_cands = None
         self._pending = None             # prepared-but-unserved next tick
         # Memo of host-side per-lane batch arrays keyed by trace identity:
         # an unchanged phase re-entering the resident shape re-uses the
         # seed-invariant arrays instead of re-quantizing the trace per tick.
         self._host_cache: dict = {}
+        # Persistent staging buffers for the per-tick warm agent stacking:
+        # the resident envelope fixes the cell count and leaf shapes, so in
+        # steady state every tick refills the same host buffers and pays one
+        # device transfer per agent leaf (REPRO_STORE_STAGING=off falls back
+        # to the historical per-cell stacking).
+        self._staging = (sweep_mod.AgentStaging()
+                         if sweep_mod.staging_enabled() else None)
         # service metrics
         self.ticks = 0
         self._attempts = 0               # dispatch attempts (ticks + retries)
@@ -538,7 +547,8 @@ class MappingServer:
         s_pad = int(batch["ep_seed"].shape[1])   # executed seed width
         warm = sweep_mod._warm_agent_batch(group, self.n_slots, self.store,
                                            self.agent_cfg, n_seeds=s_pad,
-                                           mesh=self.mesh)
+                                           mesh=self.mesh,
+                                           staging=self._staging)
         stalled: tuple[str, ...] = ()
         if self.faults is not None:
             # poison indexes cells by position in the tenants list, which

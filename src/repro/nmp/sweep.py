@@ -25,7 +25,16 @@
                               Groups are *dispatched* heaviest-first
                               (`plan.packed_group_order`) with the next
                               group's host batch built while the previous
-                              one runs on device.
+                              one runs on device, and the previous group's
+                              results fetched/unfolded on a background
+                              thread (REPRO_SWEEP_LAND=async, the default)
+                              so landings overlap the in-flight device step
+                              too.  Warm agent batches are stacked through
+                              reusable host staging buffers
+                              (REPRO_STORE_STAGING=on, the default; see
+                              AgentStaging) instead of per-cell device
+                              imports.  Both knobs are bit-identical to
+                              their historical paths.
 
 Hot-path layout: the epoch `lax.scan` sits *outside* the (lane, seed) vmaps
 (scan-of-vmap, not vmap-of-scan), so the agent invocation inside one epoch is
@@ -66,8 +75,11 @@ lane axis is sharded over devices or not, and however seeds are folded
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
 import time
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import Any, Sequence
 
@@ -84,6 +96,38 @@ from repro.nmp.engine import (TraceCtx, _init_env, default_agent_cfg,
 from repro.nmp.plan import GridPlan, group_flags, needs_agent, plan_grid
 from repro.nmp.scenarios import Scenario
 from repro.nmp.stats import energy_breakdown, energy_nj, resample_opc
+
+LAND_KNOB = "REPRO_SWEEP_LAND"
+LAND_MODES = ("async", "sync")
+STAGING_KNOB = "REPRO_STORE_STAGING"
+STAGING_MODES = ("on", "off")
+
+
+def _env_choice(knob: str, default: str, choices: tuple[str, ...]) -> str:
+    val = os.environ.get(knob, default)
+    if val not in choices:
+        raise ValueError(f"{knob}={val!r} is not a valid mode; expected one "
+                         f"of {choices}")
+    return val
+
+
+def land_mode() -> str:
+    """How `run_grid` lands dispatched group results (REPRO_SWEEP_LAND):
+    `async` (default) fetches/unfolds group k on a background thread while
+    group k+1 runs on device; `sync` is the historical in-loop landing."""
+    return _env_choice(LAND_KNOB, "async", LAND_MODES)
+
+
+def staging_enabled() -> bool:
+    """Whether the warm agent batch is built through reusable host staging
+    buffers (REPRO_STORE_STAGING, default on) instead of the historical
+    per-cell device stacking.  Both paths are bit-identical."""
+    return _env_choice(STAGING_KNOB, "on", STAGING_MODES) == "on"
+
+
+# Fail fast on typo'd knobs at import, like REPRO_EPOCH_BACKEND.
+land_mode()
+staging_enabled()
 
 
 @partial(jax.jit,
@@ -254,35 +298,110 @@ class SweepResult:
         return tls.mean(axis=0), tls.std(axis=0)
 
 
+class AgentStaging:
+    """Reusable host-side staging for the warm agent batch.
+
+    The historical stacking path builds the batch from scratch every tick:
+    one host->device import per warm cell, one `cold_start` per fresh cell,
+    then an on-device `jnp.stack` per leaf — all garbage one tick later.
+    At fleet scale (the serving layer re-stacks every resident slot every
+    tick) that is hundreds of small transfers per tick.  This class keeps
+
+      * one preallocated numpy buffer per agent leaf, shaped
+        (n_cells, *leaf) — rows are filled in place from the store's host
+        snapshots, so a steady-state tick pays ONE device transfer per
+        *leaf* (via `partition.shard_agent_batch`) instead of one per cell;
+      * a bounded cache of cold-start snapshots keyed by (seed, agent_cfg),
+        so a fresh lineage's cold cell is computed once, not every tick.
+
+    Buffers are (re)allocated whenever the cell count or leaf envelope
+    changes and reused otherwise; `device_put`/jit copy out of them at
+    dispatch, so refilling next tick is safe.  The stacked values are
+    bit-identical to the historical path's."""
+
+    _COLD_CACHE_MAX = 128        # cold cells are only needed for *fresh*
+                                 # tags, so this never grows in steady state
+
+    def __init__(self):
+        self._bufs: list[np.ndarray] | None = None
+        self._treedef = None
+        self._cold: dict = {}
+
+    def cold_cell(self, seed: int, agent_cfg):
+        """Host snapshot of `agent_mod.cold_start(seed, agent_cfg)`."""
+        key = (int(seed), agent_cfg)
+        if key not in self._cold:
+            if len(self._cold) >= self._COLD_CACHE_MAX:
+                self._cold.pop(next(iter(self._cold)))
+            self._cold[key] = agent_mod.export_agent(
+                agent_mod.cold_start(int(seed), agent_cfg))
+        return self._cold[key]
+
+    def stack(self, cells):
+        """Stack host-side cell pytrees into the reused (n_cells, ...)
+        buffers; returns the stacked pytree (numpy leaves)."""
+        leaves0, treedef = jax.tree_util.tree_flatten(cells[0])
+        fit = (self._bufs is not None and self._treedef == treedef
+               and len(self._bufs) == len(leaves0)
+               and self._bufs[0].shape[0] == len(cells)
+               and all(b.shape[1:] == np.shape(l) and b.dtype == l.dtype
+                       for b, l in zip(self._bufs, leaves0)))
+        if not fit:
+            self._bufs = [np.empty((len(cells),) + np.shape(l),
+                                   np.asarray(l).dtype) for l in leaves0]
+            self._treedef = treedef
+        for i, cell in enumerate(cells):
+            for buf, leaf in zip(self._bufs, jax.tree_util.tree_leaves(cell)):
+                buf[i] = leaf
+        return jax.tree_util.tree_unflatten(treedef, self._bufs)
+
+
 def _warm_agent_batch(group, n_lanes_padded: int, store, agent_cfg,
-                      n_seeds: int | None = None, mesh=None):
+                      n_seeds: int | None = None, mesh=None, staging=None):
     """Initial agent batch for a lineage group: flat (L*S,) cells, lane-major.
 
     A cell whose lineage tag is in the store warm-starts from the stored
-    agent (via `PolicyStore.checkout`, which applies the scenario-boundary
-    handoff); a fresh tag cold-starts the lineage with the cell's own seed.
-    `n_seeds` is the *executed* seed width (the group's, padded up to the
-    mesh seed dim by repeating seed slot 0 — mirroring
-    `partition.pad_seed_axis`); device-divisibility padding lanes repeat
-    lane 0's cells, mirroring `partition.pad_group_batch`.  With a mesh the
-    stacked cells are placed on the merged (lanes, seeds) sharding up
-    front."""
+    agent (with the scenario-boundary handoff applied); a fresh tag
+    cold-starts the lineage with the cell's own seed.  `n_seeds` is the
+    *executed* seed width (the group's, padded up to the mesh seed dim by
+    repeating seed slot 0 — mirroring `partition.pad_seed_axis`);
+    device-divisibility padding lanes repeat lane 0's cells, mirroring
+    `partition.pad_group_batch`.  With a mesh the stacked cells are placed
+    on the merged (lanes, seeds) sharding up front.
+
+    `staging` is an optional `AgentStaging` whose host buffers persist
+    across calls (the serving layer holds one per server); by default a
+    throwaway one is used when REPRO_STORE_STAGING is on, and the
+    historical per-cell device stacking when it is off.  All paths produce
+    bit-identical batches."""
     S = group.n_seeds if n_seeds is None else n_seeds
+    if staging is None and staging_enabled():
+        staging = AgentStaging()
     cells = []
     for lane in group.lanes:
         tag = lane.scenario.lineage
-        # one checkout (host->device import) per tag; seed replicas reuse the
-        # read-only cell and jnp.stack below gives each its own copy
-        warm = (store.checkout(tag)
-                if store is not None and tag in store else None)
+        # one checkout per tag; seed replicas reuse the read-only cell and
+        # the stacking below gives each its own copy
+        warm_in_store = store is not None and tag in store
+        if staging is not None:
+            warm = store.checkout_host(tag) if warm_in_store else None
+        else:
+            warm = store.checkout(tag) if warm_in_store else None
         seeds = lane.seeds + (lane.seeds[0],) * (S - group.n_seeds)
         for seed in seeds:
-            cells.append(warm if warm is not None
-                         else agent_mod.cold_start(int(seed), agent_cfg))
+            if warm is not None:
+                cells.append(warm)
+            elif staging is not None:
+                cells.append(staging.cold_cell(int(seed), agent_cfg))
+            else:
+                cells.append(agent_mod.cold_start(int(seed), agent_cfg))
     lane0 = cells[:S]
     for _ in range(n_lanes_padded - group.n_lanes):
         cells.extend(lane0)
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
+    if staging is not None:
+        stacked = staging.stack(cells)
+    else:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cells)
     return partition.shard_agent_batch(stacked, mesh)
 
 
@@ -442,6 +561,12 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
 
     outs: list = [None] * len(scenarios)
     envs: list = [None] * len(scenarios)
+    staging = AgentStaging() if staging_enabled() else None
+    # The store is touched from two threads under async landing: warm
+    # checkouts in launch() (main thread) vs lineage write-backs in land()
+    # (worker).  A tag never spans groups, so there is no semantic race —
+    # the lock only keeps the registry's dict/LRU bookkeeping atomic.
+    store_lock = threading.Lock()
 
     def launch(group):
         """Host batch build + async dispatch of one group's program."""
@@ -449,9 +574,13 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
         batch, n_lanes_padded = prepare_group_batch(plan, group, group_cfg,
                                                     mesh)
         s_pad = int(batch["ep_seed"].shape[1])
-        warm = (_warm_agent_batch(group, n_lanes_padded, store, agent_cfg,
-                                  n_seeds=s_pad, mesh=mesh)
-                if group.lineage else None)
+        if group.lineage:
+            with store_lock:
+                warm = _warm_agent_batch(group, n_lanes_padded, store,
+                                         agent_cfg, n_seeds=s_pad, mesh=mesh,
+                                         staging=staging)
+        else:
+            warm = None
         out, env_fin, agent_fin = dispatch_sweep(
             batch, tom_cands, group_cfg, spec, agent_cfg, plan.n_epochs,
             group.n_episodes, plan.ring_len, executed_flags(group, s_pad),
@@ -486,26 +615,50 @@ def run_grid(scenarios: Sequence[Scenario], cfg: NMPConfig = NMPConfig(),
             # cells share a tag (seed replicas, repeated tags), the lineage
             # continues from the first cell of the last lane declaring it.
             agent_fin = partition.host_fetch(agent_fin)
-            for li, lane in enumerate(group.lanes):
-                cell = jax.tree.map(
-                    lambda a, li=li, s=lane.slots[0]:
-                        np.asarray(a[li * s_pad + s]),
-                    agent_fin)
-                store.put(lane.scenario.lineage, cell,
-                          scenario=lane.scenario.name)
+            with store_lock:
+                for li, lane in enumerate(group.lanes):
+                    cell = jax.tree.map(
+                        lambda a, li=li, s=lane.slots[0]:
+                            np.asarray(a[li * s_pad + s]),
+                        agent_fin)
+                    store.put(lane.scenario.lineage, cell,
+                              scenario=lane.scenario.name)
 
     # Heaviest group first; one group in flight while the next group's host
-    # batch is built (a tag never spans groups, so warm checkouts in launch()
-    # can't race the lineage write-back in land()).
-    pending = None
-    for gi in plan_mod.packed_group_order(plan, partition.mesh_lane_dim(mesh),
-                                          partition.mesh_seed_dim(mesh)):
-        launched = launch(plan.groups[gi])
+    # batch is built, and — under async landing (REPRO_SWEEP_LAND, the
+    # default) — the *previous* group's results fetched and unfolded on a
+    # background thread while the in-flight group runs on device, so the
+    # result drain never sits between one dispatch and the next build.
+    # One worker + submission order keeps landings (and store write-backs)
+    # in dispatch order; lanes are unfolded into `outs`/`envs` by scenario
+    # index, so `SweepResult` ordering is identical either way.  (A tag
+    # never spans groups, so warm checkouts in launch() can't race the
+    # lineage write-back in land().)
+    pool = (ThreadPoolExecutor(max_workers=1, thread_name_prefix="sweep-land")
+            if land_mode() == "async" else None)
+    try:
+        landings = []
+        pending = None
+        for gi in plan_mod.packed_group_order(plan,
+                                              partition.mesh_lane_dim(mesh),
+                                              partition.mesh_seed_dim(mesh)):
+            launched = launch(plan.groups[gi])
+            if pending is not None:
+                if pool is not None:
+                    landings.append(pool.submit(land, pending))
+                else:
+                    land(pending)
+            pending = launched
         if pending is not None:
-            land(pending)
-        pending = launched
-    if pending is not None:
-        land(pending)
+            if pool is not None:
+                landings.append(pool.submit(land, pending))
+            else:
+                land(pending)
+        for fut in landings:
+            fut.result()             # join in order; exceptions propagate
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     metrics = {k: np.stack([o[k] for o in outs]) for k in outs[0]}
     final_env = jax.tree.map(lambda *xs: np.stack(xs), *envs)
